@@ -1,0 +1,67 @@
+"""Fig. 26: design-element ablation on quality vs recompute: full
+Cache-Craft vs w/o beta, w/o CCI (random selection at equal budget),
+w/o focus chunking; plus the alpha sweep (Eq. 13 calibration, Fig. 13)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (build_cases, emit, fresh_store,
+                               get_trained_model, greedy_continue,
+                               make_world, timed)
+from repro.core import scoring
+from repro.core.prefill import CacheCraftExecutor
+from repro.serving.metrics import rouge_l_f1
+
+
+def run(quick: bool = False):
+    cfg, params = get_trained_model()
+    kb, retr, sys_t, rng = make_world(cfg)
+    warm = build_cases(kb, retr, rng, 10, seed_base=0)
+    cases = build_cases(kb, retr, rng, 8 if not quick else 3, seed_base=500)
+
+    oracle = CacheCraftExecutor(cfg, params, None, strategy="all",
+                                use_focus=False)
+    refs = []
+    for c in cases:
+        res, _ = timed(oracle.process, sys_t, c.chunks, c.question)
+        refs.append(greedy_continue(cfg, params, res, 12))
+
+    def evaluate(name, store, **exkw):
+        ex = CacheCraftExecutor(cfg, params, store,
+                                store_fixed_variants=False,
+                                store_new_chunks=False, **exkw)
+        rouges, rfr, wall = [], [], 0.0
+        for c, ref in zip(cases, refs):
+            res, dt = timed(ex.process, sys_t, c.chunks, c.question)
+            wall += dt
+            rouges.append(rouge_l_f1(
+                greedy_continue(cfg, params, res, 12), ref))
+            rfr.append(res.plan.recompute_fraction)
+        emit(name, wall / len(cases) * 1e6,
+             f"rouge={np.mean(rouges):.3f};recompute={np.mean(rfr):.2f}")
+
+    def warmed_store(tag, alpha=1.0):
+        store = fresh_store(tag, alpha=alpha)
+        wex = CacheCraftExecutor(cfg, params, store, use_focus=False,
+                                 store_fixed_variants=False)
+        for c in warm:
+            wex.process(sys_t, c.chunks, c.question)
+        return store
+
+    base = warmed_store("abl-base")
+    evaluate("fig26_full", base, strategy="cachecraft", use_focus=True)
+    evaluate("fig26_no_focus", base, strategy="cachecraft", use_focus=False)
+    # w/o CCI: random token choice at the same (CFO-derived) budget
+    evaluate("fig26_no_cci", base, strategy="random", use_focus=False)
+    # w/o beta: CFO ignores prefix overlap -> recompute alpha*CCI always
+    base.use_beta = False
+    evaluate("fig26_no_beta", base, strategy="cachecraft", use_focus=False)
+    base.use_beta = True
+    for alpha in (0.5, 1.0, 2.0, 3.0):
+        evaluate(f"fig13_alpha{alpha}", warmed_store(f"abl-a{alpha}",
+                                                     alpha=alpha),
+                 strategy="cachecraft", use_focus=False)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,120 @@
+"""Per-kernel microbenchmarks + TPU-target roofline estimates.
+
+Wall times here are CPU interpret-mode (functional, NOT TPU perf); the
+derived column reports the analytic roofline terms for the kernel's
+production tile shapes on v5e (197 TF bf16 / 819 GB/s HBM)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timed
+from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+
+
+def _chunk_attention_case():
+    from repro.kernels.chunk_attention.ops import chunk_attention
+    rng = np.random.default_rng(0)
+    A, S, H, Hkv, D, C = 64, 256, 8, 4, 64, 16
+    q = jnp.asarray(rng.normal(size=(A, H, D)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(S, Hkv, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(S, Hkv, D)).astype(np.float32))
+    qpos = jnp.asarray(np.linspace(0, S - 1, A).astype(np.int32))
+    kpos = jnp.asarray(np.arange(S, dtype=np.int32))
+    kch = jnp.asarray((np.arange(S) * C // S).astype(np.int32))
+
+    def call():
+        o, m = chunk_attention(q, k, v, qpos, kpos, kch, num_chunks=C,
+                               block_q=32, block_k=64)
+        o.block_until_ready()
+        return o
+    call()
+    _, dt = timed(call, reps=3)
+    # production tile: A=11520 (35% of 32k), S=32k, H=32, D=128
+    Ap, Sp, Hp, Dp = 11520, 32768, 32, 128
+    flops = 2 * Ap * Sp * Hp * Dp * 2 + 2 * Ap * Sp * 16
+    bytes_ = (Ap * Hp * Dp + 2 * Sp * 8 * Dp) * 2
+    emit("kernel_chunk_attention", dt * 1e6,
+         f"tpu_compute_ms={flops/PEAK_FLOPS*1e3:.2f};"
+         f"tpu_memory_ms={bytes_/HBM_BW*1e3:.3f};"
+         f"arithmetic_intensity={flops/bytes_:.0f}")
+
+
+def _rope_case():
+    from repro.kernels.rope.ops import rope
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(512, 8, 64)).astype(np.float32))
+    pos = jnp.asarray(np.arange(512, dtype=np.int32))
+
+    def call():
+        o = rope(x, pos, theta=1e4, block_t=128)
+        o.block_until_ready()
+        return o
+    call()
+    _, dt = timed(call, reps=5)
+    Tp, Hp, Dp = 32768, 8, 128
+    bytes_ = 2 * Tp * Hp * Dp * 2
+    flops = 6 * Tp * Hp * Dp
+    emit("kernel_rope", dt * 1e6,
+         f"tpu_memory_ms={bytes_/HBM_BW*1e3:.3f};"
+         f"arithmetic_intensity={flops/bytes_:.1f};memory_bound=True")
+
+
+def _decode_case():
+    from repro.kernels.decode_attention.ops import decode_attention
+    rng = np.random.default_rng(0)
+    B, S, H, Hkv, D = 4, 512, 8, 2, 64
+    q = jnp.asarray(rng.normal(size=(B, H, D)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, D)).astype(np.float32))
+    qpos = jnp.asarray(np.full(B, S - 1, np.int32))
+    kpos = jnp.asarray(np.tile(np.arange(S, dtype=np.int32), (B, 1)))
+
+    def call():
+        o = decode_attention(q, k, v, qpos, kpos, block_k=128)
+        o.block_until_ready()
+        return o
+    call()
+    _, dt = timed(call, reps=3)
+    Bp, Sp, Hp, Dp = 128, 32768, 32, 128
+    bytes_ = Bp * Sp * 8 * Dp * 2 * 2
+    flops = 2 * Bp * Hp * Sp * Dp * 2
+    emit("kernel_decode_attention", dt * 1e6,
+         f"tpu_memory_ms={bytes_/HBM_BW*1e3:.2f};"
+         f"arithmetic_intensity={flops/bytes_:.1f};memory_bound=True")
+
+
+def _ssd_case():
+    from repro.kernels.ssd.ops import ssd_intra
+    rng = np.random.default_rng(0)
+    nC, L, H, P, N = 4, 64, 4, 64, 32
+    xdt = jnp.asarray(rng.normal(size=(nC, L, H, P)).astype(np.float32))
+    la = jnp.asarray(-np.abs(rng.normal(size=(nC, L, H))).astype(
+        np.float32) * 0.1)
+    Bm = jnp.asarray(rng.normal(size=(nC, L, N)).astype(np.float32))
+    Cm = jnp.asarray(rng.normal(size=(nC, L, N)).astype(np.float32))
+
+    def call():
+        y, st = ssd_intra(xdt, la, Bm, Cm)
+        y.block_until_ready()
+        return y
+    call()
+    _, dt = timed(call, reps=3)
+    nCp, Lp, Hp, Pp, Np = 256, 128, 32, 64, 128
+    flops = nCp * Hp * (2 * Lp * Lp * Np + 2 * Lp * Lp * Pp +
+                        2 * Lp * Pp * Np)
+    bytes_ = nCp * Lp * (Hp * Pp + 2 * Np) * 4 * 2
+    emit("kernel_ssd_intra", dt * 1e6,
+         f"tpu_compute_ms={flops/PEAK_FLOPS*1e3:.3f};"
+         f"arithmetic_intensity={flops/bytes_:.0f}")
+
+
+def run(quick: bool = False):
+    _chunk_attention_case()
+    _rope_case()
+    _decode_case()
+    _ssd_case()
+
+
+if __name__ == "__main__":
+    run()

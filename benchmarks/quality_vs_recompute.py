@@ -1,0 +1,65 @@
+"""Fig. 20 / Fig. 15 / Fig. 21: generation quality vs recompute budget,
+Cache-Craft token selection vs Random-Recomp / Prefill-H2O / Full-Cache,
+measured as ROUGE-L F1 of greedy continuations against the Full-Recomp
+oracle (score 1.0 == indistinguishable from full computation)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (bench_config, build_cases, emit, fresh_store,
+                               get_trained_model, greedy_continue,
+                               make_world, timed)
+from repro.core.prefill import CacheCraftExecutor
+from repro.serving.metrics import relative_deviation, rouge_l_f1
+
+FRACS = (0.0, 0.1, 0.2, 0.3, 0.45, 0.6)
+STRATS = ("cachecraft", "random", "h2o")
+N_WARM = 10
+N_EVAL = 12
+GEN = 12
+
+
+def run(quick: bool = False):
+    cfg, params = get_trained_model()
+    kb, retr, sys_t, rng = make_world(cfg)
+    warm = build_cases(kb, retr, rng, N_WARM, seed_base=0)
+    cases = build_cases(kb, retr, rng, N_EVAL if not quick else 4,
+                        seed_base=500)
+
+    oracle = CacheCraftExecutor(cfg, params, None, strategy="all",
+                                use_focus=False)
+    refs = []
+    for c in cases:
+        res, _ = timed(oracle.process, sys_t, c.chunks, c.question)
+        refs.append((greedy_continue(cfg, params, res, GEN),
+                     res.logits_last))
+
+    fracs = FRACS if not quick else (0.0, 0.3)
+    for strat in STRATS:
+        for frac in fracs:
+            store = fresh_store(f"q-{strat}-{frac}")
+            warm_ex = CacheCraftExecutor(cfg, params, store,
+                                         use_focus=False,
+                                         store_fixed_variants=False)
+            for c in warm:
+                warm_ex.process(sys_t, c.chunks, c.question)
+            ex = CacheCraftExecutor(
+                cfg, params, store, strategy=strat if frac > 0 else "none",
+                use_focus=False, force_recompute_fraction=frac,
+                store_fixed_variants=False, store_new_chunks=False)
+            rouges, devs, rfracs, wall = [], [], [], 0.0
+            for c, (ref_toks, ref_logits) in zip(cases, refs):
+                res, dt = timed(ex.process, sys_t, c.chunks, c.question)
+                wall += dt
+                toks = greedy_continue(cfg, params, res, GEN)
+                rouges.append(rouge_l_f1(toks, ref_toks))
+                devs.append(relative_deviation(res.logits_last, ref_logits))
+                rfracs.append(res.plan.recompute_fraction)
+            emit(f"fig20_{strat}_recomp{int(frac*100):02d}",
+                 wall / len(cases) * 1e6,
+                 f"rouge={np.mean(rouges):.3f};dev={np.mean(devs):.3f};"
+                 f"actual_recompute={np.mean(rfracs):.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Benchmark runner: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV. ``--quick`` shrinks cases;
+``--only <prefix>`` filters."""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+BENCHES = (
+    ("workload_stats", "benchmarks.workload_stats"),   # Figs 1/3/5/6
+    ("kernel_bench", "benchmarks.kernel_bench"),       # kernels
+    ("quality_vs_recompute", "benchmarks.quality_vs_recompute"),  # Fig 20
+    ("rpe_causality", "benchmarks.rpe_causality"),     # Table 3
+    ("ablation", "benchmarks.ablation"),               # Figs 26/13
+    ("ttft", "benchmarks.ttft"),                       # Fig 23
+    ("preloading", "benchmarks.preloading"),           # Figs 29/19
+    ("throughput_latency", "benchmarks.throughput_latency"),  # Fig 22
+    ("trace_replay", "benchmarks.trace_replay"),       # Figs 24/25
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, module in BENCHES:
+        if args.only and not name.startswith(args.only):
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(module, fromlist=["run"])
+            mod.run(quick=args.quick)
+            print(f"# {name} done in {time.time()-t0:.0f}s",
+                  file=sys.stderr)
+        except Exception:
+            print(f"{name},0,ERROR")
+            traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Quickstart: the Cache-Craft loop in ~60 lines.
+
+1. Build a tiny model + knowledge base.
+2. Serve a question (cold): every chunk computed, caches captured.
+3. Serve a *different* question reusing two of the chunks in a new
+   order: Cache-Craft reuses their KV, recomputes only the CFO-selected
+   tokens, and matches the full-recompute answer far better than naive
+   reuse — at a fraction of the compute.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax                                                     # noqa
+import numpy as np                                             # noqa
+
+from repro.configs import get_tiny                             # noqa
+from repro.core.chunkstore import ChunkStore                   # noqa
+from repro.core.prefill import CacheCraftExecutor              # noqa
+from repro.core.tiers import TieredStore                       # noqa
+from repro.models import model as M                            # noqa
+from repro.serving.metrics import relative_deviation           # noqa
+
+cfg = get_tiny("llama3-8b")
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+rng = np.random.default_rng(0)
+V = cfg.vocab_size
+
+system = rng.integers(0, V, 8)
+chunk_a = rng.integers(0, V, 24)
+chunk_b = rng.integers(0, V, 24)
+chunk_c = rng.integers(0, V, 24)
+question1 = rng.integers(0, V, 12)
+question2 = rng.integers(0, V, 12)
+
+store = ChunkStore(TieredStore(1 << 30, 1 << 30, tempfile.mkdtemp()),
+                   n_chunks=100, m_variants=5)
+cc = CacheCraftExecutor(cfg, params, store, store_fixed_variants=False)
+
+print("-> request 1 (cold): [sys][A][B][q1]")
+r1 = cc.process(system, [chunk_a, chunk_b], question1)
+print(f"   computed {r1.plan.num_active_tokens}/{r1.total_len} tokens, "
+      f"{store.num_variants()} chunk-caches stored")
+
+print("-> request 2 (warm): [sys][B][A][C][q2]  (B,A reused, reordered)")
+r2 = cc.process(system, [chunk_b, chunk_a, chunk_c], question2)
+hits = sum(d.is_hit for d in r2.plan.decisions)
+print(f"   cache hits {hits}/4 segments; computed "
+      f"{r2.plan.num_active_tokens}/{r2.total_len} tokens "
+      f"({r2.compute_fraction:.0%} of full prefill FLOPs)")
+for d in r2.plan.decisions:
+    tag = "hit " if d.is_hit else "miss"
+    print(f"   seg{d.seg.stat_id}: {tag} CFO={d.cfo:.2f} "
+          f"recompute {len(d.recompute_idx)}/{d.seg.length} tokens")
+
+oracle = CacheCraftExecutor(cfg, params, None, strategy="all")
+ro = oracle.process(system, [chunk_b, chunk_a, chunk_c], question2)
+naive = CacheCraftExecutor(cfg, params, store, strategy="none",
+                           store_fixed_variants=False,
+                           store_new_chunks=False)
+rn = naive.process(system, [chunk_b, chunk_a, chunk_c], question2)
+print(f"-> last-token logit deviation vs full recompute:")
+print(f"   naive reuse (Full-Cache): "
+      f"{relative_deviation(rn.logits_last, ro.logits_last):.3f}")
+print(f"   Cache-Craft:              "
+      f"{relative_deviation(r2.logits_last, ro.logits_last):.3f}")

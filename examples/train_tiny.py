@@ -1,0 +1,22 @@
+"""Train a ~0.7M-param llama-family model for a few hundred steps on the
+synthetic Markov corpus, with checkpointing + resume — the same loop the
+production launcher (repro.launch.train) runs, shrunk to CPU scale.
+
+Run: PYTHONPATH=src python examples/train_tiny.py [--steps 200]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.train import main as train_main  # noqa
+
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    defaults = ["--arch", "llama3-8b", "--tiny", "--steps", "200",
+                "--ckpt-dir", "results/example_ckpt", "--resume",
+                "--watchdog-sec", "300"]
+    sys.argv = [sys.argv[0]] + defaults + argv
+    train_main()

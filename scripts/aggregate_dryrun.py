@@ -1,0 +1,67 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline tables."""
+import glob
+import json
+import os
+import sys
+from collections import defaultdict
+
+OUT = sys.argv[2] if len(sys.argv) > 2 else None
+DIR = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+
+rows = []
+for f in sorted(glob.glob(os.path.join(DIR, "*.json"))):
+    r = json.load(open(f))
+    rows.append(r)
+
+
+def fmt(r):
+    if r["status"] == "skipped":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']}"
+                f"{'/cc' if r.get('cc') else ''} | SKIP | - | - | - | - | - |"
+                f" {r.get('reason','')[:46]} |")
+    if r["status"] != "ok":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                f"{r['status']} | - | - | - | - | - | {r.get('error','')[:40]} |")
+    t = r["roofline"]
+    m = r["memory"]
+    dom = t["dominant"]
+    tot = max(t["compute_s"], 1e-12)
+    note = (f"useful={t['useful_ratio']:.2f}")
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh']}"
+            f"{'/cc' if r.get('cc') else ''} | ok | "
+            f"{t['compute_s']:.3f} | {t['memory_s']:.4f} | "
+            f"{t['collective_s']:.3f} | {dom} | "
+            f"{m['argument_gib']+m['temp_gib']:.1f} | {note} |")
+
+
+hdr = ("| arch | shape | mesh | status | compute_s | memory_s | "
+       "collective_s | dominant | GiB/chip | notes |\n"
+       "|---|---|---|---|---|---|---|---|---|---|")
+lines = [hdr] + [fmt(r) for r in rows]
+text = "\n".join(lines)
+if OUT:
+    open(OUT, "w").write(text + "\n")
+print(text)
+
+# summary stats
+ok = [r for r in rows if r["status"] == "ok"]
+by_dom = defaultdict(int)
+for r in ok:
+    by_dom[r["roofline"]["dominant"]] += 1
+print(f"\n# {len(ok)} ok, {sum(1 for r in rows if r['status']=='skipped')} "
+      f"skipped; dominant: {dict(by_dom)}", file=sys.stderr)
+worst = sorted((r for r in ok if r["mesh"] == "single"),
+               key=lambda r: r["roofline"]["useful_ratio"])[:6]
+print("# worst useful_ratio (single-pod):", file=sys.stderr)
+for r in worst:
+    print(f"#   {r['arch']}/{r['shape']}{'/cc' if r.get('cc') else ''}: "
+          f"useful={r['roofline']['useful_ratio']:.3f} "
+          f"dom={r['roofline']['dominant']}", file=sys.stderr)
+coll = sorted((r for r in ok if r["mesh"] == "single"),
+              key=lambda r: -r["roofline"]["collective_s"])[:6]
+print("# most collective-bound:", file=sys.stderr)
+for r in coll:
+    t = r["roofline"]
+    print(f"#   {r['arch']}/{r['shape']}{'/cc' if r.get('cc') else ''}: "
+          f"n={t['collective_s']:.2f}s c={t['compute_s']:.2f}s",
+          file=sys.stderr)

@@ -1,0 +1,149 @@
+"""Chunk-cache store: N x M variants, reuse-frequency eviction (§3.3).
+
+Each knowledge-base chunk (identified by a content hash tied to the RAG
+retriever) maps to a list of cache *variants* — KV tensors captured under
+different past prefixes, each with the metadata needed to score
+reusability at lookup time (CCI, per-prefix inter weights, per-token
+external attention for Eq. 14). Variant selection minimizes
+CFO = CCI * (1 - beta'); every access bumps the variant's
+reuse-frequency f_r += 1/CFO, and the globally-lowest-f_r variants are
+evicted once the store exceeds N*M instances — the paper's argument for
+why plain LRU/LFU/FIFO is insufficient.
+"""
+from __future__ import annotations
+
+import hashlib
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.scoring import ChunkScores, beta_prime, cfo as cfo_fn
+from repro.core.tiers import TieredStore, tree_nbytes
+
+
+def chunk_hash(tokens: np.ndarray) -> str:
+    return hashlib.sha256(np.asarray(tokens, np.int32).tobytes()).hexdigest()[:16]
+
+
+@dataclass
+class Variant:
+    variant_id: str
+    chunk_hash: str
+    scores: ChunkScores
+    num_tokens: int
+    nbytes: int
+    f_r: float = 0.0
+    uses: int = 0
+
+
+class ChunkStore:
+    def __init__(self, tiers: TieredStore, n_chunks: int = 100,
+                 m_variants: int = 5, alpha: float = 1.0,
+                 use_beta: bool = True, quantize_kv: bool = False):
+        self.tiers = tiers
+        self.n_chunks = n_chunks
+        self.m_variants = m_variants
+        self.alpha = alpha
+        self.use_beta = use_beta      # Fig. 26 ablation: CFO without beta'
+        # beyond-paper: int8 chunk-caches (per-token scales) — 4x more
+        # chunks per tier; composes with the paper's §7 quantization note
+        self.quantize_kv = quantize_kv
+        self.table: Dict[str, List[Variant]] = {}
+        self._counter = itertools.count()
+        self.evictions = 0
+
+    # ---- capacity --------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return self.n_chunks * self.m_variants
+
+    def num_variants(self) -> int:
+        return sum(len(v) for v in self.table.values())
+
+    # ---- insertion -------------------------------------------------------
+    def add_variant(self, chash: str, kv, scores: ChunkScores) -> Variant:
+        vid = f"{chash}-v{next(self._counter)}"
+        if self.quantize_kv:
+            kv = _quantize_kv(kv)
+        nb = tree_nbytes(kv)
+        var = Variant(variant_id=vid, chunk_hash=chash, scores=scores,
+                      num_tokens=scores.length, nbytes=nb)
+        self.tiers.put(vid, kv)
+        self.table.setdefault(chash, []).append(var)
+        self._evict_if_needed()
+        return var
+
+    def _evict_if_needed(self):
+        while self.num_variants() > self.capacity:
+            worst: Optional[Variant] = None
+            for variants in self.table.values():
+                for v in variants:
+                    if worst is None or v.f_r < worst.f_r:
+                        worst = v
+            if worst is None:
+                return
+            self.remove(worst)
+            self.evictions += 1
+
+    def remove(self, var: Variant):
+        self.table[var.chunk_hash].remove(var)
+        if not self.table[var.chunk_hash]:
+            del self.table[var.chunk_hash]
+        self.tiers.delete(var.variant_id)
+
+    # ---- lookup ----------------------------------------------------------
+    def lookup(self, chash: str) -> List[Variant]:
+        return self.table.get(chash, [])
+
+    def best_variant(self, chash: str, new_prefix_hashes: Sequence[str]
+                     ) -> Optional[Tuple[Variant, float]]:
+        """Select the variant minimizing CFO for the new prefix (§3.3)."""
+        best, best_cfo = None, None
+        for v in self.lookup(chash):
+            if self.use_beta:
+                c = cfo_fn(v.scores, new_prefix_hashes, self.alpha)
+            else:
+                c = float(min(1.0, self.alpha * v.scores.cci))
+            if best_cfo is None or c < best_cfo:
+                best, best_cfo = v, c
+        if best is None:
+            return None
+        return best, best_cfo
+
+    def record_use(self, var: Variant, cfo_value: float):
+        var.f_r += 1.0 / max(cfo_value, 1e-3)
+        var.uses += 1
+
+    def prefetch(self, chash: str, new_prefix_hashes: Sequence[str] = ()):
+        hit = self.best_variant(chash, new_prefix_hashes)
+        if hit is not None:
+            self.tiers.prefetch(hit[0].variant_id)
+
+    def get_kv(self, var: Variant):
+        kv, info = self.tiers.get(var.variant_id)
+        if kv is not None and "k_q" in kv:
+            kv = _dequantize_kv(kv)
+        return kv, info
+
+    # ---- introspection (Fig. 25 cache-store snapshot) ----------------------
+    def snapshot(self):
+        return {h: len(vs) for h, vs in self.table.items()}
+
+
+def _quantize_kv(kv):
+    """int8 with per-(layer, token) scales over the (heads, dim) tile."""
+    out = {}
+    for name in ("k", "v"):
+        x = np.asarray(kv[name], np.float32)
+        scale = np.abs(x).max(axis=(2, 3), keepdims=True) / 127.0 + 1e-12
+        out[name + "_q"] = np.clip(np.round(x / scale), -127,
+                                   127).astype(np.int8)
+        out[name + "_s"] = scale.astype(np.float32)
+    return out
+
+
+def _dequantize_kv(kv):
+    return {name: kv[name + "_q"].astype(np.float32) * kv[name + "_s"]
+            for name in ("k", "v")}

@@ -1,0 +1,156 @@
+"""Recomputation planning (§3.4.1): classify chunks into C_hit / C_miss,
+score reusability, pick recompute tokens, and lay out the prompt.
+
+Layout of a RAG prompt:  [system][chunk_1 ... chunk_k][question]
+Stat chunk ids:          0        1 ... k              k+1
+
+The system prompt is treated as chunk 0 under the same framework (the
+paper's footnote: instructions are an always-repeated chunk).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.chunkstore import ChunkStore, Variant, chunk_hash
+from repro.core.select import select_recompute_tokens
+
+
+@dataclass
+class Segment:
+    stat_id: int                 # id in the stats tensor
+    start: int
+    end: int
+    tokens: np.ndarray
+    chash: Optional[str] = None  # None for the question segment
+
+    @property
+    def length(self) -> int:
+        return self.end - self.start
+
+
+@dataclass
+class ChunkDecision:
+    seg: Segment
+    variant: Optional[Variant]          # None -> miss (compute from scratch)
+    cfo: float = 1.0
+    recompute_idx: np.ndarray = field(
+        default_factory=lambda: np.zeros(0, np.int64))
+
+    @property
+    def is_hit(self) -> bool:
+        return self.variant is not None
+
+
+@dataclass
+class InferencePlan:
+    segments: List[Segment]             # all segments incl. question
+    decisions: List[ChunkDecision]      # one per cacheable segment
+    question: Segment
+    total_len: int
+    active_positions: np.ndarray        # absolute positions of active tokens
+    active_tokens: np.ndarray
+    active_stat_ids: np.ndarray
+    # bookkeeping
+    num_cached_tokens: int = 0
+    num_active_tokens: int = 0
+
+    @property
+    def recompute_fraction(self) -> float:
+        """Fraction of *cacheable* (non-question) tokens recomputed."""
+        cacheable = self.total_len - self.question.length
+        active_cacheable = self.num_active_tokens - self.question.length
+        return active_cacheable / max(1, cacheable)
+
+
+def build_plan(store: Optional[ChunkStore], system_tokens: np.ndarray,
+               chunks: Sequence[np.ndarray], question_tokens: np.ndarray,
+               *, strategy: str = "cachecraft",
+               rng: Optional[np.random.Generator] = None,
+               force_recompute_fraction: Optional[float] = None
+               ) -> InferencePlan:
+    """strategy governs recompute-token choice (see core.select).
+    ``force_recompute_fraction`` overrides the CFO-derived fraction (used
+    by the fixed-budget baselines Random-Recomp / Prefill-H2O)."""
+    segs: List[Segment] = []
+    pos = 0
+    all_parts = [np.asarray(system_tokens)] + [np.asarray(c) for c in chunks]
+    hashes = [("SYS-" + chunk_hash(all_parts[0]))] + \
+        [chunk_hash(c) for c in all_parts[1:]]
+    for i, part in enumerate(all_parts):
+        segs.append(Segment(stat_id=i, start=pos, end=pos + len(part),
+                            tokens=part, chash=hashes[i]))
+        pos += len(part)
+    q = Segment(stat_id=len(all_parts), start=pos,
+                end=pos + len(question_tokens),
+                tokens=np.asarray(question_tokens), chash=None)
+    pos += len(question_tokens)
+
+    decisions: List[ChunkDecision] = []
+    prefix_broken = False
+    for i, seg in enumerate(segs):
+        hit = store.best_variant(seg.chash, hashes[:i]) if store else None
+        if strategy == "prefix":
+            # Prefix-Cache baseline (§5.1.4): a chunk reuses its cache only
+            # if the ENTIRE preceding prefix matches a stored context
+            # exactly (and all earlier chunks hit too); no recomputation.
+            exact = None
+            if not prefix_broken and store is not None:
+                for var in store.lookup(seg.chash):
+                    if list(var.scores.prefix_hashes) == hashes[:i] and \
+                            var.scores.orig_start == seg.start:
+                        exact = var
+                        break
+            if exact is None:
+                prefix_broken = True
+                decisions.append(ChunkDecision(
+                    seg=seg, variant=None, cfo=1.0,
+                    recompute_idx=np.arange(seg.length)))
+            else:
+                decisions.append(ChunkDecision(
+                    seg=seg, variant=exact, cfo=0.0,
+                    recompute_idx=np.zeros(0, np.int64)))
+            continue
+        if hit is None:
+            decisions.append(ChunkDecision(seg=seg, variant=None, cfo=1.0,
+                                           recompute_idx=np.arange(
+                                               seg.length)))
+            continue
+        var, cfo_val = hit
+        frac = (force_recompute_fraction
+                if force_recompute_fraction is not None else cfo_val)
+        idx = select_recompute_tokens(
+            var.scores.token_inter[:seg.length], frac, strategy=strategy,
+            rng=rng,
+            token_total=getattr(var.scores, "token_total", None))
+        decisions.append(ChunkDecision(seg=seg, variant=var, cfo=cfo_val,
+                                       recompute_idx=idx))
+
+    act_pos, act_tok, act_sid = [], [], []
+    cached_tokens = 0
+    for d in decisions:
+        if d.is_hit:
+            cached_tokens += d.seg.length - len(d.recompute_idx)
+            sel = d.recompute_idx
+        else:
+            sel = np.arange(d.seg.length)
+        act_pos.append(d.seg.start + sel)
+        act_tok.append(d.seg.tokens[sel])
+        act_sid.append(np.full(len(sel), d.seg.stat_id))
+    act_pos.append(np.arange(q.start, q.end))
+    act_tok.append(q.tokens)
+    act_sid.append(np.full(q.length, q.stat_id))
+
+    active_positions = np.concatenate(act_pos).astype(np.int32)
+    order = np.argsort(active_positions, kind="stable")
+    return InferencePlan(
+        segments=segs + [q], decisions=decisions, question=q,
+        total_len=pos,
+        active_positions=active_positions[order],
+        active_tokens=np.concatenate(act_tok).astype(np.int32)[order],
+        active_stat_ids=np.concatenate(act_sid).astype(np.int32)[order],
+        num_cached_tokens=cached_tokens,
+        num_active_tokens=len(active_positions),
+    )

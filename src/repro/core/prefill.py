@@ -1,0 +1,389 @@
+"""Cache-Craft partial-prefill executor (§3.4): plan -> assemble cached KV
+-> windowed layer execution with focused-chunk early termination ->
+metadata capture -> store updates.
+
+The layer stack runs in jitted windows of ``focus_w`` layers (the
+Algorithm 1 confidence window): after each window the question->chunk
+attention feeds the FocusTracker and, once the focused set is stable, the
+recompute rows of unfocused hit-chunks are dropped from the active set
+for the remaining layers — the shape-bucketed TPU equivalent of the
+paper's dynamic early exit. Active-token and layout lengths are padded to
+a bucket so the jit cache stays small under a ragged serving workload.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import scoring
+from repro.core.chunkstore import ChunkStore
+from repro.core.focus import FocusTracker
+from repro.core.planner import InferencePlan, build_plan
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope
+
+
+def _bucket(n: int, b: int) -> int:
+    return max(b, -(-n // b) * b)
+
+
+@functools.lru_cache(maxsize=None)
+def _embed_fn(cfg):
+    return jax.jit(functools.partial(M.embed_tokens, cfg))
+
+
+@functools.lru_cache(maxsize=None)
+def _head_fn(cfg):
+    return jax.jit(functools.partial(M.lm_head, cfg))
+
+
+@functools.lru_cache(maxsize=None)
+def _window_fn(cfg):
+    @functools.partial(jax.jit,
+                       static_argnames=("g0", "g1", "tail", "collect"))
+    def fn(params, h, positions, chunk_ids, cache, g0, g1, tail, collect):
+        ctx = M.Ctx(cfg=cfg, mode="partial", positions=positions,
+                    chunk_ids=chunk_ids, collect_stats=collect,
+                    attn_impl="dense")
+        return M.run_stack(cfg, params, h, ctx, cache=cache,
+                           collect_stats=collect, g0=g0, g1=g1, tail=tail)
+    return fn
+
+
+@functools.lru_cache(maxsize=None)
+def decode_fn(cfg):
+    """Shared jitted one-token decode (engine + benches). ``slots`` (the
+    cache write index) is separate from ``positions`` (the RoPE/causality
+    position): paged storage appends at the next free slot while the
+    token's logical position keeps counting real tokens."""
+    @jax.jit
+    def fn(params, tokens, positions, cache, slots=None):
+        out = M.decode_step(cfg, params, tokens, positions, cache,
+                            decode_slot=slots)
+        return out.logits, out.cache
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# cache packing: engine-side per-layer numpy KV <-> model stacked cache
+# ---------------------------------------------------------------------------
+def pack_cache(cfg: ModelConfig, k_np, v_np, pos_np):
+    """k/v [L,S,Hkv,D] (np or jnp), pos [S] -> model cache pytree (B=1)."""
+    P, G = len(cfg.pattern), cfg.n_groups
+    k = jnp.asarray(k_np)
+    v = jnp.asarray(v_np)
+    pos = jnp.asarray(pos_np, jnp.int32)
+    S = k.shape[1]
+    groups = []
+    if G:
+        kg = k[:G * P].reshape(G, P, *k.shape[1:])
+        vg = v[:G * P].reshape(G, P, *v.shape[1:])
+        for p in range(P):
+            groups.append({
+                "k": kg[:, p][:, None],          # [G, 1, S, Hkv, D]
+                "v": vg[:, p][:, None],
+                "pos": jnp.broadcast_to(pos, (G, 1, S)),
+            })
+    tail = []
+    for i in range(cfg.n_tail):
+        li = G * P + i
+        tail.append({"k": k[li][None], "v": v[li][None],
+                     "pos": pos[None]})
+    return {"groups": groups, "tail": tail}
+
+
+def unpack_cache(cfg: ModelConfig, cache) -> Tuple[np.ndarray, np.ndarray,
+                                                   np.ndarray]:
+    """Model cache (B=1) -> (k [L,S,Hkv,D], v, pos [S]) numpy arrays."""
+    P, G = len(cfg.pattern), cfg.n_groups
+    ks, vs = [], []
+    pos = None
+    if G:
+        stacked_k = [np.asarray(cache["groups"][p]["k"][:, 0])
+                     for p in range(P)]           # each [G, S, Hkv, D]
+        stacked_v = [np.asarray(cache["groups"][p]["v"][:, 0])
+                     for p in range(P)]
+        pos = np.asarray(cache["groups"][0]["pos"][0, 0])
+        for g in range(G):
+            for p in range(P):
+                ks.append(stacked_k[p][g])
+                vs.append(stacked_v[p][g])
+    for i in range(cfg.n_tail):
+        ks.append(np.asarray(cache["tail"][i]["k"][0]))
+        vs.append(np.asarray(cache["tail"][i]["v"][0]))
+        if pos is None:
+            pos = np.asarray(cache["tail"][i]["pos"][0])
+    return np.stack(ks), np.stack(vs), pos
+
+
+# ---------------------------------------------------------------------------
+@dataclass
+class PrefillResult:
+    plan: InferencePlan
+    logits_last: np.ndarray             # [V] logits of the final token
+    k_layers: np.ndarray                # [L,S,Hkv,D] merged KV (roped)
+    v_layers: np.ndarray
+    pos_layout: np.ndarray              # [S]
+    total_len: int
+    active_rows_layers: int             # sum over layers of live rows
+    focus_cutoff: Optional[int] = None
+    focused: Optional[set] = None
+    load_seconds_modeled: float = 0.0
+    load_seconds_measured: float = 0.0
+    tier_hits: Dict[str, int] = field(default_factory=dict)
+    wall_seconds: float = 0.0
+
+    @property
+    def compute_fraction(self) -> float:
+        """Attention-layer token-rows actually computed vs full prefill."""
+        L = self.k_layers.shape[0]
+        return self.active_rows_layers / max(1, self.total_len * L)
+
+
+class CacheCraftExecutor:
+    """Binds (model config, params, chunk store) into a serving-side
+    prefill engine. ``strategy``: cachecraft | random | h2o | none | all."""
+
+    def __init__(self, cfg: ModelConfig, params, store: Optional[ChunkStore],
+                 *, strategy: str = "cachecraft", use_focus: bool = True,
+                 focus_w: int = 3, bucket: int = 32,
+                 fix_rpe: bool = True, fix_causality: bool = True,
+                 store_fixed_variants: bool = True,
+                 store_new_chunks: bool = True,
+                 force_recompute_fraction: Optional[float] = None,
+                 rng: Optional[np.random.Generator] = None):
+        if not cfg.supports_chunk_cache and store is not None:
+            raise ValueError(
+                f"{cfg.name}: chunk-cache inapplicable (see DESIGN.md §6)")
+        self.cfg = cfg
+        self.params = params
+        self.store = store
+        self.strategy = strategy
+        self.use_focus = use_focus
+        self.focus_w = focus_w
+        self.bucket = bucket
+        self.fix_rpe = fix_rpe
+        self.fix_causality = fix_causality
+        self.store_fixed_variants = store_fixed_variants
+        self.store_new_chunks = store_new_chunks
+        self.force_recompute_fraction = force_recompute_fraction
+        self.rng = rng or np.random.default_rng(0)
+        # jit caches are shared across ALL executor instances of the same
+        # config (benches spin up many executors; fresh jit caches per
+        # instance would recompile every window shape repeatedly)
+        self._embed = _embed_fn(cfg)
+        self._head = _head_fn(cfg)
+        self._window = _window_fn(cfg)
+
+    # ---- main entry --------------------------------------------------------
+    def process(self, system_tokens, chunks: Sequence[np.ndarray],
+                question_tokens, collect_stats: bool = True
+                ) -> PrefillResult:
+        cfg = self.cfg
+        t_start = time.perf_counter()
+        plan = build_plan(
+            self.store if self.strategy != "all" else None,
+            system_tokens, chunks, question_tokens,
+            strategy=self.strategy, rng=self.rng,
+            force_recompute_fraction=self.force_recompute_fraction)
+
+        L = cfg.num_layers
+        hkv, dh = cfg.num_kv_heads, cfg.head_dim_
+        S = _bucket(plan.total_len, self.bucket)
+        k_np = np.zeros((L, S, hkv, dh), np.float32)
+        v_np = np.zeros((L, S, hkv, dh), np.float32)
+        pos_layout = np.full(S, -1, np.int32)
+
+        # --- inject cached chunk KV (RoPE re-applied at new positions) -----
+        load_modeled = load_measured = 0.0
+        tier_hits: Dict[str, int] = {"hbm": 0, "cpu": 0, "ssd": 0}
+        for d in plan.decisions:
+            if not d.is_hit:
+                continue
+            kv, info = self.store.get_kv(d.variant)
+            if info is not None:
+                load_modeled += info.seconds_modeled
+                load_measured += info.seconds_measured
+                tier_hits[info.tier] += 1
+            span = np.arange(d.seg.start, d.seg.end, dtype=np.int32)
+            kc = jnp.asarray(np.asarray(kv["k"], np.float32))
+            rope_pos = span if self.fix_rpe else \
+                (np.arange(d.seg.length) + d.variant.scores.orig_start)
+            kc = np.asarray(apply_rope(kc, jnp.asarray(rope_pos),
+                                       cfg.rope_theta))
+            k_np[:, d.seg.start:d.seg.end] = kc
+            v_np[:, d.seg.start:d.seg.end] = np.asarray(kv["v"], np.float32)
+            pos_layout[d.seg.start:d.seg.end] = span if self.fix_causality \
+                else (np.arange(d.seg.length) + d.variant.scores.orig_start)
+            self.store.record_use(d.variant, max(d.cfo, 1e-3))
+
+        # key-side (layout) stat ids for the model's mass statistic
+        layout_sid = np.full(S, cfg.stats_chunks - 1, np.int32)
+        for seg in plan.segments:
+            layout_sid[seg.start:seg.end] = seg.stat_id
+        layout_sid_j = jnp.asarray(layout_sid)[None]
+
+        # --- active rows (padded to bucket; row_map -> original index) -----
+        n_act = plan.num_active_tokens
+        A = _bucket(n_act, self.bucket)
+        act_tok = np.zeros(A, np.int32)
+        act_pos = np.full(A, -1, np.int32)
+        act_sid = np.full(A, cfg.stats_chunks - 1, np.int32)
+        act_tok[:n_act] = plan.active_tokens
+        act_pos[:n_act] = plan.active_positions
+        act_sid[:n_act] = plan.active_stat_ids
+        row_map = np.full(A, -1, np.int64)
+        row_map[:n_act] = np.arange(n_act)
+
+        hit_ids = {d.seg.stat_id for d in plan.decisions
+                   if d.is_hit and len(d.recompute_idx) > 0}
+        tracker = FocusTracker(len(plan.decisions), w=self.focus_w) \
+            if (self.use_focus and hit_ids - {0}) else None
+        P, G = len(cfg.pattern), cfg.n_groups
+        w_groups = max(1, -(-self.focus_w // P)) if tracker else max(1, G)
+
+        h = self._embed(self.params, jnp.asarray(act_tok)[None])
+        positions = jnp.asarray(act_pos)[None]
+        sid_np = act_sid.copy()
+        cache = pack_cache(cfg, k_np, v_np, pos_layout)
+        stats_all = np.zeros((L, n_act, cfg.stats_chunks), np.float32) \
+            if collect_stats else None
+        kstats_all = np.zeros((L, S), np.float32) if collect_stats else None
+        rows_layers = 0
+        focus_cutoff, focused = None, None
+        chunk_stat_ids = list(range(1, len(plan.decisions)))
+
+        # window starts: groups in steps of w_groups, then the tail
+        starts = list(range(0, G, w_groups)) or [0]
+        layer_idx = 0
+        for wi, g0 in enumerate(starts):
+            g1 = min(G, g0 + w_groups)
+            is_last = wi == len(starts) - 1
+            h, new_cache, stats, kstats, _ = self._window(
+                self.params, h, positions, layout_sid_j, cache,
+                g0=g0, g1=g1, tail=is_last and cfg.n_tail > 0,
+                collect=collect_stats)
+            nl = (g1 - g0) * P + (cfg.n_tail if is_last else 0)
+            live = int((np.asarray(positions[0]) >= 0).sum())
+            rows_layers += live * nl
+            # write back updated cache slices
+            for p in range(P):
+                if g1 > g0:
+                    for name in ("k", "v", "pos"):
+                        cache["groups"][p][name] = \
+                            cache["groups"][p][name].at[g0:g1].set(
+                                new_cache["groups"][p][name])
+            if is_last and cfg.n_tail:
+                cache["tail"] = new_cache["tail"]
+            if collect_stats and stats is not None:
+                st = np.asarray(stats[:, 0])            # [nl, A_cur, C]
+                valid = row_map >= 0
+                stats_all[layer_idx:layer_idx + nl][:, row_map[valid]] = \
+                    st[:, valid]
+                if kstats is not None and kstats.shape[-1] == S:
+                    kstats_all[layer_idx:layer_idx + nl] += \
+                        np.asarray(kstats[:, 0])
+                # Algorithm 1 update from question-row mass
+                if tracker and not tracker.converged:
+                    qrows = sid_np == plan.question.stat_id
+                    for li in range(st.shape[0]):
+                        qi = st[li][qrows][:, chunk_stat_ids].sum(0)
+                        full_vec = np.zeros(len(plan.decisions))
+                        full_vec[chunk_stat_ids] = qi
+                        if tracker.update(full_vec):
+                            break
+                    if tracker.converged:
+                        focus_cutoff = tracker.cutoff_layer
+                        focused = tracker.focused
+                        unfocused = (hit_ids - {0}) - set(focused)
+                        drop = np.isin(sid_np, list(unfocused)) & \
+                            (np.asarray(positions[0]) >= 0) & \
+                            (sid_np != plan.question.stat_id)
+                        if drop.any() and not is_last:
+                            keep_idx = np.where(~drop & (row_map >= 0))[0]
+                            A2 = _bucket(len(keep_idx), self.bucket)
+                            gather = np.zeros(A2, np.int64)
+                            gather[:len(keep_idx)] = keep_idx
+                            h = jnp.asarray(np.asarray(h)[:, gather])
+                            pos2 = np.asarray(positions[0])[gather]
+                            sid2 = sid_np[gather]
+                            rm2 = row_map[gather]
+                            pos2[len(keep_idx):] = -1
+                            sid2[len(keep_idx):] = cfg.stats_chunks - 1
+                            rm2[len(keep_idx):] = -1
+                            positions = jnp.asarray(pos2)[None]
+                            sid_np = sid2
+                            row_map = rm2
+            layer_idx += nl
+
+        # --- head: logits of the final question token -----------------------
+        lr = int(np.where(row_map == (n_act - 1))[0][0])
+        logits = self._head(self.params, h[:, lr:lr + 1])
+        logits_last = np.asarray(logits[0, 0])
+
+        k_fin, v_fin, pos_fin = unpack_cache(cfg, cache)
+        if self.store is not None and collect_stats:
+            self._capture(plan, stats_all, kstats_all, k_fin, v_fin)
+
+        return PrefillResult(
+            plan=plan, logits_last=logits_last, k_layers=k_fin,
+            v_layers=v_fin, pos_layout=pos_fin, total_len=plan.total_len,
+            active_rows_layers=rows_layers, focus_cutoff=focus_cutoff,
+            focused=focused, load_seconds_modeled=load_modeled,
+            load_seconds_measured=load_measured, tier_hits=tier_hits,
+            wall_seconds=time.perf_counter() - t_start)
+
+    # ---- metadata + store update -------------------------------------------
+    def _capture(self, plan: InferencePlan, stats, kstats, k_fin, v_fin):
+        """Create variants for miss chunks (and optionally 'fixed' hit
+        chunks); stats [L, n_act, C] aligned to plan's active ordering."""
+        cfg = self.cfg
+        n_act = plan.num_active_tokens
+        sid = plan.active_stat_ids
+        pos = plan.active_positions
+        lengths = [d.seg.length for d in plan.decisions]
+        hashes = [d.seg.chash for d in plan.decisions]
+        inter = scoring.inter_matrix(stats, sid.astype(np.int64),
+                                     len(plan.decisions))
+        for i, d in enumerate(plan.decisions):
+            if d.is_hit:
+                if not (self.store_fixed_variants and d.cfo >= 0.5):
+                    continue
+                if len(self.store.lookup(d.seg.chash)) >= \
+                        self.store.m_variants:
+                    continue
+            elif not self.store_new_chunks:
+                continue
+            rows = sid == i
+            if not rows.any():
+                continue
+            tok_inter = np.zeros(d.seg.length)
+            ext = [c for c in range(len(plan.decisions) + 1) if c != i]
+            row_pos = pos[rows] - d.seg.start
+            vals = stats[:, rows][:, :, ext].sum((0, 2))
+            ok = (row_pos >= 0) & (row_pos < d.seg.length)
+            if d.is_hit and len(d.variant.scores.token_inter) == d.seg.length:
+                tok_inter = d.variant.scores.token_inter.copy()
+            tok_inter[row_pos[ok]] = vals[ok]
+            tok_total = None
+            if kstats is not None and kstats.shape[1] >= d.seg.end and \
+                    kstats.sum() > 0:
+                tok_total = kstats[:, d.seg.start:d.seg.end].sum(0)
+            sc = scoring.chunk_scores(inter, lengths, i, hashes[:i],
+                                      tok_inter, token_total=tok_total,
+                                      orig_start=d.seg.start)
+            kv = {
+                "k": np.asarray(apply_rope(
+                    jnp.asarray(k_fin[:, d.seg.start:d.seg.end]),
+                    jnp.arange(d.seg.start, d.seg.end),
+                    cfg.rope_theta, inverse=True)),
+                "v": v_fin[:, d.seg.start:d.seg.end].copy(),
+            }
+            self.store.add_variant(d.seg.chash, kv, sc)

@@ -1,0 +1,34 @@
+"""Layer-wise preload scheduling (paper §3.4.2, Eq. 16, Algorithm 2)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+
+def preload_depth(num_layers: int, t_prefill: float, t_load: float) -> int:
+    """Eq. 16: how many layers of chunk-cache to preload before execution
+    starts so that per-layer loading hides behind per-layer compute."""
+    if t_load <= t_prefill or t_load <= 0:
+        return 1
+    lp = (num_layers - 1) * (1.0 - t_prefill / t_load) + 1
+    return max(1, min(num_layers, int(round(lp))))
+
+
+@dataclass
+class PreloadSchedule:
+    depth: int
+    # (layer_to_compute, layers_to_prefetch) per step — Algorithm 2
+    steps: List[Tuple[int, List[int]]]
+
+
+def layerwise_schedule(num_layers: int, t_prefill: float,
+                       t_load: float) -> PreloadSchedule:
+    lp = preload_depth(num_layers, t_prefill, t_load)
+    steps = []
+    fetched = 0
+    for i in range(num_layers):
+        want = min(num_layers, i + lp)
+        pre = list(range(fetched, want))
+        fetched = max(fetched, want)
+        steps.append((i, pre))
+    return PreloadSchedule(depth=lp, steps=steps)

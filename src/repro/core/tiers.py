@@ -1,0 +1,251 @@
+"""Hierarchical chunk-cache storage: HBM -> host memory -> SSD (§3.5).
+
+On this CPU-only box the "HBM" tier is the in-process working set, the
+"CPU" tier is a separate host dict with a modeled PCIe transfer cost, and
+the SSD tier is *real files* (np.savez to disk), so SSD load costs in the
+preloading benchmark are measured, not simulated. An asynchronous
+preloader thread promotes caches toward HBM while requests wait in the
+queue (§3.5), and the layer-wise schedule (Eq. 16) consumes per-layer
+slices during execution.
+"""
+from __future__ import annotations
+
+import os
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+# modeled bandwidths for load-time accounting (A100-class host, paper §5.1.1)
+CPU_TO_HBM_GBPS = 64.0     # PCIe 4.0 x16
+SSD_GBPS = 16.0            # NVMe read
+
+
+def tree_nbytes(tree) -> int:
+    total = 0
+    for leaf in _leaves(tree):
+        total += leaf.size * leaf.dtype.itemsize
+    return total
+
+
+def _leaves(tree):
+    if isinstance(tree, dict):
+        for _, v in sorted(tree.items()):
+            yield from _leaves(v)
+    elif isinstance(tree, (list, tuple)):
+        for v in tree:
+            yield from _leaves(v)
+    else:
+        yield np.asarray(tree)
+
+
+@dataclass
+class LoadInfo:
+    tier: str
+    seconds_measured: float     # wall time actually spent in this process
+    seconds_modeled: float      # bandwidth-model cost (GPU deployment)
+    nbytes: int
+
+
+class TieredStore:
+    """Capacity-bounded three-tier KV store with LRU demotion and an
+    asynchronous promotion (preload) worker."""
+
+    def __init__(self, hbm_bytes: int, cpu_bytes: int, ssd_dir: str,
+                 start_worker: bool = True):
+        self.caps = {"hbm": hbm_bytes, "cpu": cpu_bytes}
+        self.used = {"hbm": 0, "cpu": 0, "ssd": 0}
+        self.hbm: Dict[str, Any] = {}
+        self.cpu: Dict[str, Any] = {}
+        self.ssd_dir = ssd_dir
+        os.makedirs(ssd_dir, exist_ok=True)
+        self.sizes: Dict[str, int] = {}
+        self.lru: Dict[str, float] = {}
+        self.lock = threading.RLock()
+        self.stats = {"hits": {"hbm": 0, "cpu": 0, "ssd": 0},
+                      "demotions": 0, "promotions": 0}
+        self._q: "queue.Queue[Optional[str]]" = queue.Queue()
+        self._worker = None
+        if start_worker:
+            self._worker = threading.Thread(target=self._preload_loop,
+                                            daemon=True)
+            self._worker.start()
+
+    # ---- placement -------------------------------------------------------
+    def put(self, key: str, value, prefer: str = "hbm") -> str:
+        nb = tree_nbytes(value)
+        with self.lock:
+            self.sizes[key] = nb
+            self.lru[key] = time.monotonic()
+            if prefer == "hbm" and self._make_room("hbm", nb):
+                self.hbm[key] = value
+                self.used["hbm"] += nb
+                return "hbm"
+            if prefer in ("hbm", "cpu") and self._make_room("cpu", nb):
+                self.cpu[key] = value
+                self.used["cpu"] += nb
+                return "cpu"
+        self._write_ssd(key, value)
+        return "ssd"
+
+    def _make_room(self, tier: str, nb: int) -> bool:
+        if nb > self.caps[tier]:
+            return False
+        store = self.hbm if tier == "hbm" else self.cpu
+        while self.used[tier] + nb > self.caps[tier]:
+            if not store:
+                return False
+            victim = min(store, key=lambda k: self.lru.get(k, 0.0))
+            self._demote(victim, tier)
+        return True
+
+    def _demote(self, key: str, tier: str):
+        self.stats["demotions"] += 1
+        nb = self.sizes[key]
+        if tier == "hbm":
+            val = self.hbm.pop(key)
+            self.used["hbm"] -= nb
+            if self._make_room("cpu", nb):
+                self.cpu[key] = val
+                self.used["cpu"] += nb
+            else:
+                self._write_ssd(key, val)
+        else:
+            val = self.cpu.pop(key)
+            self.used["cpu"] -= nb
+            self._write_ssd(key, val)
+
+    def _ssd_path(self, key: str) -> str:
+        return os.path.join(self.ssd_dir, key + ".npz")
+
+    def _write_ssd(self, key: str, value):
+        flat = {}
+        for i, leaf in enumerate(_leaves(value)):
+            flat[f"a{i}"] = np.asarray(leaf)
+        np.savez(self._ssd_path(key), **flat)
+        self.used["ssd"] += self.sizes.get(key, tree_nbytes(value))
+        # remember the tree structure for reload
+        self._structs = getattr(self, "_structs", {})
+        self._structs[key] = _structure_of(value)
+
+    def _read_ssd(self, key: str):
+        with np.load(self._ssd_path(key)) as z:
+            leaves = [z[f"a{i}"] for i in range(len(z.files))]
+        return _unflatten(self._structs[key], leaves)
+
+    # ---- retrieval -------------------------------------------------------
+    def where(self, key: str) -> Optional[str]:
+        with self.lock:
+            if key in self.hbm:
+                return "hbm"
+            if key in self.cpu:
+                return "cpu"
+        if os.path.exists(self._ssd_path(key)):
+            return "ssd"
+        return None
+
+    def get(self, key: str, promote: bool = True
+            ) -> Tuple[Any, Optional[LoadInfo]]:
+        t0 = time.perf_counter()
+        with self.lock:
+            if key in self.hbm:
+                self.lru[key] = time.monotonic()
+                self.stats["hits"]["hbm"] += 1
+                return self.hbm[key], LoadInfo("hbm", 0.0, 0.0,
+                                               self.sizes[key])
+            val = self.cpu.get(key)
+        if val is not None:
+            nb = self.sizes[key]
+            info = LoadInfo("cpu", time.perf_counter() - t0,
+                            nb / (CPU_TO_HBM_GBPS * 1e9), nb)
+            self.stats["hits"]["cpu"] += 1
+            if promote:
+                self._promote(key, val)
+            return val, info
+        if os.path.exists(self._ssd_path(key)):
+            val = self._read_ssd(key)
+            nb = self.sizes.get(key, tree_nbytes(val))
+            info = LoadInfo("ssd", time.perf_counter() - t0,
+                            nb / (SSD_GBPS * 1e9), nb)
+            self.stats["hits"]["ssd"] += 1
+            if promote:
+                self._promote(key, val)
+            return val, info
+        return None, None
+
+    def _promote(self, key: str, val):
+        with self.lock:
+            nb = self.sizes.get(key, tree_nbytes(val))
+            if key not in self.hbm and self._make_room("hbm", nb):
+                if key in self.cpu:
+                    self.cpu.pop(key)
+                    self.used["cpu"] -= nb
+                self.hbm[key] = val
+                self.used["hbm"] += nb
+                self.stats["promotions"] += 1
+                self.lru[key] = time.monotonic()
+
+    def delete(self, key: str):
+        with self.lock:
+            nb = self.sizes.pop(key, 0)
+            if key in self.hbm:
+                self.hbm.pop(key)
+                self.used["hbm"] -= nb
+            if key in self.cpu:
+                self.cpu.pop(key)
+                self.used["cpu"] -= nb
+        p = self._ssd_path(key)
+        if os.path.exists(p):
+            os.remove(p)
+            self.used["ssd"] = max(0, self.used["ssd"] - nb)
+        self.lru.pop(key, None)
+
+    # ---- async preloading (§3.5) ------------------------------------------
+    def prefetch(self, key: str):
+        """Schedule promotion toward HBM while the request queues."""
+        self._q.put(key)
+
+    def _preload_loop(self):
+        while True:
+            key = self._q.get()
+            if key is None:
+                return
+            try:
+                val, _ = self.get(key, promote=True)
+            except Exception:
+                pass
+
+    def drain(self, timeout: float = 5.0):
+        """Wait for outstanding prefetches (test/bench hook)."""
+        deadline = time.monotonic() + timeout
+        while not self._q.empty() and time.monotonic() < deadline:
+            time.sleep(0.001)
+
+    def close(self):
+        if self._worker is not None:
+            self._q.put(None)
+            self._worker.join(timeout=2.0)
+
+
+def _structure_of(tree):
+    if isinstance(tree, dict):
+        return {k: _structure_of(v) for k, v in sorted(tree.items())}
+    if isinstance(tree, (list, tuple)):
+        return [_structure_of(v) for v in tree]
+    return None
+
+
+def _unflatten(struct, leaves):
+    it = iter(leaves)
+
+    def rec(s):
+        if isinstance(s, dict):
+            return {k: rec(v) for k, v in s.items()}
+        if isinstance(s, list):
+            return [rec(v) for v in s]
+        return next(it)
+
+    return rec(struct)

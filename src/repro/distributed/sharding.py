@@ -1,0 +1,199 @@
+"""Logical-axis sharding rules -> PartitionSpec resolution.
+
+Model code annotates tensors with *logical* axis names ("batch", "heads",
+"mlp", ...).  Launch code installs a rules table mapping logical names to
+mesh axis names; inside that context ``shd(x, ...)`` becomes a
+``with_sharding_constraint`` and ``logical_spec(...)`` resolves to a
+``PartitionSpec``.  Outside any context both are no-ops, so unit tests on
+a single CPU device run the exact same model code.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Iterable, Mapping, Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def current_rules() -> Mapping[str, object] | None:
+    return getattr(_STATE, "rules", None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Mapping[str, object] | None):
+    """Install logical->mesh axis rules. Values: mesh axis name, tuple of
+    mesh axis names, or None (replicated)."""
+    prev = getattr(_STATE, "rules", None)
+    _STATE.rules = dict(rules) if rules is not None else None
+    try:
+        yield
+    finally:
+        _STATE.rules = prev
+
+
+_MISSING = object()
+
+
+def _resolve_one(name: str | None, rules: Mapping[str, object]):
+    """Returns mesh axes, None (explicit: hard-replicate), or _MISSING
+    (unknown name: leave unconstrained in activation contexts)."""
+    if name is None:
+        return _MISSING
+    return rules.get(name, _MISSING)
+
+
+def logical_spec(axes: Sequence[str | None],
+                 unconstrained_unnamed: bool = False) -> P:
+    """Resolve logical axis names to a PartitionSpec under current rules.
+
+    Guarantees each mesh axis appears at most once (first occurrence
+    wins); later conflicting dims are replicated, which is always legal.
+    With ``unconstrained_unnamed`` (used for activation constraints),
+    unnamed/unmapped dims become ``P.UNCONSTRAINED`` so GSPMD keeps
+    whatever sharding propagation chose (e.g. batch-DP) instead of
+    forcing replication.
+    """
+    rules = current_rules()
+    if rules is None:
+        return P()
+    unnamed = P.UNCONSTRAINED if unconstrained_unnamed else None
+    used: set[str] = set()
+    out = []
+    for name in axes:
+        r = _resolve_one(name, rules)
+        if r is _MISSING:
+            out.append(unnamed)
+            continue
+        if r is None:               # explicit None: hard replication
+            out.append(None)
+            continue
+        parts = (r,) if isinstance(r, str) else tuple(r)
+        free = tuple(p for p in parts if p not in used)
+        if len(free) != len(parts):  # conflict -> leave unconstrained
+            out.append(unnamed)
+            continue
+        used.update(free)
+        out.append(free[0] if len(free) == 1 else free)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def shd(x: jax.Array, *axes: str | None) -> jax.Array:
+    """Constrain ``x`` with the resolved spec of ``axes`` (no-op without
+    rules). Must be called under a mesh context (``with mesh:``)."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    if x.ndim != len(axes):
+        raise ValueError(f"rank {x.ndim} != {len(axes)} logical axes {axes}")
+    spec = logical_spec(axes, unconstrained_unnamed=True)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def spec_tree(axes_tree):
+    """Map a pytree of logical-axes tuples to a pytree of PartitionSpecs."""
+    return jax.tree.map(
+        lambda axes: logical_spec(axes),
+        axes_tree,
+        is_leaf=lambda v: isinstance(v, tuple)
+        and all(isinstance(e, (str, type(None))) for e in v),
+    )
+
+
+def zero1_spec(spec: P, shape: Sequence[int], data_axes: Iterable[str],
+               data_size: int) -> P:
+    """ZeRO-1: additionally shard the first divisible, unsharded dim of an
+    optimizer-state tensor over the data axes. Falls back to ``spec``."""
+    data_axes = tuple(data_axes)
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    used = set()
+    for e in entries:
+        if e is None:
+            continue
+        for a in (e,) if isinstance(e, str) else e:
+            used.add(a)
+    if any(a in used for a in data_axes):
+        return spec
+    for i, (e, dim) in enumerate(zip(entries, shape)):
+        if e is None and dim % data_size == 0 and dim > 0:
+            entries[i] = data_axes if len(data_axes) > 1 else data_axes[0]
+            while entries and entries[-1] is None:
+                entries.pop()
+            return P(*entries)
+    return spec
+
+
+# Default rules for the production meshes. "model" carries TP/EP; batch is
+# data-parallel over (pod, data). Head counts that don't divide TP=16
+# (llama3.2-3b: 24H, gemma3: 8H, GQA kv<=8) fall back to sharding the
+# 128/256-wide head_dim instead — contraction-dim sharding GSPMD handles
+# with a partial-sum all-reduce.
+def make_rules(mesh: jax.sharding.Mesh, cfg=None, *,
+               seq_shard: bool = False, batch_shard: bool = True) -> dict:
+    axes = mesh.axis_names
+    data_axes = tuple(a for a in axes if a in ("pod", "data"))
+    msz = mesh.shape.get("model", 1)
+
+    def pick(n_units, unit_dim):
+        """(axis for the unit dim, axis for the per-unit dim)."""
+        if n_units % msz == 0:
+            return "model", None
+        if unit_dim % msz == 0:
+            return None, "model"
+        return None, None
+
+    heads_ax = qdim_ax = "model", None
+    kvh_ax, kvd_ax = None, "model"
+    if cfg is not None:
+        heads_ax, qdim_ax = pick(cfg.num_heads, cfg.head_dim_)
+        kvh_ax, kvd_ax = pick(cfg.num_kv_heads, cfg.head_dim_)
+    else:
+        heads_ax, qdim_ax = "model", None
+
+    rules = {
+        "batch": (data_axes if len(data_axes) > 1 else data_axes[0])
+        if batch_shard else None,
+        "heads": heads_ax,
+        "q_head_dim": qdim_ax,
+        "kv_heads": kvh_ax,
+        "kv_head_dim": kvd_ax,
+        "mlp": "model",
+        "vocab": "model",
+        "experts": "model",
+        "rnn": "model",
+        "ssm_heads": "model",
+        # --- activation-only rules ---
+        # Attention math must NEVER contract a model-sharded head_dim
+        # (per-tile score all-reduces): Q/K/V activations are either
+        # head-sharded (when divisible) or hard-replicated on "model".
+        "attn_q": heads_ax,            # None => hard replicate
+        "attn_kv": kvh_ax,
+        "attn_dim": None,              # hard: never shard activation D
+    }
+    if seq_shard:
+        rules["seq"] = "model"          # Megatron-style sequence parallelism
+    return rules
+
+
+def kv_cache_spec(mesh, cfg, batch_shard: bool = True,
+                  seq_axis: str | None = None) -> dict:
+    """PartitionSpecs for the decode/prefill cache leaves.
+
+    k/v [G?, B, S, Hkv, D]: batch over data axes when divisible, kv-heads
+    or head_dim over model (divisibility-aware), optionally sequence over
+    ``seq_axis`` (flash-decode sequence parallelism for batch=1)."""
+    daxes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    b_ax = (daxes if len(daxes) > 1 else daxes[0]) if batch_shard else None
+    msz = mesh.shape.get("model", 1)
+    if cfg.num_kv_heads % msz == 0:
+        h_ax, d_ax = "model", None
+    elif cfg.head_dim_ % msz == 0:
+        h_ax, d_ax = None, "model"
+    else:
+        h_ax = d_ax = None
+    return {"b": b_ax, "s": seq_axis, "h": h_ax, "d": d_ax}

@@ -1,0 +1,132 @@
+"""Pallas TPU kernel: position-masked GQA flash attention with fused
+Cache-Craft chunk-mass statistics.
+
+TPU adaptation of the paper's Triton partial-prefill kernel (§4
+"Selective Token Recomputation"): query rows are the *active* tokens
+(new chunks + recompute + question) gathered into a dense [A, H, D]
+block; keys/values are the merged (cached + fresh) KV. Causality is a
+position predicate, not a triangular mask. Instead of materializing
+QK^T to derive inter/intra attention (the paper's GPU approach), the
+per-(row, key-chunk) softmax mass is accumulated *inside* the flash
+loop with one extra [bq,bk]x[bk,C] MXU product per tile, so the O(S^2)
+attention matrix never leaves VMEM.
+
+Grid: (q_blocks, H, kv_blocks), kv innermost sequential; the running
+max / denominator / output / mass accumulators live in VMEM scratch
+that persists across the kv dimension; the mass output block (indexed
+by q only) is accumulated across heads via consecutive revisiting.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(qp_ref, kp_ref, kc_ref, q_ref, k_ref, v_ref,
+            o_ref, mass_ref, m_s, l_s, acc, massacc, *,
+            scale: float, window: int, num_chunks: int):
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+    h = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init_head():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc[...] = jnp.zeros_like(acc)
+        massacc[...] = jnp.zeros_like(massacc)
+
+    @pl.when((j == 0) & (h == 0))
+    def _init_mass():
+        mass_ref[...] = jnp.zeros_like(mass_ref)
+
+    q = q_ref[...][:, 0, :].astype(jnp.float32)        # [bq, D]
+    k = k_ref[...][:, 0, :].astype(jnp.float32)        # [bk, D]
+    v = v_ref[...][:, 0, :].astype(jnp.float32)
+    qpos = qp_ref[...]                                  # [bq, 1]
+    kpos = kp_ref[...]                                  # [bk, 1]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    mask = (qpos >= kpos.T) & (qpos >= 0) & (kpos.T >= 0)
+    if window:
+        mask &= (qpos - kpos.T) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_s[...]                                   # [bq, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    m_new = jnp.maximum(m_new, NEG_INF / 2)
+    p = jnp.exp(s - m_new)                              # [bq, bk]
+    corr = jnp.exp(m_prev - m_new)                      # [bq, 1]
+    l_s[...] = l_s[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc[...] = acc[...] * corr + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    kc = kc_ref[...]                                    # [bk, 1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (p.shape[1], num_chunks), 1)
+    onehot = (kc == iota).astype(jnp.float32)
+    massacc[...] = massacc[...] * corr + jax.lax.dot(
+        p, onehot, preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+
+    @pl.when(j == nj - 1)
+    def _finish():
+        l = jnp.maximum(l_s[...], 1e-30)
+        o_ref[...] = (acc[...] / l)[:, None, :].astype(o_ref.dtype)
+        mass_ref[...] += (massacc[...] / l).astype(mass_ref.dtype)
+
+
+def chunk_attention_pallas(q, k, v, q_pos, k_pos, k_chunk, *,
+                           num_chunks: int = 16, window: int = 0,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = True):
+    """q [A,H,D], k/v [S,Hkv,D], q_pos [A], k_pos [S], k_chunk [S].
+    Shapes must be pre-padded: A % block_q == 0 and S % block_k == 0
+    (padding rows use position -1). Returns (out [A,H,D], mass [A,C])."""
+    A, H, D = q.shape
+    S, Hkv = k.shape[0], k.shape[1]
+    G = H // Hkv
+    nq, nk = A // block_q, S // block_k
+    qp = q_pos.reshape(A, 1).astype(jnp.int32)
+    kp = k_pos.reshape(S, 1).astype(jnp.int32)
+    kc = k_chunk.reshape(S, 1).astype(jnp.int32)
+
+    grid = (nq, H, nk)
+    kernel = functools.partial(_kernel, scale=1.0 / np.sqrt(D),
+                               window=window, num_chunks=num_chunks)
+    out, mass = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, 1), lambda i, h, j: (i, 0)),
+            pl.BlockSpec((block_k, 1), lambda i, h, j: (j, 0)),
+            pl.BlockSpec((block_k, 1), lambda i, h, j: (j, 0)),
+            pl.BlockSpec((block_q, 1, D), lambda i, h, j: (i, h, 0)),
+            pl.BlockSpec((block_k, 1, D), lambda i, h, j: (j, h // G, 0)),
+            pl.BlockSpec((block_k, 1, D), lambda i, h, j: (j, h // G, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, 1, D), lambda i, h, j: (i, h, 0)),
+            pl.BlockSpec((block_q, num_chunks), lambda i, h, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((A, H, D), q.dtype),
+            jax.ShapeDtypeStruct((A, num_chunks), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q, num_chunks), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(qp, kp, kc, q, k, v)
+    return out, mass

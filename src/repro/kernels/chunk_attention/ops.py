@@ -1,0 +1,54 @@
+"""Jitted public wrapper for the chunk-attention kernel: padding to block
+multiples, optional batch vmap, and CPU-interpret fallback."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.chunk_attention.kernel import chunk_attention_pallas
+
+
+def _pad_axis(x, mult, axis, value=0):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "num_chunks", "window", "block_q", "block_k", "interpret"))
+def chunk_attention(q, k, v, q_pos, k_pos, k_chunk, *,
+                    num_chunks: int = 16, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None):
+    """Batched entry point. q [B,A,H,D] (or [A,H,D]), k/v [B,S,Hkv,D],
+    q_pos [B,A], k_pos [B,S], k_chunk [B,S]. Returns (out, mass)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    squeeze = q.ndim == 3
+    if squeeze:
+        q, k, v = q[None], k[None], v[None]
+        q_pos, k_pos, k_chunk = q_pos[None], k_pos[None], k_chunk[None]
+    A0 = q.shape[1]
+    bq = min(block_q, max(8, A0))
+    bk = min(block_k, max(8, k.shape[1]))
+    q = _pad_axis(q, bq, 1)
+    q_pos = _pad_axis(q_pos, bq, 1, -1)
+    k = _pad_axis(k, bk, 1)
+    v = _pad_axis(v, bk, 1)
+    k_pos = _pad_axis(k_pos, bk, 1, -1)
+    k_chunk = _pad_axis(k_chunk, bk, 1, num_chunks - 1)
+
+    fn = functools.partial(chunk_attention_pallas, num_chunks=num_chunks,
+                           window=window, block_q=bq, block_k=bk,
+                           interpret=interpret)
+    out, mass = jax.vmap(fn)(q, k, v, q_pos, k_pos, k_chunk)
+    out, mass = out[:, :A0], mass[:, :A0]
+    if squeeze:
+        out, mass = out[0], mass[0]
+    return out, mass

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the chunk-attention kernel.
+
+Computes position-masked GQA flash attention over a merged KV (cached +
+fresh) for an arbitrary set of active query rows, plus the Cache-Craft
+attention statistic: per query row, the total softmax mass spent on keys
+of each chunk id, summed over heads (the streaming form of Eqs. 3-4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def chunk_attention_ref(q, k, v, q_pos, k_pos, k_chunk, *,
+                        num_chunks: int, window: int = 0):
+    """q [A,H,D], k/v [S,Hkv,D], q_pos [A], k_pos [S], k_chunk [S].
+
+    Returns (out [A,H,D] (q dtype), mass [A,num_chunks] fp32).
+    """
+    A, H, D = q.shape
+    S, Hkv = k.shape[0], k.shape[1]
+    G = H // Hkv
+    qg = q.reshape(A, Hkv, G, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    scores = jnp.einsum("ahgd,shd->hgas", qg, kf) / np.sqrt(D)
+    mask = (q_pos[:, None] >= k_pos[None, :]) & \
+        (q_pos[:, None] >= 0) & (k_pos[None, :] >= 0)
+    if window:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    m = jnp.maximum(jnp.max(scores, -1, keepdims=True), NEG_INF / 2)
+    e = jnp.exp(scores - m)
+    l = jnp.sum(e, -1, keepdims=True)
+    probs = jnp.where(l > 0, e / jnp.maximum(l, 1e-30), 0.0)
+    out = jnp.einsum("hgas,shd->ahgd", probs, v.astype(jnp.float32))
+    onehot = jax.nn.one_hot(k_chunk, num_chunks, dtype=jnp.float32)
+    mass = jnp.einsum("hgas,sc->ac", probs, onehot)
+    return out.reshape(A, H, D).astype(q.dtype), mass

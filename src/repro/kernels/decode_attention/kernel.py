@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: flash-decode (single new token vs a long KV cache).
+
+One grid cell per (kv-head, kv-block); the G=H/Hkv grouped query heads
+for that kv head are processed together as a [G, D] tile so the MXU
+contraction stays dense even for small G. The running max/denominator
+persists in VMEM scratch across kv blocks. Masking is positional
+(slot position <= query position, optional sliding window), matching the
+serving engine's ring buffers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref, o_ref,
+            m_s, l_s, acc, *, scale: float, window: int):
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc[...] = jnp.zeros_like(acc)
+
+    q = q_ref[...][0].astype(jnp.float32)          # [G, D]
+    k = k_ref[...][:, 0, :].astype(jnp.float32)    # [bk, D]
+    v = v_ref[...][:, 0, :].astype(jnp.float32)
+    qpos = qpos_ref[...]                            # [1, 1]
+    kpos = kpos_ref[...]                            # [bk, 1]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    mask = (kpos.T <= qpos) & (kpos.T >= 0)         # [1, bk]
+    if window:
+        mask &= (qpos - kpos.T) < window
+    s = jnp.where(mask, s, NEG_INF)                 # [G, bk]
+
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    m_new = jnp.maximum(m_new, NEG_INF / 2)
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_s[...] = l_s[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc[...] = acc[...] * corr + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+
+    @pl.when(j == nj - 1)
+    def _finish():
+        o_ref[...] = (acc[...] /
+                      jnp.maximum(l_s[...], 1e-30))[None].astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q, k, v, q_pos, k_pos, *, window: int = 0,
+                            block_k: int = 256, interpret: bool = True):
+    """q [H,D], k/v [S,Hkv,D], q_pos scalar [], k_pos [S] -> o [H,D]."""
+    H, D = q.shape
+    S, Hkv = k.shape[0], k.shape[1]
+    G = H // Hkv
+    bk = min(block_k, S)
+    pad = (-S) % bk
+    if pad:
+        k = jnp.pad(k, ((0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=-1)
+    Sp = k.shape[0]
+    qg = q.reshape(Hkv, G, D)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=1.0 / np.sqrt(D), window=window),
+        grid=(Hkv, Sp // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda h, j: (0, 0)),
+            pl.BlockSpec((bk, 1), lambda h, j: (j, 0)),
+            pl.BlockSpec((1, G, D), lambda h, j: (h, 0, 0)),
+            pl.BlockSpec((bk, 1, D), lambda h, j: (j, h, 0)),
+            pl.BlockSpec((bk, 1, D), lambda h, j: (j, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, D), lambda h, j: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Hkv, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(q_pos.reshape(1, 1).astype(jnp.int32),
+      k_pos.reshape(Sp, 1).astype(jnp.int32), qg, k, v)
+    return out.reshape(H, D)

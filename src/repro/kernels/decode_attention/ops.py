@@ -1,0 +1,22 @@
+"""Jitted wrapper for flash-decode (batched over requests)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_k",
+                                              "interpret"))
+def decode_attention(q, k, v, q_pos, k_pos, *, window: int = 0,
+                     block_k: int = 256, interpret: bool | None = None):
+    """q [B,H,D], k/v [B,S,Hkv,D], q_pos [B], k_pos [B,S] -> [B,H,D]."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    fn = functools.partial(decode_attention_pallas, window=window,
+                           block_k=block_k, interpret=interpret)
+    if q.ndim == 3:
+        return jax.vmap(fn)(q, k, v, q_pos, k_pos)
+    return fn(q, k, v, q_pos, k_pos)

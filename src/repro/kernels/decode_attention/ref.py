@@ -1,0 +1,8 @@
+"""Oracle for the decode-attention kernel: the model's dense decode path."""
+from repro.models.layers import decode_attend
+
+
+def decode_attention_ref(q, k, v, q_pos, k_pos, *, window: int = 0):
+    """q [H,D], k/v [S,Hkv,D], q_pos [], k_pos [S] -> [H,D]."""
+    return decode_attend(q[None], k[None], v[None], q_pos[None],
+                         k_pos[None], window=window)[0]

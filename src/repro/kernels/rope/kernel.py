@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: apply / remove rotary position embeddings.
+
+TPU analogue of the paper's custom CUDA kernel (§4 "RPE Management"):
+chunk-caches are stored with K *un-rotated* so they can be re-injected at
+arbitrary positions; this kernel applies the rotation x*cos - y*sin /
+x*sin + y*cos (and its inverse, sign=-1) over [T, H, D] blocks with the
+angle recomputed in-register from the position vector — no cos/sin tables
+in HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(pos_ref, x_ref, o_ref, *, theta: float, sign: float):
+    x = x_ref[...].astype(jnp.float32)            # [bt, H, D]
+    bt, H, D = x.shape
+    pos = pos_ref[...].astype(jnp.float32)        # [bt, 1]
+    expo = jax.lax.broadcasted_iota(jnp.float32, (1, 1, D // 2), 2)
+    inv_freq = jnp.exp(expo * (-2.0 * np.log(theta) / D))
+    ang = pos[:, :, None] * inv_freq              # [bt, 1, D/2]
+    cos = jnp.cos(ang)
+    sin = jnp.sin(ang) * sign
+    x1 = x[..., : D // 2]
+    x2 = x[..., D // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def rope_pallas(x, pos, *, theta: float, inverse: bool = False,
+                block_t: int = 256, interpret: bool = True):
+    """x [T,H,D], pos [T] -> rotated x. inverse=True removes the rotation."""
+    T, H, D = x.shape
+    bt = min(block_t, T)
+    pad = (-T) % bt
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0), (0, 0)))
+        pos = jnp.pad(pos, (0, pad))
+    Tp = x.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_kernel, theta=theta,
+                          sign=-1.0 if inverse else 1.0),
+        grid=(Tp // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bt, H, D), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, H, D), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Tp, H, D), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(pos.reshape(Tp, 1).astype(jnp.int32), x)
+    return out[:T]

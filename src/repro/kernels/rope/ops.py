@@ -1,0 +1,22 @@
+"""Jitted wrapper for the RoPE kernel (batched, CPU-interpret fallback)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rope.kernel import rope_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("theta", "inverse", "block_t",
+                                              "interpret"))
+def rope(x, pos, *, theta: float, inverse: bool = False,
+         block_t: int = 256, interpret: bool | None = None):
+    """x [T,H,D] or [B,T,H,D]; pos [T] or [B,T]."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    fn = functools.partial(rope_pallas, theta=theta, inverse=inverse,
+                           block_t=block_t, interpret=interpret)
+    if x.ndim == 4:
+        return jax.vmap(fn)(x, pos)
+    return fn(x, pos)

@@ -1,0 +1,7 @@
+"""Oracle for the RoPE kernel: the model's own rotate-half implementation."""
+from repro.models.layers import apply_rope
+
+
+def rope_ref(x, pos, *, theta: float, inverse: bool = False):
+    """x [T,H,D], pos [T]."""
+    return apply_rope(x[None], pos[None], theta, inverse=inverse)[0]

@@ -1,0 +1,19 @@
+"""Jitted wrapper for the SSD intra-chunk kernel (batched)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssd.kernel import ssd_intra_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra(xdt, log_a, B_mat, C_mat, *, interpret: bool | None = None):
+    """xdt [B,nC,L,H,P] or [nC,L,H,P]; see kernel.ssd_intra_pallas."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    fn = functools.partial(ssd_intra_pallas, interpret=interpret)
+    if xdt.ndim == 5:
+        return jax.vmap(fn)(xdt, log_a, B_mat, C_mat)
+    return fn(xdt, log_a, B_mat, C_mat)

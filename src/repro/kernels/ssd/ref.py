@@ -1,0 +1,25 @@
+"""Oracle for the SSD intra-chunk kernel (pure jnp, mirrors
+models.layers.ssd_chunked's intra-chunk + chunk-state math)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def ssd_intra_ref(xdt, log_a, B_mat, C_mat):
+    """xdt [nC,L,H,P], log_a [nC,L,H], B/C [nC,L,N]."""
+    nC, L, H, P = xdt.shape
+    la = log_a.astype(jnp.float32)
+    cum = jnp.cumsum(la, axis=1)                          # [nC,L,H]
+    seg = cum[:, :, None, :] - cum[:, None, :, :]         # [nC,L,L,H] (i,j)
+    mask = np.tril(np.ones((L, L), bool))[None, :, :, None]
+    decay = jnp.where(mask, jnp.exp(seg), 0.0)
+    scores = jnp.einsum("cin,cjn->cij", C_mat.astype(jnp.float32),
+                        B_mat.astype(jnp.float32))
+    y = jnp.einsum("cijh,cij,cjhp->cihp", decay, scores,
+                   xdt.astype(jnp.float32))
+    total = cum[:, -1]                                    # [nC,H]
+    decay_out = jnp.exp(total[:, None] - cum)             # [nC,L,H]
+    st = jnp.einsum("cln,clh,clhp->chpn", B_mat.astype(jnp.float32),
+                    decay_out, xdt.astype(jnp.float32))
+    return y, st

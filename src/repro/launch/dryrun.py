@@ -1,0 +1,365 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST set the fake-device flag before any other import (jax locks the
+device count on first init)."""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from typing import Dict, Optional, Tuple   # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np       # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCHS, get_config                 # noqa: E402
+from repro.distributed import sharding as SH                # noqa: E402
+from repro.launch import roofline as RL                     # noqa: E402
+from repro.launch.mesh import (data_axes, dp_size,          # noqa: E402
+                               make_production_mesh)
+from repro.models import model as M                         # noqa: E402
+from repro.models.config import (LONG_CONTEXT_ARCHS,        # noqa: E402
+                                 SHAPES)
+from repro.training.optimizer import AdamWConfig            # noqa: E402
+from repro.training.steps import (TrainState,               # noqa: E402
+                                  init_train_state,
+                                  make_cachecraft_prefill_step,
+                                  make_decode_step, make_prefill_step,
+                                  make_train_step)
+
+CC_ACTIVE_FRAC = 0.35       # 30% chunk recompute + question tokens
+TRAIN_ACCUM = 8
+
+
+def _batch_axis(mesh, B: int):
+    dax = data_axes(mesh)
+    dp = dp_size(mesh)
+    if B % dp == 0:
+        return dax if len(dax) > 1 else dax[0]
+    # try pod-only or data-only subsets
+    for sub in (("data",), ("pod",)):
+        axes = tuple(a for a in sub if a in mesh.axis_names)
+        if axes:
+            n = int(np.prod([mesh.shape[a] for a in axes]))
+            if B % n == 0:
+                return axes if len(axes) > 1 else axes[0]
+    return None
+
+
+def cache_shardings(cfg, mesh, cache_shape, B: int,
+                    seq_axis: Optional[str] = None,
+                    kind: str = "prefill"):
+    msz = mesh.shape["model"]
+    b_ax = _batch_axis(mesh, B)
+    if cfg.num_kv_heads % msz == 0:
+        h_ax, d_ax = "model", None
+    elif kind == "decode" and seq_axis is None:
+        # flash-decode sequence sharding: softmax/output reductions over
+        # the model axis are tiny vs per-tile score all-reduces from
+        # contraction(D)-sharded KV
+        h_ax, d_ax, seq_axis = None, None, "model"
+    elif cfg.head_dim_ % msz == 0:
+        h_ax, d_ax = None, "model"
+    else:
+        h_ax = d_ax = None
+    rnn_ax = "model" if cfg.rnn_width_ % msz == 0 else None
+    di_ax = "model" if cfg.d_inner % msz == 0 else None
+    ssm_ax = "model" if cfg.ssm_heads % msz == 0 else None
+
+    def leaf_spec(name: str, rank: int) -> P:
+        if name in ("k", "v"):
+            base = [b_ax, seq_axis, h_ax, d_ax]
+        elif name in ("mk", "mv"):
+            base = [b_ax, None, h_ax, d_ax]
+        elif name == "pos":
+            base = [b_ax, seq_axis]
+        elif name == "h":
+            base = [b_ax, rnn_ax]
+        elif name == "conv":
+            base = [b_ax, None, di_ax]
+        elif name == "s":
+            base = [b_ax, ssm_ax, None, None]
+        else:
+            base = [None] * rank
+        if rank == len(base) + 1:       # group-stacked leaf
+            base = [None] + base
+        return P(*base)
+
+    def walk(tree):
+        if isinstance(tree, dict) and all(
+                not isinstance(v, (dict, list)) for v in tree.values()):
+            return {k: NamedSharding(mesh, leaf_spec(k, v.ndim))
+                    for k, v in tree.items()}
+        if isinstance(tree, dict):
+            return {k: walk(v) for k, v in tree.items()}
+        if isinstance(tree, list):
+            return [walk(v) for v in tree]
+        return NamedSharding(mesh, P())
+
+    return walk(cache_shape)
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, seq_shard: bool = False,
+               accum: int = TRAIN_ACCUM, cc: bool = False,
+               attn: str = "auto"):
+    """Returns (fn, args, in_shardings, meta)."""
+    spec = SHAPES[shape_name]
+    B, S, kind = spec["global_batch"], spec["seq_len"], spec["kind"]
+    cfg = get_config(arch).replace(dtype="bfloat16", param_dtype="bfloat16")
+    rules = SH.make_rules(mesh, cfg, seq_shard=seq_shard,
+                          batch_shard=_batch_axis(mesh, B) is not None)
+    dtype = jnp.bfloat16
+    b_ax = _batch_axis(mesh, B)
+    bspec = P(b_ax) if b_ax else P()
+
+    with mesh, SH.axis_rules(rules):
+        pspecs = SH.spec_tree(M.param_axes(cfg))
+        pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                              is_leaf=lambda x: isinstance(x, P))
+        params_shape = jax.eval_shape(
+            lambda k: M.init_params(cfg, k), jax.random.PRNGKey(0))
+
+        def tok_sds(*shape):
+            return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+        media_args, media_sh = {}, {}
+        if cfg.num_media_tokens:
+            media_args["media"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_media_tokens, cfg.d_model), dtype)
+            media_sh["media"] = NamedSharding(mesh, bspec)
+
+        if kind == "train":
+            state_shape = jax.eval_shape(
+                lambda k: init_train_state(cfg, k), jax.random.PRNGKey(0))
+            dax, dsz = data_axes(mesh), dp_size(mesh)
+
+            def opt_sh():
+                def f(spec_, leaf):
+                    return NamedSharding(mesh, SH.zero1_spec(
+                        spec_, leaf.shape, dax, dsz))
+                return jax.tree.map(f, pspecs, state_shape.opt["m"],
+                                    is_leaf=lambda x: isinstance(x, P))
+            sshard = TrainState(
+                step=NamedSharding(mesh, P()), params=pshard,
+                opt={"m": opt_sh(), "v": opt_sh(),
+                     "count": NamedSharding(mesh, P())})
+            grad_specs = jax.tree.map(
+                lambda spec_, leaf: NamedSharding(mesh, SH.zero1_spec(
+                    spec_, leaf.shape, dax, dsz)),
+                pspecs, state_shape.opt["m"],
+                is_leaf=lambda x: isinstance(x, P))
+            batch = {"labels": tok_sds(B, S), **media_args}
+            bsh = {"labels": NamedSharding(mesh, bspec), **media_sh}
+            if cfg.input_mode == "embeds":
+                batch["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                       dtype)
+                bsh["embeds"] = NamedSharding(mesh, bspec)
+            else:
+                batch["tokens"] = tok_sds(B, S)
+                bsh["tokens"] = NamedSharding(mesh, bspec)
+            fn = make_train_step(cfg, AdamWConfig(), accum=accum,
+                                 grad_specs=grad_specs)
+            return (fn, (state_shape, batch), (sshard, bsh),
+                    dict(cfg=cfg, rules=rules, B=B, S=S, kind=kind,
+                         accum=accum))
+
+        if kind == "prefill":
+            ring = not cc
+            cache_shape = jax.eval_shape(
+                lambda: M.init_cache(cfg, B, S, dtype=dtype, ring=ring))
+            csh = cache_shardings(cfg, mesh, cache_shape, B)
+            if cc:
+                if not cfg.supports_chunk_cache:
+                    raise ValueError("cc-prefill inapplicable")
+                A = int(np.ceil(CC_ACTIVE_FRAC * S / 128) * 128)
+                batch = {"tokens": tok_sds(B, A),
+                         "positions": tok_sds(B, A),
+                         "cache": cache_shape, **media_args}
+                bsh = {"tokens": NamedSharding(mesh, bspec),
+                       "positions": NamedSharding(mesh, bspec),
+                       "cache": csh, **media_sh}
+                impl = attn if attn != "auto" else (
+                    "flash" if S > 8192 else "auto")
+                fn = make_cachecraft_prefill_step(cfg, attn_impl=impl)
+                return (fn, (params_shape, batch), (pshard, bsh),
+                        dict(cfg=cfg, rules=rules, B=B, S=S, kind="prefill",
+                             active_frac=A / S))
+            batch = {"cache": cache_shape, **media_args}
+            bsh = {"cache": csh, **media_sh}
+            if cfg.input_mode == "embeds":
+                batch["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                       dtype)
+                bsh["embeds"] = NamedSharding(mesh, bspec)
+            else:
+                batch["tokens"] = tok_sds(B, S)
+                bsh["tokens"] = NamedSharding(mesh, bspec)
+            impl = attn if attn != "auto" else (
+                "flash" if S > 8192 else "auto")
+            fn = make_prefill_step(cfg, attn_impl=impl)
+            return (fn, (params_shape, batch), (pshard, bsh),
+                    dict(cfg=cfg, rules=rules, B=B, S=S, kind=kind))
+
+        # decode
+        seq_axis = None
+        if b_ax is None and S % dp_size(mesh) == 0 and \
+                not cfg.is_attention_free:
+            seq_axis = "data"       # flash-decode seq parallelism (B=1)
+        cache_shape = jax.eval_shape(
+            lambda: M.init_cache(cfg, B, S, dtype=dtype, ring=True))
+        csh = cache_shardings(cfg, mesh, cache_shape, B, seq_axis=seq_axis,
+                              kind="decode")
+        batch = {"tokens": tok_sds(B), "positions": tok_sds(B),
+                 "cache": cache_shape}
+        bsh = {"tokens": NamedSharding(mesh, bspec),
+               "positions": NamedSharding(mesh, bspec), "cache": csh}
+        fn = make_decode_step(cfg)
+        return (fn, (params_shape, batch), (pshard, bsh),
+                dict(cfg=cfg, rules=rules, B=B, S=S, kind=kind,
+                     seq_axis=seq_axis))
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             cc: bool = False, seq_shard: bool = False,
+             accum: int = TRAIN_ACCUM, hlo_dir: Optional[str] = None,
+             attn: str = "auto") -> Dict:
+    rec = dict(arch=arch, shape=shape_name, mesh=mesh_kind, cc=cc,
+               seq_shard=seq_shard, attn=attn, status="ok")
+    if shape_name == "long_500k" and arch not in LONG_CONTEXT_ARCHS:
+        rec["status"] = "skipped"
+        rec["reason"] = ("pure full-attention arch: 0.5M-token dense KV "
+                        "per sequence is undeployable (DESIGN.md §6)")
+        return rec
+    cfg0 = get_config(arch)
+    if cc and not cfg0.supports_chunk_cache:
+        rec["status"] = "skipped"
+        rec["reason"] = "chunk-cache inapplicable (DESIGN.md §6)"
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = int(np.prod(list(mesh.shape.values())))
+    if attn == "flash_cp":
+        M.set_cp_mesh(mesh)
+    try:
+        fn, args, shardings, meta = build_cell(
+            arch, shape_name, mesh, cc=cc, seq_shard=seq_shard, accum=accum,
+            attn=attn)
+        cfg = meta["cfg"]
+        with mesh, SH.axis_rules(meta["rules"]):
+            t0 = time.time()
+            lowered = jax.jit(fn, in_shardings=shardings).lower(*args)
+            rec["lower_s"] = round(time.time() - t0, 2)
+            t0 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t0, 2)
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_gib": ma.argument_size_in_bytes / 2**30,
+            "output_gib": ma.output_size_in_bytes / 2**30,
+            "temp_gib": ma.temp_size_in_bytes / 2**30,
+            "alias_gib": ma.alias_size_in_bytes / 2**30,
+        }
+        ca = compiled.cost_analysis() or {}
+        rec["xla_cost"] = {k: float(v) for k, v in ca.items()
+                           if isinstance(v, (int, float)) and
+                           k in ("flops", "bytes accessed",
+                                 "optimal_seconds")}
+        txt = compiled.as_text()
+        if hlo_dir:
+            os.makedirs(hlo_dir, exist_ok=True)
+            tag = f"{arch}_{shape_name}_{mesh_kind}" + ("_cc" if cc else "")
+            with open(os.path.join(hlo_dir, tag + ".hlo"), "w") as f:
+                f.write(txt)
+        hc = RL.analyze_hlo(txt)
+        rec["hlo"] = {
+            "flops_device": hc.flops,
+            "raw_dot_flops": hc.raw_dot_flops,
+            "coll_bytes": hc.coll_bytes,
+            "coll_counts": hc.coll_counts,
+        }
+        kind = meta["kind"]
+        B, S = meta["B"], meta["S"]
+        frac = meta.get("active_frac", 1.0)
+        model_fl = RL.model_flops_6nd(cfg, kind, B, S)
+        an_flops = RL.analytic_flops(cfg, kind, B, S, active_frac=frac)
+        an_hbm = RL.analytic_hbm_bytes(cfg, kind, B, S, chips)
+        coll = sum(hc.coll_bytes.values())
+        terms = RL.roofline_terms(hc.flops, an_hbm, coll, model_fl, chips)
+        rec["analytic"] = {"flops_total": an_flops,
+                           "flops_device": an_flops / chips,
+                           "hbm_bytes_device": an_hbm,
+                           "model_flops_6nd": model_fl}
+        rec["roofline"] = terms.as_dict()
+        rec["chips"] = chips
+    except Exception as e:  # noqa: BLE001
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def cells(include_cc: bool = True):
+    for arch in ARCHS:
+        for shape in SHAPES:
+            for mesh_kind in ("single", "multi"):
+                yield dict(arch=arch, shape_name=shape, mesh_kind=mesh_kind)
+                if include_cc and shape == "prefill_32k" and \
+                        get_config(arch).supports_chunk_cache:
+                    yield dict(arch=arch, shape_name=shape,
+                               mesh_kind=mesh_kind, cc=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi"), default="single")
+    ap.add_argument("--cc", action="store_true",
+                    help="lower the Cache-Craft partial prefill")
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--attn", default="auto",
+                    choices=("auto", "flash", "flash_skip", "flash_cp"))
+    ap.add_argument("--accum", type=int, default=TRAIN_ACCUM)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--hlo-dir", default=None)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    todo = list(cells()) if args.all else [dict(
+        arch=args.arch, shape_name=args.shape, mesh_kind=args.mesh,
+        cc=args.cc)]
+    for cell in todo:
+        tag = "{arch}_{shape_name}_{mesh_kind}".format(**cell) + \
+            ("_cc" if cell.get("cc") else "") + \
+            ("_seqshard" if args.seq_shard else "") + \
+            (f"_{args.attn}" if args.attn != "auto" else "")
+        path = os.path.join(args.out, tag + ".json")
+        if args.skip_existing and os.path.exists(path):
+            print("skip", tag, flush=True)
+            continue
+        t0 = time.time()
+        rec = run_cell(cell["arch"], cell["shape_name"], cell["mesh_kind"],
+                       cc=cell.get("cc", False), seq_shard=args.seq_shard,
+                       accum=args.accum, hlo_dir=args.hlo_dir,
+                       attn=args.attn)
+        rec["wall_s"] = round(time.time() - t0, 1)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        msg = rec["status"]
+        if rec["status"] == "ok":
+            r = rec["roofline"]
+            msg += (f" dom={r['dominant']} c={r['compute_s']:.3f}s "
+                    f"m={r['memory_s']:.3f}s n={r['collective_s']:.3f}s "
+                    f"mem={rec['memory']['temp_gib']:.1f}GiB")
+        elif rec["status"] == "error":
+            msg += " " + rec["error"][:120]
+        print(f"{tag}: {msg} ({rec['wall_s']}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

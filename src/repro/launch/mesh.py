@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state. The dry-run entrypoint sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax
+import; everything else (tests, benches) sees the real single device.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    if len(jax.devices()) == n:
+        return jax.make_mesh(shape, axes)
+    # host-device-count oversubscription (512 placeholders, 256 needed):
+    # build the mesh from the first n devices explicitly.
+    devs = np.array(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(devs, axes)
+
+
+def make_debug_mesh(shape=(2, 4), axes=("data", "model")) -> \
+        jax.sharding.Mesh:
+    n = int(np.prod(shape))
+    devs = np.array(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(devs, axes)
+
+
+def data_axes(mesh: jax.sharding.Mesh):
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def dp_size(mesh: jax.sharding.Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in data_axes(mesh)]))

@@ -1,0 +1,88 @@
+"""Serving launcher: build a model + chunk store + engine, replay a
+synthetic RAG workload with continuous batching, print per-request and
+aggregate stats."""
+from __future__ import annotations
+
+import argparse
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, get_tiny
+from repro.core.chunkstore import ChunkStore
+from repro.core.tiers import TieredStore
+from repro.models import model as M
+from repro.serving.engine import Engine
+from repro.serving.rag import KnowledgeBase
+from repro.serving.scheduler import SchedulerConfig
+from repro.serving.workload import WorkloadConfig, generate
+from repro.training import checkpoint as ckpt
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--tiny", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--qpm", type=float, default=240)
+    ap.add_argument("--kb-chunks", type=int, default=24)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--strategy", default="cachecraft",
+                    choices=("cachecraft", "none", "random", "h2o",
+                             "prefix", "all"))
+    ap.add_argument("--recompute", type=float, default=None)
+    ap.add_argument("--no-focus", action="store_true")
+    ap.add_argument("--params", default=None,
+                    help="checkpoint dir with trained params")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_tiny(args.arch) if args.tiny else get_config(args.arch)
+    if args.params:
+        params = ckpt.restore(args.params)["params"]
+    else:
+        params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
+    kb = KnowledgeBase(num_chunks=args.kb_chunks,
+                       vocab_size=cfg.vocab_size, seed=args.seed)
+    store = None
+    if args.strategy != "all":
+        store = ChunkStore(TieredStore(1 << 30, 1 << 30,
+                                       tempfile.mkdtemp(prefix="cc-serve-")),
+                           n_chunks=100, m_variants=5)
+    eng = Engine(cfg, params, store,
+                 sched=SchedulerConfig(max_batch_tokens=8192,
+                                       max_decode_batch=4),
+                 pool_blocks=8192,
+                 executor_kwargs=dict(
+                     strategy=args.strategy,
+                     use_focus=not args.no_focus,
+                     force_recompute_fraction=args.recompute))
+    reqs = generate(kb, WorkloadConfig(num_requests=args.requests,
+                                       qpm=args.qpm, seed=args.seed,
+                                       max_new_tokens=args.max_new,
+                                       k_chunks=5))
+    t0 = time.time()
+    stats = eng.run(reqs)
+    wall = time.time() - t0
+    done = [r for r in reqs if r.e2e_latency is not None]
+    print(f"\n== {args.strategy} | {args.requests} reqs @ {args.qpm} QPM ==")
+    print(f"completed {stats.completed} failed {stats.failed} "
+          f"wall {wall:.1f}s simclock {stats.clock:.2f}s")
+    print(f"prefill tokens: total {stats.prefill_tokens_total} "
+          f"computed {stats.prefill_tokens_computed} "
+          f"(saved {1 - stats.prefill_tokens_computed / max(1, stats.prefill_tokens_total):.1%})")
+    if done:
+        print(f"TTFT mean {np.mean([r.ttft for r in done])*1e3:.1f}ms "
+              f"p99 {np.percentile([r.ttft for r in done], 99)*1e3:.1f}ms")
+        print(f"e2e mean {np.mean([r.e2e_latency for r in done]):.3f}s  "
+              f"throughput {len(done)/max(stats.clock, 1e-9):.2f} req/s")
+    if store:
+        print(f"store: {store.num_variants()} variants over "
+              f"{len(store.table)} chunks, evictions {store.evictions}, "
+              f"tier hits {store.tiers.stats['hits']}")
+
+
+if __name__ == "__main__":
+    main()

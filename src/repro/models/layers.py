@@ -1,0 +1,477 @@
+"""Layer primitives shared by every architecture family.
+
+All attention helpers take explicit *position vectors* for Q and K rather
+than assuming a triangular layout — this is what makes Cache-Craft's
+partial prefill (scattered recompute tokens attending to merged KV) a
+first-class citizen instead of a bolted-on mask hack.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import shd
+
+NEG_INF = -1e30
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (rotate-half convention; inverse == rotation by -theta, used to store
+# chunk-caches position-independently, per paper §4 "RPE Management").
+# ---------------------------------------------------------------------------
+def rope_cos_sin(pos: jax.Array, dim: int, theta: float):
+    """pos [..., T] -> cos,sin [..., T, dim//2] (fp32)."""
+    freqs = 1.0 / (theta ** (np.arange(0, dim, 2, dtype=np.float32) / dim))
+    ang = pos.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float,
+               inverse: bool = False) -> jax.Array:
+    """x [..., T, H, D], pos broadcastable to x[..., T]. inverse=True undoes
+    the rotation (the paper's custom "RPE removal" kernel's math)."""
+    d = x.shape[-1]
+    cos, sin = rope_cos_sin(pos, d, theta)
+    if inverse:
+        sin = -sin
+    cos = cos[..., None, :]  # [..., T, 1, D/2]
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention masks from position vectors
+# ---------------------------------------------------------------------------
+def position_mask(q_pos: jax.Array, k_pos: jax.Array, window: int = 0,
+                  k_valid: Optional[jax.Array] = None) -> jax.Array:
+    """[B,Tq],[B,Tk] -> bool [B,Tq,Tk]. Causal by absolute position, with
+    optional sliding window, masking invalid (padding) K slots."""
+    m = q_pos[:, :, None] >= k_pos[:, None, :]
+    m &= q_pos[:, :, None] >= 0
+    m &= k_pos[:, None, :] >= 0
+    if window:
+        m &= (q_pos[:, :, None] - k_pos[:, None, :]) < window
+    if k_valid is not None:
+        m &= k_valid[:, None, :]
+    return m
+
+
+def _safe_softmax(scores: jax.Array, axis: int = -1) -> jax.Array:
+    """Softmax that returns zeros (not NaN) for fully-masked rows."""
+    m = jnp.max(scores, axis=axis, keepdims=True)
+    m = jnp.maximum(m, NEG_INF / 2)
+    e = jnp.exp(scores - m)
+    s = jnp.sum(e, axis=axis, keepdims=True)
+    return jnp.where(s > 0, e / jnp.maximum(s, 1e-30), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Dense GQA attention with optional Cache-Craft attention statistics.
+# Used for small/medium shapes and as the oracle for the Pallas kernel.
+# ---------------------------------------------------------------------------
+def gqa_attend_dense(q, k, v, mask, k_chunk: Optional[jax.Array] = None,
+                     num_chunks: int = 0):
+    """q [B,Tq,H,D], k/v [B,Tk,Hkv,D], mask [B,Tq,Tk].
+
+    Returns (out [B,Tq,H,D], row_mass [B,Tq,C] or None) where row_mass[b,i,c]
+    is the total softmax probability token i spends on keys whose chunk id
+    is c, summed over heads — the streaming statistic behind Eqs. 3-4.
+    """
+    B, Tq, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Tq, Hkv, G, D)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(D)
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    probs = _safe_softmax(scores)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    out = out.reshape(B, Tq, H, D)
+    row_mass, key_mass = None, None
+    if k_chunk is not None:
+        onehot = jax.nn.one_hot(k_chunk, num_chunks, dtype=jnp.float32)
+        row_mass = jnp.einsum("bhgqk,bkc->bqc", probs, onehot)
+        # mass each key *receives* (H2O heavy-hitter criterion)
+        key_mass = jnp.einsum("bhgqk->bk", probs)
+    return out, row_mass, key_mass
+
+
+# ---------------------------------------------------------------------------
+# Flash-style blocked attention (pure JAX): scan over KV blocks with a
+# running max/denominator. Memory O(Tq * block); used for the 32k/500k
+# dry-run shapes. ``causal_skip`` statically halves compute by pairing
+# q-block i with q-block N-1-i (balanced causal schedule) — hillclimb lever.
+# ---------------------------------------------------------------------------
+def gqa_attend_flash(q, k, v, q_pos, k_pos, window: int = 0,
+                     block_q: int = 1024, block_k: int = 1024,
+                     causal_skip: bool = False):
+    B, Tq, H, D = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    block_q = min(block_q, Tq)
+    block_k = min(block_k, Tk)
+    nq, nk = -(-Tq // block_q), -(-Tk // block_k)
+    pq, pk = nq * block_q - Tq, nk * block_k - Tk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pq)), constant_values=-1)
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pk)), constant_values=-1)
+
+    qb = q.reshape(B, nq, block_q, Hkv, G, D).astype(jnp.float32)
+    qpb = q_pos.reshape(B, nq, block_q)
+    kb = k.reshape(B, nk, block_k, Hkv, D).astype(jnp.float32)
+    vb = v.reshape(B, nk, block_k, Hkv, D).astype(jnp.float32)
+    kpb = k_pos.reshape(B, nk, block_k)
+    scale = 1.0 / np.sqrt(D)
+
+    def one_q_block(args):
+        qi, qp = args  # qi [B,bq,Hkv,G,D], qp [B,bq]
+        # pin D replicated INSIDE the loop: sharding constraints outside a
+        # scan don't survive GSPMD's loop-carried propagation, and a
+        # D-sharded contraction turns every score tile into an all-reduce
+        qi = shd(qi, "batch", None, None, None, "attn_dim")
+
+        def kv_step(carry, blk):
+            m, l, acc = carry
+            ki, vi, kp = blk
+            ki = shd(ki, "batch", None, None, "attn_dim")
+            vi = shd(vi, "batch", None, None, "attn_dim")
+            s = jnp.einsum("bqhgd,bkhd->bqhgk", qi, ki) * scale
+            msk = position_mask(qp, kp, window)  # [B,bq,bk]
+            s = jnp.where(msk[:, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            m_new = jnp.maximum(m_new, NEG_INF / 2)
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bqhgk,bkhd->bqhgd", p, vi)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, block_q, Hkv, G), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, block_q, Hkv, G), jnp.float32)
+        a0 = jnp.zeros((B, block_q, Hkv, G, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kb.swapaxes(0, 1), vb.swapaxes(0, 1), kpb.swapaxes(0, 1)))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    if causal_skip:
+        # Positions are known to be row-major (arange): q block i only
+        # needs kv blocks j with j*block_k < (i+1)*block_q. Unrolled over
+        # q blocks so each prefix scan has a STATIC trip count — halves
+        # the score FLOPs of full-causal prefill (§Perf hillclimb).
+        outs = []
+        for i in range(nq):
+            need = min(nk, -(-((i + 1) * block_q) // block_k))
+            def one(args, n=need):
+                qi, qp = args
+
+                def kv_step(carry, blk):
+                    return _flash_kv_step(carry, blk, qi, qp, scale,
+                                          window)
+                m0 = jnp.full((B, block_q, Hkv, G), NEG_INF, jnp.float32)
+                l0 = jnp.zeros((B, block_q, Hkv, G), jnp.float32)
+                a0 = jnp.zeros((B, block_q, Hkv, G, D), jnp.float32)
+                (m, l, acc), _ = jax.lax.scan(
+                    kv_step, (m0, l0, a0),
+                    (kb.swapaxes(0, 1)[:n], vb.swapaxes(0, 1)[:n],
+                     kpb.swapaxes(0, 1)[:n]))
+                return acc / jnp.maximum(l, 1e-30)[..., None]
+            outs.append(one((qb[:, i], qpb[:, i])))
+        out = jnp.stack(outs, axis=1)
+    elif nq == 1:
+        out = one_q_block((qb[:, 0], qpb[:, 0]))[:, None]
+    else:
+        out = jax.lax.map(one_q_block,
+                          (qb.swapaxes(0, 1), qpb.swapaxes(0, 1)))
+        out = out.swapaxes(0, 1)
+    out = out.reshape(B, nq * block_q, H, D)[:, :Tq]
+    return out.astype(v.dtype)
+
+
+def _flash_kv_step(carry, blk, qi, qp, scale, window):
+    m, l, acc = carry
+    ki, vi, kp = blk
+    ki = shd(ki, "batch", None, None, "attn_dim")
+    vi = shd(vi, "batch", None, None, "attn_dim")
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qi, ki) * scale
+    msk = position_mask(qp, kp, window)
+    s = jnp.where(msk[:, :, None, None, :], s, NEG_INF)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    m_new = jnp.maximum(m_new, NEG_INF / 2)
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l = l * corr + jnp.sum(p, axis=-1)
+    acc = acc * corr[..., None] + jnp.einsum("bqhgk,bkhd->bqhgd", p, vi)
+    return (m_new, l, acc), None
+
+
+def gqa_attend_flash_cp(q, k, v, q_pos, k_pos, mesh, window: int = 0,
+                        axis: str = "model", block_k: int = 1024):
+    """Context-parallel flash attention: query rows sharded over ``axis``
+    (each shard attends its sequence slice against the full KV) — the
+    TP-axis answer for archs whose head count doesn't divide the mesh
+    (gemma3: 8 heads on a 16-way model axis would otherwise replicate
+    the whole attention computation 16x). Positions travel with the
+    rows, so causality is exact despite the row split."""
+    from jax.sharding import PartitionSpec as P
+    msz = mesh.shape[axis]
+    B, T, H, D = q.shape
+    pad = (-T) % msz
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)), constant_values=-1)
+
+    def body(qs, qps, kf, vf, kps):
+        return gqa_attend_flash(qs, kf, vf, qps, kps, window,
+                                block_q=max(128, qs.shape[1] // 4),
+                                block_k=block_k)
+
+    f = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None, axis, None, None), P(None, axis),
+                  P(), P(), P()),
+        out_specs=P(None, axis, None, None),
+        axis_names={axis}, check_vma=False)
+    out = f(q, q_pos, k, v, k_pos)
+    return out[:, :T]
+
+
+def decode_attend(q, k, v, q_pos, k_pos, window: int = 0):
+    """Single-step decode: q [B,H,D] vs KV [B,S,Hkv,D] -> [B,H,D]."""
+    out = gqa_attend_dense(
+        q[:, None], k, v, position_mask(q_pos[:, None], k_pos, window))[0]
+    return out[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# FFNs
+# ---------------------------------------------------------------------------
+def swiglu(x, wi, wo):
+    """wi [d,2,F], wo [F,d]. The out-projection fixes its output dtype so
+    the TP partial-sum all-reduce runs in the compute dtype (bf16 on the
+    production mesh) instead of f32 — the MXU still accumulates each
+    shard's contraction in f32, only the cross-shard reduction narrows."""
+    gu = jnp.einsum("...d,dtf->...tf", x, wi)
+    gu = shd(gu, *((None,) * (gu.ndim - 2)), None, "mlp")
+    h = jax.nn.silu(gu[..., 0, :]) * gu[..., 1, :]
+    return jnp.einsum("...f,fd->...d", h, wo,
+                      preferred_element_type=x.dtype)
+
+
+def moe_ffn(x, router_w, wi, wo, *, experts_per_token: int,
+            capacity_factor: float, group_size: int = 512):
+    """GShard-style einsum-dispatch MoE (EP over the "experts" logical axis).
+
+    x [..., d] flattened to [T,d]; tokens processed in groups so the
+    dispatch one-hots stay O(T * group * k) rather than O(T^2).
+    """
+    orig_shape = x.shape
+    d = x.shape[-1]
+    xt = x.reshape(-1, d)
+    T = xt.shape[0]
+    E = router_w.shape[-1]
+    g = min(group_size, T)
+    while T % g:
+        g -= 1
+    G = T // g
+    xg = xt.reshape(G, g, d)
+    k = experts_per_token
+    C = max(4, int(np.ceil(g * k * capacity_factor / E)))
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)            # [G,g,k]
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    dt = x.dtype
+    f32 = jnp.float32
+    counts = jnp.zeros((G, E), jnp.int32)
+    dispatch = jnp.zeros((G, g, E, C), dt)
+    combine = jnp.zeros((G, g, E, C), f32)
+    for i in range(k):
+        oh = jax.nn.one_hot(gate_idx[..., i], E, dtype=jnp.int32)  # [G,g,E]
+        pos = jnp.cumsum(oh, axis=1) - 1 + counts[:, None, :]
+        keep = (pos < C) & (oh > 0)
+        slot = jax.nn.one_hot(jnp.where(keep, pos, -1), C,
+                              dtype=dt)                        # [G,g,E,C]
+        disp_i = slot * oh[..., None].astype(dt)
+        dispatch = dispatch + disp_i
+        combine = combine + disp_i.astype(f32) * \
+            gate_vals[..., i, None, None]
+        counts = counts + jnp.sum(oh * keep, axis=1)
+
+    ein = jnp.einsum("gtec,gtd->gecd", dispatch, xg,
+                     preferred_element_type=f32).astype(dt)
+    ein = shd(ein, None, "experts", None, None)
+    a = jnp.einsum("gecd,edf->gecf", ein, wi[:, :, 0],
+                   preferred_element_type=f32).astype(dt)
+    b = jnp.einsum("gecd,edf->gecf", ein, wi[:, :, 1],
+                   preferred_element_type=f32).astype(dt)
+    hid = jax.nn.silu(a) * b
+    hid = shd(hid, None, "experts", None, "expert_mlp")
+    out_e = jnp.einsum("gecf,efd->gecd", hid, wo,
+                       preferred_element_type=f32)
+    out = jnp.einsum("gtec,gecd->gtd", combine, out_e.astype(f32),
+                     preferred_element_type=f32)
+    return out.reshape(orig_shape).astype(x.dtype), probs
+
+
+def moe_aux_loss(probs, num_experts: int) -> jax.Array:
+    """Switch-style load-balancing loss (mean fraction * mean prob * E)."""
+    me = jnp.mean(probs, axis=tuple(range(probs.ndim - 1)))
+    top = jnp.argmax(probs, axis=-1)
+    fe = jnp.mean(jax.nn.one_hot(top, num_experts, dtype=jnp.float32),
+                  axis=tuple(range(probs.ndim - 1)))
+    return num_experts * jnp.sum(me * fe)
+
+
+# ---------------------------------------------------------------------------
+# Griffin RG-LRU recurrent block (recurrentgemma). Associative scan = the
+# TPU-native mapping of the paper's linear recurrence.
+# ---------------------------------------------------------------------------
+_RGLRU_C = 8.0
+
+
+def _rglru_coeffs(b, lam, alpha, beta):
+    r = jax.nn.sigmoid(alpha * b)
+    i = jax.nn.sigmoid(beta * b)
+    log_a = -_RGLRU_C * jax.nn.softplus(lam) * r
+    a = jnp.exp(log_a)
+    u = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * b)
+    return a, u
+
+
+def rglru_scan(b, lam, alpha, beta, h0=None):
+    """b [B,S,R] -> (y [B,S,R], h_last [B,R]) via associative scan."""
+    a, u = _rglru_coeffs(b.astype(jnp.float32), lam, alpha, beta)
+    if h0 is not None:
+        u = u.at[:, 0].add(a[:, 0] * h0)
+
+    def comb(x, y):
+        a1, u1 = x
+        a2, u2 = y
+        return a1 * a2, a2 * u1 + u2
+
+    _, ys = jax.lax.associative_scan(comb, (a, u), axis=1)
+    return ys.astype(b.dtype), ys[:, -1]
+
+
+def rglru_step(b, lam, alpha, beta, h):
+    a, u = _rglru_coeffs(b.astype(jnp.float32), lam, alpha, beta)
+    h = a * h + u
+    return h.astype(b.dtype), h
+
+
+def causal_conv1d(x, w, state=None):
+    """x [B,S,R], w [W,R]; returns (y, new_state [B,W-1,R])."""
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    return y.astype(x.dtype), xp[:, -(W - 1):] if W > 1 else state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD (state-space duality): chunked blocked algorithm — intra-chunk
+# attention-like matmuls (MXU friendly) + inter-chunk state recurrence.
+# ---------------------------------------------------------------------------
+def _segsum(log_a):
+    """log_a [..., L] -> [..., L, L] cumulative sums over segments i>=j."""
+    L = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    # decay from input step j to output step i (i>=j) spans (j, i]:
+    # exp(cs_i - cs_j).
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = np.tril(np.ones((L, L), bool), 0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A_log, B_mat, C_mat, D, chunk: int,
+                state0=None):
+    """SSD forward.
+
+    x [B,S,H,P], dt [B,S,H] (already softplus'ed), A_log [H],
+    B_mat/C_mat [B,S,N], D [H]. Returns (y [B,S,H,P], state [B,H,P,N]).
+    """
+    Bsz, S, H, Pd = x.shape
+    N = B_mat.shape[-1]
+    L = min(chunk, S)
+    while S % L:
+        L -= 1
+    nC = S // L
+    a = (-jnp.exp(A_log.astype(jnp.float32)))            # [H]
+    log_a = (dt.astype(jnp.float32) * a)                 # [B,S,H]
+    xdt = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+
+    xc = xdt.reshape(Bsz, nC, L, H, Pd)
+    lac = log_a.reshape(Bsz, nC, L, H)
+    Bc = B_mat.astype(jnp.float32).reshape(Bsz, nC, L, N)
+    Cc = C_mat.astype(jnp.float32).reshape(Bsz, nC, L, N)
+
+    # --- intra-chunk (quadratic within chunk only) ---
+    seg = _segsum(lac.swapaxes(-1, -2))                  # [B,nC,H,L,L]
+    decay = jnp.exp(seg)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)       # [B,nC,L,L]
+    y_intra = jnp.einsum("bchij,bcij,bcjhp->bcihp",
+                         decay, scores, xc)
+
+    # --- chunk states ---
+    cum = jnp.cumsum(lac, axis=2)                        # [B,nC,L,H]
+    total = cum[:, :, -1]                                # [B,nC,H]
+    decay_out = jnp.exp(total[:, :, None] - cum)         # [B,nC,L,H]
+    chunk_state = jnp.einsum("bcln,bclh,bclhp->bchpn",
+                             Bc, decay_out, xc)          # [B,nC,H,P,N]
+
+    # --- inter-chunk recurrence over chunk states ---
+    if state0 is None:
+        state0 = jnp.zeros((Bsz, H, Pd, N), jnp.float32)
+
+    def step(s, inp):
+        cs, tot = inp                                    # [B,H,P,N],[B,H]
+        s_prev = s
+        s = s * jnp.exp(tot)[:, :, None, None] + cs
+        return s, s_prev
+
+    states_in = (chunk_state.swapaxes(0, 1), total.swapaxes(0, 1))
+    state_f, prev_states = jax.lax.scan(step, state0.astype(jnp.float32),
+                                        states_in)
+    prev_states = prev_states.swapaxes(0, 1)             # [B,nC,H,P,N]
+
+    decay_in = jnp.exp(cum)                              # [B,nC,L,H]
+    y_inter = jnp.einsum("bcln,bclh,bchpn->bclhp",
+                         Cc, decay_in, prev_states)
+    y = (y_intra + y_inter).reshape(Bsz, S, H, Pd)
+    y = y + D[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), state_f
+
+
+def ssd_step(x, dt, A_log, B_mat, C_mat, D, state):
+    """One decode step. x [B,H,P], dt [B,H], B/C [B,N], state [B,H,P,N]."""
+    a = jnp.exp(dt.astype(jnp.float32) *
+                (-jnp.exp(A_log.astype(jnp.float32))))  # [B,H]
+    xdt = x.astype(jnp.float32) * dt[..., None]
+    state = state * a[:, :, None, None] + \
+        jnp.einsum("bhp,bn->bhpn", xdt, B_mat.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", state, C_mat.astype(jnp.float32))
+    y = y + D[None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), state

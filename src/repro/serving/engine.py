@@ -1,0 +1,259 @@
+"""End-to-end serving engine: continuous batching + Cache-Craft prefill.
+
+Timing model: compute is *measured* on this host (jitted model steps);
+the engine clock advances by measured compute plus the *modeled* tier
+load costs that are not hidden by queue wait (paper §3.5: async preload
+overlaps loading with queue time; layer-wise preload (Eq. 16) overlaps
+the rest with layer execution). This gives reproducible throughput /
+latency curves at laptop scale with the same structure as the paper's
+A100 numbers.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.chunkstore import ChunkStore, chunk_hash
+from repro.core.prefill import CacheCraftExecutor, pack_cache
+from repro.core.preload import preload_depth
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.serving.kvpool import KVPool
+from repro.serving.request import Request, State
+from repro.serving.scheduler import Scheduler, SchedulerConfig
+
+
+def _bucket(n: int, b: int) -> int:
+    return max(b, -(-n // b) * b)
+
+
+@dataclass
+class EngineStats:
+    prefill_tokens_total: int = 0
+    prefill_tokens_computed: int = 0
+    decode_steps: int = 0
+    prefills: int = 0
+    completed: int = 0
+    failed: int = 0
+    clock: float = 0.0
+    load_hidden_s: float = 0.0
+    load_exposed_s: float = 0.0
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params,
+                 store: Optional[ChunkStore] = None, *,
+                 sched: Optional[SchedulerConfig] = None,
+                 pool_blocks: int = 4096, block_size: int = 16,
+                 decode_bucket_b: int = 4, seq_bucket: int = 64,
+                 executor_kwargs: Optional[dict] = None,
+                 time_scale: float = 1.0):
+        self.cfg = cfg
+        self.params = params
+        self.store = store
+        self.executor = CacheCraftExecutor(
+            cfg, params, store, **(executor_kwargs or {}))
+        self.scheduler = Scheduler(sched or SchedulerConfig())
+        self.pool = KVPool(cfg.num_layers, cfg.num_kv_heads, cfg.head_dim_,
+                           pool_blocks, block_size)
+        self.decode_bucket_b = decode_bucket_b
+        self.seq_bucket = seq_bucket
+        self.time_scale = time_scale
+        self.clock = 0.0
+        self.decoding: List[Request] = []
+        self._dcache = None
+        self._dshape = None
+        self.stats = EngineStats()
+        from repro.core.prefill import decode_fn
+        self._decode_fn = decode_fn(cfg)
+
+    # ---- submission ---------------------------------------------------------
+    def submit(self, req: Request):
+        self.clock = max(self.clock, req.arrival_time)
+        self.scheduler.enqueue(req, self.clock)
+        # async preload (§3.5): schedule tier promotion while queued
+        if self.store is not None:
+            hashes = [("SYS-" + chunk_hash(req.system_tokens))] + \
+                [chunk_hash(c) for c in req.chunk_tokens]
+            for i, h in enumerate(hashes):
+                self.store.prefetch(h, hashes[:i])
+
+    # ---- one ORCA iteration -------------------------------------------------
+    def step(self) -> bool:
+        """Returns True if any work was done."""
+        worked = False
+        decode_tokens = sum(r.table.length for r in self.decoding)
+        req = self.scheduler.next_prefill(decode_tokens, len(self.decoding))
+        if req is not None:
+            self._run_prefill(req)
+            worked = True
+        if self.decoding:
+            self._run_decode_step()
+            worked = True
+        return worked
+
+    def _run_prefill(self, req: Request):
+        req.state = State.PREFILLING
+        req.t_prefill_start = self.clock
+        t0 = time.perf_counter()
+        res = self.executor.process(req.system_tokens, req.chunk_tokens,
+                                    req.question_tokens)
+        compute_s = (time.perf_counter() - t0) * self.time_scale
+        # tier loads: queue wait hides loading (async preload), layer-wise
+        # preload (Eq. 16) hides the remainder behind layer compute
+        queue_wait = self.clock - (req.t_enqueued or self.clock)
+        lp = preload_depth(self.cfg.num_layers,
+                           compute_s / max(1, self.cfg.num_layers),
+                           res.load_seconds_modeled /
+                           max(1, self.cfg.num_layers))
+        exposed = max(0.0, res.load_seconds_modeled *
+                      (lp / self.cfg.num_layers) - queue_wait)
+        self.stats.load_hidden_s += res.load_seconds_modeled - exposed
+        self.stats.load_exposed_s += exposed
+        self.clock += compute_s + exposed
+
+        ok = self.pool.write_prefill(req.table, res.k_layers, res.v_layers,
+                                     res.pos_layout)
+        if not ok:
+            self.pool.free_table(req.table)
+            self.scheduler.requeue(req)
+            return
+        first = int(np.argmax(res.logits_last[:self.cfg.vocab_size]))
+        req.output_tokens.append(first)
+        req.total_len = res.total_len
+        req.t_first_token = self.clock
+        req.prefill_tokens_total = res.total_len
+        req.prefill_tokens_computed = res.plan.num_active_tokens
+        req.cache_hits = sum(d.is_hit for d in res.plan.decisions)
+        req.load_seconds_modeled = res.load_seconds_modeled
+        req.state = State.DECODING
+        self.stats.prefills += 1
+        self.stats.prefill_tokens_total += res.total_len
+        self.stats.prefill_tokens_computed += res.plan.num_active_tokens
+        self.decoding.append(req)
+        self._dcache = None              # force decode batch rebuild
+
+    # ---- decode batch -------------------------------------------------------
+    def _rebuild_decode_batch(self):
+        B = _bucket(len(self.decoding), self.decode_bucket_b)
+        max_len = max(r.table.length + r.max_new_tokens + 1
+                      for r in self.decoding)
+        S = _bucket(max_len, self.seq_bucket)
+        L = self.cfg.num_layers
+        hkv, dh = self.cfg.num_kv_heads, self.cfg.head_dim_
+        k = np.zeros((L, B, S, hkv, dh), np.float32)
+        v = np.zeros_like(k)
+        pos = np.full((B, S), -1, np.int32)
+        for i, r in enumerate(self.decoding):
+            kk, vv, pp = self.pool.gather(r.table, S)
+            k[:, i], v[:, i], pos[i] = kk, vv, pp
+        # to model cache format (batched pack)
+        P, G = len(self.cfg.pattern), self.cfg.n_groups
+        groups = []
+        if G:
+            kg = k[:G * P].reshape(G, P, B, S, hkv, dh)
+            vg = v[:G * P].reshape(G, P, B, S, hkv, dh)
+            for p in range(P):
+                groups.append({"k": jnp.asarray(kg[:, p]),
+                               "v": jnp.asarray(vg[:, p]),
+                               "pos": jnp.broadcast_to(
+                                   jnp.asarray(pos), (G, B, S))})
+        tail = [{"k": jnp.asarray(k[G * P + i]),
+                 "v": jnp.asarray(v[G * P + i]),
+                 "pos": jnp.asarray(pos)} for i in range(self.cfg.n_tail)]
+        self._dcache = {"groups": groups, "tail": tail}
+        self._dshape = (B, S)
+
+    def _run_decode_step(self):
+        if self._dcache is None or self._dshape[0] < len(self.decoding):
+            self._rebuild_decode_batch()
+        B, S = self._dshape
+        toks = np.zeros(B, np.int32)
+        poss = np.zeros(B, np.int32)
+        slots = np.zeros(B, np.int32)
+        for i, r in enumerate(self.decoding):
+            toks[i] = r.output_tokens[-1]
+            poss[i] = r.total_len          # logical position (RoPE/causal)
+            slots[i] = r.table.length      # physical append slot
+        t0 = time.perf_counter()
+        logits, self._dcache = self._decode_fn(
+            self.params, jnp.asarray(toks), jnp.asarray(poss), self._dcache,
+            jnp.asarray(slots))
+        logits = np.asarray(logits[:, 0])
+        self.clock += (time.perf_counter() - t0) * self.time_scale
+        self.stats.decode_steps += 1
+
+        done_any = False
+        for i, r in enumerate(list(self.decoding)):
+            nxt = int(np.argmax(logits[i, :self.cfg.vocab_size]))
+            # persist the newly written KV into the paged pool
+            ktok, vtok = self._extract_slot_kv(i, r.table.length)
+            if not self.pool.append_token(r.table, ktok, vtok,
+                                          r.total_len):
+                self.scheduler.requeue(r)
+                self.decoding.remove(r)
+                self.pool.free_table(r.table)
+                done_any = True
+                continue
+            r.output_tokens.append(nxt)
+            r.total_len += 1
+            if len(r.output_tokens) >= r.max_new_tokens:
+                r.state = State.DONE
+                r.t_done = self.clock
+                self.stats.completed += 1
+                self.decoding.remove(r)
+                self.pool.free_table(r.table)
+                done_any = True
+        if done_any:
+            self._dcache = None
+
+    def _extract_slot_kv(self, batch_idx: int, slot: int):
+        cfg = self.cfg
+        P, G = len(cfg.pattern), cfg.n_groups
+        L = cfg.num_layers
+        hkv, dh = cfg.num_kv_heads, cfg.head_dim_
+        k = np.zeros((L, hkv, dh), np.float32)
+        v = np.zeros((L, hkv, dh), np.float32)
+        for p in range(P):
+            kk = np.asarray(self._dcache["groups"][p]["k"]
+                            [:, batch_idx, slot])
+            vv = np.asarray(self._dcache["groups"][p]["v"]
+                            [:, batch_idx, slot])
+            for g in range(G):
+                k[g * P + p] = kk[g]
+                v[g * P + p] = vv[g]
+        for i in range(cfg.n_tail):
+            k[G * P + i] = np.asarray(
+                self._dcache["tail"][i]["k"][batch_idx, slot])
+            v[G * P + i] = np.asarray(
+                self._dcache["tail"][i]["v"][batch_idx, slot])
+        return k, v
+
+    # ---- workload driver ------------------------------------------------------
+    def run(self, requests: Sequence[Request],
+            max_iters: int = 1_000_000) -> EngineStats:
+        pending = sorted(requests, key=lambda r: r.arrival_time)
+        i = 0
+        iters = 0
+        while (i < len(pending) or self.scheduler.queue or self.decoding) \
+                and iters < max_iters:
+            iters += 1
+            while i < len(pending) and \
+                    pending[i].arrival_time <= self.clock:
+                self.submit(pending[i])
+                i += 1
+            if not self.step():
+                if i < len(pending):     # idle: jump to next arrival
+                    self.clock = max(self.clock, pending[i].arrival_time)
+                else:
+                    break
+        self.stats.clock = self.clock
+        self.stats.failed = sum(1 for r in requests
+                                if r.state == State.FAILED)
+        return self.stats

@@ -1,0 +1,132 @@
+"""Paged KV block manager (PagedAttention-style, 16-token blocks).
+
+The pool owns [L, num_blocks, block, Hkv, D] K/V arenas plus a free list
+and per-block refcounts. Chunk-cache injections can share blocks across
+requests (copy-on-write on the recompute path). Admission control in the
+scheduler keys off ``free_blocks``; the decode path gathers a request's
+block table into a dense view when the decode batch is (re)built.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class BlockTable:
+    blocks: List[int] = field(default_factory=list)
+    length: int = 0                      # tokens used
+
+
+class KVPool:
+    def __init__(self, num_layers: int, kv_heads: int, head_dim: int,
+                 num_blocks: int, block_size: int = 16,
+                 dtype=np.float32):
+        self.L = num_layers
+        self.block_size = block_size
+        self.num_blocks = num_blocks
+        self.k = np.zeros((num_layers, num_blocks, block_size, kv_heads,
+                           head_dim), dtype)
+        self.v = np.zeros_like(self.k)
+        self.pos = np.full((num_blocks, block_size), -1, np.int32)
+        self.refs = np.zeros(num_blocks, np.int32)
+        self.free: List[int] = list(range(num_blocks - 1, -1, -1))
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self.free)
+
+    def blocks_needed(self, tokens: int) -> int:
+        return -(-tokens // self.block_size)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        if n > len(self.free):
+            return None
+        out = [self.free.pop() for _ in range(n)]
+        for b in out:
+            self.refs[b] = 1
+        return out
+
+    def share(self, blocks: List[int]):
+        for b in blocks:
+            self.refs[b] += 1
+
+    def release(self, blocks: List[int]):
+        for b in blocks:
+            self.refs[b] -= 1
+            if self.refs[b] == 0:
+                self.pos[b] = -1
+                self.free.append(b)
+
+    # ---- IO ----------------------------------------------------------------
+    def write_prefill(self, table: BlockTable, k_layers: np.ndarray,
+                      v_layers: np.ndarray, pos: np.ndarray) -> bool:
+        """Copy [L,S,...] prefill KV into the table's blocks (allocating)."""
+        S = k_layers.shape[1]
+        need = self.blocks_needed(S)
+        extra = need - len(table.blocks)
+        if extra > 0:
+            got = self.alloc(extra)
+            if got is None:
+                return False
+            table.blocks.extend(got)
+        bs = self.block_size
+        for i in range(need):
+            s0, s1 = i * bs, min(S, (i + 1) * bs)
+            b = table.blocks[i]
+            self.k[:, b, :s1 - s0] = k_layers[:, s0:s1]
+            self.v[:, b, :s1 - s0] = v_layers[:, s0:s1]
+            self.pos[b, :s1 - s0] = pos[s0:s1]
+        table.length = S
+        return True
+
+    def append_token(self, table: BlockTable, k_tok: np.ndarray,
+                     v_tok: np.ndarray, pos: int) -> bool:
+        """k_tok/v_tok [L, Hkv, D]: append one decoded token's KV."""
+        idx = table.length
+        bi, off = divmod(idx, self.block_size)
+        if bi >= len(table.blocks):
+            got = self.alloc(1)
+            if got is None:
+                return False
+            table.blocks.extend(got)
+        b = table.blocks[bi]
+        if self.refs[b] > 1:             # copy-on-write
+            nb = self.alloc(1)
+            if nb is None:
+                return False
+            self.k[:, nb[0]] = self.k[:, b]
+            self.v[:, nb[0]] = self.v[:, b]
+            self.pos[nb[0]] = self.pos[b]
+            self.release([b])
+            table.blocks[bi] = nb[0]
+            b = nb[0]
+        self.k[:, b, off] = k_tok
+        self.v[:, b, off] = v_tok
+        self.pos[b, off] = pos
+        table.length = idx + 1
+        return True
+
+    def gather(self, table: BlockTable, pad_to: int):
+        """Block table -> dense [L, pad_to, Hkv, D] view (+ pos [pad_to])."""
+        bs = self.block_size
+        n = self.blocks_needed(max(table.length, 1))
+        ids = np.asarray(table.blocks[:n], np.int64)
+        k = self.k[:, ids].reshape(self.L, n * bs, *self.k.shape[3:])
+        v = self.v[:, ids].reshape(self.L, n * bs, *self.v.shape[3:])
+        pos = self.pos[ids].reshape(n * bs).copy()
+        pos[table.length:] = -1
+        S = n * bs
+        if S < pad_to:
+            padw = ((0, 0), (0, pad_to - S), (0, 0), (0, 0))
+            k = np.pad(k, padw)
+            v = np.pad(v, padw)
+            pos = np.pad(pos, (0, pad_to - S), constant_values=-1)
+        return k[:, :pad_to], v[:, :pad_to], pos[:pad_to]
+
+    def free_table(self, table: BlockTable):
+        self.release(table.blocks)
+        table.blocks = []
+        table.length = 0

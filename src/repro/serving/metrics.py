@@ -1,0 +1,52 @@
+"""Quality metrics (paper §5.1.3): ROUGE-L F1 and Jaccard similarity over
+token sequences, plus deviation measures used in Figs. 7/12/15."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+
+def _lcs(a: Sequence[int], b: Sequence[int]) -> int:
+    m, n = len(a), len(b)
+    if m == 0 or n == 0:
+        return 0
+    prev = np.zeros(n + 1, np.int32)
+    for i in range(1, m + 1):
+        cur = np.zeros(n + 1, np.int32)
+        ai = a[i - 1]
+        for j in range(1, n + 1):
+            cur[j] = prev[j - 1] + 1 if ai == b[j - 1] else \
+                max(prev[j], cur[j - 1])
+        prev = cur
+    return int(prev[n])
+
+
+def rouge_l_f1(candidate: Sequence[int], reference: Sequence[int]) -> float:
+    l = _lcs(list(candidate), list(reference))
+    if l == 0:
+        return 0.0
+    p = l / len(candidate)
+    r = l / len(reference)
+    return 2 * p * r / (p + r)
+
+
+def jaccard(candidate: Sequence[int], reference: Sequence[int]) -> float:
+    a, b = set(candidate), set(reference)
+    if not a and not b:
+        return 1.0
+    return len(a & b) / max(1, len(a | b))
+
+
+def token_agreement(candidate: Sequence[int],
+                    reference: Sequence[int]) -> float:
+    n = min(len(candidate), len(reference))
+    if n == 0:
+        return 0.0
+    return float(np.mean([candidate[i] == reference[i] for i in range(n)]))
+
+
+def relative_deviation(a: np.ndarray, b: np.ndarray) -> float:
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    return float(np.linalg.norm(a - b) / (np.linalg.norm(b) + 1e-12))

@@ -1,0 +1,60 @@
+"""Request lifecycle for the serving engine."""
+from __future__ import annotations
+
+import enum
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+from repro.serving.kvpool import BlockTable
+
+
+class State(enum.Enum):
+    QUEUED = "queued"
+    PREFILLING = "prefilling"
+    DECODING = "decoding"
+    DONE = "done"
+    FAILED = "failed"
+
+
+@dataclass
+class Request:
+    rid: int
+    system_tokens: np.ndarray
+    chunk_tokens: List[np.ndarray]
+    question_tokens: np.ndarray
+    max_new_tokens: int = 32
+    arrival_time: float = 0.0            # workload clock (seconds)
+    # --- engine state ---
+    state: State = State.QUEUED
+    table: BlockTable = field(default_factory=BlockTable)
+    output_tokens: List[int] = field(default_factory=list)
+    total_len: int = 0
+    # --- timings ---
+    t_enqueued: Optional[float] = None
+    t_prefill_start: Optional[float] = None
+    t_first_token: Optional[float] = None
+    t_done: Optional[float] = None
+    # --- counters ---
+    prefill_tokens_computed: int = 0
+    prefill_tokens_total: int = 0
+    cache_hits: int = 0
+    load_seconds_modeled: float = 0.0
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.t_first_token is None or self.t_enqueued is None:
+            return None
+        return self.t_first_token - self.t_enqueued
+
+    @property
+    def e2e_latency(self) -> Optional[float]:
+        if self.t_done is None or self.t_enqueued is None:
+            return None
+        return self.t_done - self.t_enqueued
+
+    @property
+    def finished(self) -> bool:
+        return self.state in (State.DONE, State.FAILED)

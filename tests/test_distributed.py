@@ -1,0 +1,172 @@
+"""Distribution-layer tests: sharding rule resolution, ZeRO-1 specs,
+elastic checkpoint resharding, and a small-mesh dry-run compile — all in
+subprocesses where fake device counts are needed."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as SH
+
+
+def test_logical_spec_resolution():
+    rules = {"batch": "data", "heads": "model", "mlp": "model"}
+    with SH.axis_rules(rules):
+        assert SH.logical_spec(("batch", None, "heads")) == \
+            P("data", None, "model")
+        # conflict: model used twice -> second occurrence unconstrained
+        assert SH.logical_spec(("heads", "mlp")) == P("model")
+    assert SH.logical_spec(("batch",)) == P()    # no rules -> no-op
+
+
+def test_zero1_spec():
+    spec = P(None, "model")
+    out = SH.zero1_spec(spec, (64, 32), ("data",), 16)
+    assert out == P("data", "model")
+    # already data-sharded -> unchanged
+    assert SH.zero1_spec(P("data"), (64,), ("data",), 16) == P("data")
+    # indivisible -> unchanged
+    assert SH.zero1_spec(P(), (7, 5), ("data",), 16) == P()
+
+
+def test_make_rules_divisibility():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    from repro.configs import get_config
+    r24 = SH.make_rules(FakeMesh(), get_config("llama3.2-3b"))
+    assert r24["heads"] is None and r24["q_head_dim"] == "model"
+    r64 = SH.make_rules(FakeMesh(), get_config("deepseek-67b"))
+    assert r64["heads"] == "model"
+    assert r64["kv_heads"] is None and r64["kv_head_dim"] == "model"
+    r32 = SH.make_rules(FakeMesh(), get_config("deepseek-7b"))
+    assert r32["kv_heads"] == "model"   # kv=32 divides 16
+
+
+def _run(code: str, timeout=900):
+    return subprocess.run([sys.executable, "-c", code], cwd=os.getcwd(),
+                          capture_output=True, text=True, timeout=timeout)
+
+
+def test_small_mesh_dryrun_compiles():
+    """2x4 debug mesh: lower+compile train & decode for a tiny arch with
+    the SAME sharding machinery the 512-chip dry-run uses."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src")
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import get_tiny
+from repro.distributed import sharding as SH
+from repro.launch.mesh import make_debug_mesh, data_axes, dp_size
+from repro.models import model as M
+from repro.training.steps import make_train_step, init_train_state, TrainState
+from repro.training.optimizer import AdamWConfig
+
+mesh = make_debug_mesh((2, 4))
+cfg = get_tiny("llama3-8b").replace(num_heads=4, num_kv_heads=4)
+rules = SH.make_rules(mesh, cfg)
+with mesh, SH.axis_rules(rules):
+    pspecs = SH.spec_tree(M.param_axes(cfg))
+    pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                          is_leaf=lambda x: isinstance(x, P))
+    state = jax.eval_shape(lambda k: init_train_state(cfg, k),
+                           jax.random.PRNGKey(0))
+    def osh(spec, leaf):
+        return NamedSharding(mesh, SH.zero1_spec(
+            spec, leaf.shape, data_axes(mesh), dp_size(mesh)))
+    sshard = TrainState(
+        step=NamedSharding(mesh, P()), params=pshard,
+        opt={"m": jax.tree.map(osh, pspecs, state.opt["m"],
+                               is_leaf=lambda x: isinstance(x, P)),
+             "v": jax.tree.map(osh, pspecs, state.opt["v"],
+                               is_leaf=lambda x: isinstance(x, P)),
+             "count": NamedSharding(mesh, P())})
+    batch = {"tokens": jax.ShapeDtypeStruct((4, 64), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((4, 64), jnp.int32)}
+    bsh = {k: NamedSharding(mesh, P("data")) for k in batch}
+    c = jax.jit(make_train_step(cfg, AdamWConfig(), accum=2),
+                in_shardings=(sshard, bsh)).lower(state, batch).compile()
+    assert c.memory_analysis() is not None
+print("TRAIN_OK")
+"""
+    r = _run(code)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "TRAIN_OK" in r.stdout
+
+
+def test_elastic_checkpoint_reshard():
+    """Save on a 1x8 mesh, restore onto 2x4 — restart-time elasticity."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, tempfile; sys.path.insert(0, "src")
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch.mesh import make_debug_mesh
+from repro.training import checkpoint as ckpt
+
+d = tempfile.mkdtemp()
+mesh1 = make_debug_mesh((1, 8), ("data", "model"))
+x = jax.device_put(np.arange(64, dtype=np.float32).reshape(8, 8),
+                   NamedSharding(mesh1, P(None, "model")))
+ckpt.save({"x": x}, d, 1)
+mesh2 = make_debug_mesh((2, 4), ("data", "model"))
+sh = {"x": NamedSharding(mesh2, P("data", "model"))}
+got = ckpt.restore(d, shardings=sh)
+assert got["x"].sharding.mesh.shape == mesh2.shape
+np.testing.assert_array_equal(np.asarray(got["x"]), np.asarray(x))
+print("ELASTIC_OK")
+"""
+    r = _run(code)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "ELASTIC_OK" in r.stdout
+
+
+def test_hlo_analyzer_on_synthetic_module():
+    from repro.launch import roofline as RL
+    hlo = """HloModule test, is_scheduled=true
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %a = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %d = f32[8,8]{1,0} dot(%a, %a), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8]{1,0} all-reduce(%d), replica_groups={}, to_apply=%add
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %t = (s32[], f32[8,8]) tuple(%i, %ar)
+}
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (x: f32[8,8]) -> f32[8,8] {
+  %x = f32[8,8]{1,0} parameter(0)
+  %init = (s32[], f32[8,8]) tuple(%zero, %x)
+  %w = (s32[], f32[8,8]) while(%init), condition=%cond, body=%body
+  ROOT %r = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+    hc = RL.analyze_hlo(hlo)
+    # dot: 2*64*8 = 1024 flops, x10 trips
+    assert hc.flops == pytest.approx(1024 * 10)
+    assert hc.coll_bytes["all-reduce"] == pytest.approx(8 * 8 * 4 * 10)
+
+
+def test_roofline_terms_math():
+    from repro.launch import roofline as RL
+    t = RL.roofline_terms(flops_device=197e12, hbm_bytes_device=819e9,
+                          coll_bytes_device=0.0,
+                          model_flops_total=197e12 * 256, chips=256)
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(1.0)
+    assert t.dominant in ("compute", "memory")
+    assert t.useful_ratio == pytest.approx(1.0)

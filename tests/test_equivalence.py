@@ -1,0 +1,117 @@
+"""Numerical equivalence properties of the execution modes — the
+correctness backbone of chunk-cache reuse."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_tiny
+from repro.models import model as M
+from repro.models.layers import apply_rope
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_tiny("llama3-8b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_partial_with_cached_chunk_exact(setup, rng):
+    """KV of a chunk captured from a full prefill, re-injected, plus
+    active-token computation == full prefill, exactly (paper §3.4.3)."""
+    cfg, params = setup
+    B, S = 1, 96
+    tok = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)))
+    full = M.prefill(cfg, params, tokens=tok)
+    cache = M.init_cache(cfg, B, S)
+    g = {}
+    for name in ("k", "v", "pos"):
+        g[name] = cache["groups"][0][name].at[:, :, 32:64].set(
+            full.cache["groups"][0][name][:, :, 32:64])
+    cache = {"groups": [g], "tail": []}
+    act = np.concatenate([np.arange(0, 32), np.arange(64, 96)])
+    part = M.partial_prefill(cfg, params, tok[:, act],
+                             jnp.asarray(act[None], jnp.int32), cache)
+    np.testing.assert_allclose(np.asarray(part.logits),
+                               np.asarray(full.logits)[:, act],
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(part.cache["groups"][0]["k"]),
+                               np.asarray(full.cache["groups"][0]["k"]),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_rope_store_roundtrip_exact(setup, rng):
+    """remove-RoPE -> store -> re-apply at the SAME position == original
+    (the §4 RPE management identity)."""
+    cfg, params = setup
+    x = jnp.asarray(rng.normal(size=(4, 16, 2, 32)), jnp.float32)
+    pos = jnp.arange(16)
+    y = apply_rope(apply_rope(x, pos, cfg.rope_theta, inverse=True),
+                   pos, cfg.rope_theta)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_rope_reposition(setup, rng):
+    """K stored without RoPE and re-applied at a NEW position equals K
+    computed directly at that position."""
+    cfg, params = setup
+    k_raw = jnp.asarray(rng.normal(size=(1, 8, 2, 32)), jnp.float32)
+    pos_a = jnp.arange(8)
+    pos_b = jnp.arange(8) + 40
+    direct = apply_rope(k_raw, pos_b, cfg.rope_theta)
+    moved = apply_rope(
+        apply_rope(apply_rope(k_raw, pos_a, cfg.rope_theta),
+                   pos_a, cfg.rope_theta, inverse=True),
+        pos_b, cfg.rope_theta)
+    np.testing.assert_allclose(np.asarray(moved), np.asarray(direct),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_decode_matches_extended_prefill(setup, rng):
+    cfg, params = setup
+    B, S = 2, 48
+    tok = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)))
+    ext = jnp.concatenate([tok, jnp.asarray([[3], [7]])], 1)
+    full = M.prefill(cfg, params, tokens=ext)
+    pre = M.prefill(cfg, params, tokens=tok, cache_len=S + 4)
+    dec = M.decode_step(cfg, params, jnp.asarray([3, 7]),
+                        jnp.full((B,), S, jnp.int32), pre.cache)
+    np.testing.assert_allclose(np.asarray(dec.logits[:, 0]),
+                               np.asarray(full.logits[:, -1]),
+                               rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("arch", ["gemma3-4b", "recurrentgemma-9b",
+                                  "mamba2-370m", "granite-moe-1b-a400m"])
+def test_prefill_matches_train_forward(arch, rng):
+    """The cached-prefill path must not perturb the math (incl. ring
+    buffers, recurrences, MoE)."""
+    cfg = get_tiny(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(2))
+    B, S = 2, 64
+    tok = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)))
+    train = M.forward(cfg, params, tokens=tok, mode="train")
+    pre = M.prefill(cfg, params, tokens=tok, cache_len=S + 8)
+    np.testing.assert_allclose(np.asarray(pre.logits),
+                               np.asarray(train.logits),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_flash_attention_matches_dense(rng):
+    from repro.models.layers import (gqa_attend_dense, gqa_attend_flash,
+                                     position_mask)
+    B, Tq, Tk, H, Hkv, D = 2, 40, 56, 4, 2, 32
+    q = jnp.asarray(rng.normal(size=(B, Tq, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Tk, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Tk, Hkv, D)), jnp.float32)
+    qpos = jnp.asarray(np.sort(rng.choice(Tk, (B, Tq))), jnp.int32)
+    kpos = jnp.broadcast_to(jnp.arange(Tk), (B, Tk))
+    for window in (0, 24):
+        dense = gqa_attend_dense(q, k, v,
+                                 position_mask(qpos, kpos, window))[0]
+        flash = gqa_attend_flash(q, k, v, qpos, kpos, window,
+                                 block_q=16, block_k=16)
+        np.testing.assert_allclose(np.asarray(flash), np.asarray(dense),
+                                   rtol=3e-5, atol=3e-5)

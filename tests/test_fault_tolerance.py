@@ -1,0 +1,64 @@
+"""Launcher-level fault tolerance: kill the training process mid-run,
+restart with --resume, verify it continues from the checkpoint — the
+supervisor contract described in launch/train.py."""
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import pytest
+
+
+def _train_cmd(ckpt_dir, steps):
+    return [sys.executable, "-m", "repro.launch.train",
+            "--arch", "llama3-8b", "--tiny", "--steps", str(steps),
+            "--seq-len", "32", "--global-batch", "2",
+            "--ckpt-dir", ckpt_dir, "--ckpt-every", "5",
+            "--log-every", "5", "--resume"]
+
+
+def test_kill_and_resume(tmp_path):
+    env = {**os.environ, "PYTHONPATH": "src"}
+    ckpt = str(tmp_path / "ckpt")
+    # run 1: start training, kill after the first checkpoint lands
+    p = subprocess.Popen(_train_cmd(ckpt, 40), env=env, cwd=os.getcwd(),
+                         stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+                         text=True)
+    deadline = time.time() + 240
+    from repro.training import checkpoint as ck
+    while time.time() < deadline:
+        if ck.latest_step(ckpt) is not None:
+            break
+        time.sleep(0.5)
+    assert ck.latest_step(ckpt) is not None, "no checkpoint before timeout"
+    p.send_signal(signal.SIGKILL)
+    p.wait(timeout=30)
+    step_after_kill = ck.latest_step(ckpt)
+
+    # run 2 (the supervisor restart): must resume and reach the target
+    out = subprocess.run(_train_cmd(ckpt, step_after_kill + 5), env=env,
+                         cwd=os.getcwd(), capture_output=True, text=True,
+                         timeout=300)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-1000:]
+    assert f"resumed from step {step_after_kill}" in out.stdout
+    assert ck.latest_step(ckpt) == step_after_kill + 5
+
+
+def test_watchdog_exits_nonzero_on_stall():
+    """A stalled step must turn into a fast non-zero exit (code 42) so a
+    supervisor restarts the job instead of burning cluster-hours."""
+    code = r"""
+import sys, time
+sys.path.insert(0, "src")
+from repro.launch.train import Watchdog
+dog = Watchdog(timeout_s=1.0)
+dog.start()
+time.sleep(10)   # simulate a wedged collective: never beats
+print("should not reach here")
+"""
+    out = subprocess.run([sys.executable, "-c", code], cwd=os.getcwd(),
+                         capture_output=True, text=True, timeout=120)
+    assert out.returncode == 42
+    assert "WATCHDOG" in out.stderr
+    assert "should not reach here" not in out.stdout

@@ -1,0 +1,85 @@
+"""Paged KV pool invariants (hypothesis state-machine style)."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.serving.kvpool import BlockTable, KVPool
+
+
+def _pool(blocks=16):
+    return KVPool(num_layers=2, kv_heads=2, head_dim=4, num_blocks=blocks,
+                  block_size=4)
+
+
+def test_alloc_free_refcount():
+    p = _pool(8)
+    a = p.alloc(3)
+    assert len(a) == 3 and p.free_blocks == 5
+    p.share(a)
+    p.release(a)                      # refcount 2 -> 1, still held
+    assert p.free_blocks == 5
+    p.release(a)
+    assert p.free_blocks == 8
+    assert p.alloc(9) is None         # over-capacity alloc fails cleanly
+
+
+def test_write_gather_roundtrip(rng):
+    p = _pool(8)
+    t = BlockTable()
+    S = 10
+    k = rng.normal(size=(2, S, 2, 4)).astype(np.float32)
+    v = rng.normal(size=(2, S, 2, 4)).astype(np.float32)
+    pos = np.arange(S, dtype=np.int32)
+    assert p.write_prefill(t, k, v, pos)
+    gk, gv, gpos = p.gather(t, pad_to=16)
+    np.testing.assert_array_equal(gk[:, :S], k)
+    np.testing.assert_array_equal(gv[:, :S], v)
+    np.testing.assert_array_equal(gpos[:S], pos)
+    assert (gpos[S:] == -1).all()
+
+
+def test_append_token_and_cow(rng):
+    p = _pool(8)
+    t = BlockTable()
+    k = rng.normal(size=(2, 3, 2, 4)).astype(np.float32)
+    p.write_prefill(t, k, k, np.arange(3, dtype=np.int32))
+    shared = list(t.blocks)
+    p.share(shared)                   # another request shares the block
+    before = p.k[:, shared[0]].copy()
+    ktok = np.ones((2, 2, 4), np.float32)
+    assert p.append_token(t, ktok, ktok, pos=3)   # lands inside the block
+    # copy-on-write: table moved to a fresh block; shared one untouched
+    assert t.blocks[0] != shared[0]
+    assert p.refs[shared[0]] == 1
+    np.testing.assert_array_equal(p.k[:, shared[0]], before)
+    gk, _, gpos = p.gather(t, pad_to=8)
+    np.testing.assert_array_equal(gk[:, 3], ktok)
+    assert gpos[3] == 3
+
+
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "free"]),
+                          st.integers(1, 5)), max_size=30))
+def test_pool_accounting_invariant(ops):
+    p = _pool(12)
+    held = []
+    for op, n in ops:
+        if op == "alloc":
+            got = p.alloc(n)
+            if got is not None:
+                held.append(got)
+        elif held:
+            p.release(held.pop())
+        used = sum(len(h) for h in held)
+        assert p.free_blocks == 12 - used
+        assert all(p.refs[b] == 1 for h in held for b in h)
+
+
+def test_free_table_releases_everything(rng):
+    p = _pool(8)
+    t = BlockTable()
+    k = rng.normal(size=(2, 20, 2, 4)).astype(np.float32)
+    p.write_prefill(t, k, k, np.arange(20, dtype=np.int32))
+    assert p.free_blocks == 3
+    p.free_table(t)
+    assert p.free_blocks == 8
+    assert t.length == 0
