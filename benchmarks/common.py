@@ -85,7 +85,9 @@ def greedy_continue(cfg, params, res, n_tokens: int) -> List[int]:
     from repro.core.prefill import decode_fn
     step = decode_fn(cfg)
     S = res.k_layers.shape[1]
-    pad = 8
+    # k_layers is exact-length (total_len); leave room for every decode
+    # write plus slack so no token scatter lands out of bounds
+    pad = max(8, res.total_len - S + n_tokens + 8)
     k = np.pad(res.k_layers, ((0, 0), (0, pad), (0, 0), (0, 0)))
     v = np.pad(res.v_layers, ((0, 0), (0, pad), (0, 0), (0, 0)))
     pos = np.pad(res.pos_layout, (0, pad), constant_values=-1)

@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# Tier-1 CI gate: run the full suite with the src layout on PYTHONPATH.
+#
+# Policy (see src/repro/compat.py): the suite must COLLECT with zero
+# errors and report zero failures on the pinned toolchain even when
+# optional dev-deps (hypothesis) are absent — property tests skip, they
+# never break collection. pytest exits non-zero on collection errors or
+# failures, and `-p no:cacheprovider` keeps the tree clean for CI.
+set -uo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+log="$(mktemp)"
+python -m pytest -q -p no:cacheprovider "$@" 2>&1 | tee "$log"
+status=${PIPESTATUS[0]}
+
+if grep -qiE "error(s)? during collection|errors while collecting" "$log"; then
+    echo "CI: collection errors detected -> FAIL"
+    status=1
+fi
+
+summary=$(grep -E "[0-9]+ (passed|failed|skipped|error)" "$log" | tail -1)
+echo "CI summary: ${summary:-no summary line found}"
+echo "CI exit status: $status"
+rm -f "$log"
+exit "$status"

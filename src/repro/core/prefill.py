@@ -47,11 +47,15 @@ def _head_fn(cfg):
 @functools.lru_cache(maxsize=None)
 def _window_fn(cfg):
     @functools.partial(jax.jit,
-                       static_argnames=("g0", "g1", "tail", "collect"))
-    def fn(params, h, positions, chunk_ids, cache, g0, g1, tail, collect):
+                       static_argnames=("g0", "g1", "tail", "collect",
+                                        "attn_impl"))
+    def fn(params, h, positions, chunk_ids, cache, slots, seg_ids, kv_seg,
+           pack_qidx, pack_kidx, g0, g1, tail, collect, attn_impl="dense"):
         ctx = M.Ctx(cfg=cfg, mode="partial", positions=positions,
                     chunk_ids=chunk_ids, collect_stats=collect,
-                    attn_impl="dense")
+                    attn_impl=attn_impl, slots=slots, seg_ids=seg_ids,
+                    kv_seg=kv_seg, pack_qidx=pack_qidx,
+                    pack_kidx=pack_kidx)
         return M.run_stack(cfg, params, h, ctx, cache=cache,
                            collect_stats=collect, g0=g0, g1=g1, tail=tail)
     return fn
@@ -186,79 +190,158 @@ class CacheCraftExecutor:
     def process(self, system_tokens, chunks: Sequence[np.ndarray],
                 question_tokens, collect_stats: bool = True
                 ) -> PrefillResult:
+        """Single-request convenience wrapper over ``process_batch``."""
+        return self.process_batch(
+            [(system_tokens, chunks, question_tokens)],
+            collect_stats=collect_stats)[0]
+
+    def process_batch(self, requests: Sequence[tuple],
+                      collect_stats: bool = True) -> List[PrefillResult]:
+        """Packed multi-request partial prefill.
+
+        ``requests`` is a sequence of (system_tokens, chunk_tokens,
+        question_tokens) triples. All requests' recompute tokens execute
+        as ONE shape-bucketed jitted windowed pass: request ``r``'s
+        prompt occupies layout slots ``[off_r, off_r + total_len_r)`` of
+        the packed KV, every token keeps its request-local RoPE position
+        (per-segment RoPE offsets), and a per-token segment id threaded
+        through the attention mask confines attention to same-request
+        keys. Focus-tracker early termination (Algorithm 1) runs per
+        request within the packed batch. Returns one PrefillResult per
+        request, in input order."""
+        if not requests:
+            return []
         cfg = self.cfg
         t_start = time.perf_counter()
-        plan = build_plan(
+        plans = [build_plan(
             self.store if self.strategy != "all" else None,
-            system_tokens, chunks, question_tokens,
-            strategy=self.strategy, rng=self.rng,
+            sys_t, chs, q_t, strategy=self.strategy, rng=self.rng,
             force_recompute_fraction=self.force_recompute_fraction)
+            for sys_t, chs, q_t in requests]
+        R = len(plans)
 
         L = cfg.num_layers
         hkv, dh = cfg.num_kv_heads, cfg.head_dim_
-        S = _bucket(plan.total_len, self.bucket)
+        offs = np.concatenate(
+            [[0], np.cumsum([p.total_len for p in plans])]).astype(np.int64)
+        # totals bucket coarsens under packing so the jit cache stays
+        # small when many different request combinations get packed
+        # together (single-request buckets are unchanged); the coarse
+        # padding only costs linear ops — attention runs block-diagonal
+        tot_bucket = self.bucket if R == 1 else \
+            max(8 * self.bucket, self.bucket * R)
+        blk_bucket = self.bucket if R == 1 else 2 * self.bucket
+        S = _bucket(int(offs[-1]), tot_bucket)
         k_np = np.zeros((L, S, hkv, dh), np.float32)
         v_np = np.zeros((L, S, hkv, dh), np.float32)
         pos_layout = np.full(S, -1, np.int32)
-
-        # --- inject cached chunk KV (RoPE re-applied at new positions) -----
-        load_modeled = load_measured = 0.0
-        tier_hits: Dict[str, int] = {"hbm": 0, "cpu": 0, "ssd": 0}
-        for d in plan.decisions:
-            if not d.is_hit:
-                continue
-            kv, info = self.store.get_kv(d.variant)
-            if info is not None:
-                load_modeled += info.seconds_modeled
-                load_measured += info.seconds_measured
-                tier_hits[info.tier] += 1
-            span = np.arange(d.seg.start, d.seg.end, dtype=np.int32)
-            kc = jnp.asarray(np.asarray(kv["k"], np.float32))
-            rope_pos = span if self.fix_rpe else \
-                (np.arange(d.seg.length) + d.variant.scores.orig_start)
-            kc = np.asarray(apply_rope(kc, jnp.asarray(rope_pos),
-                                       cfg.rope_theta))
-            k_np[:, d.seg.start:d.seg.end] = kc
-            v_np[:, d.seg.start:d.seg.end] = np.asarray(kv["v"], np.float32)
-            pos_layout[d.seg.start:d.seg.end] = span if self.fix_causality \
-                else (np.arange(d.seg.length) + d.variant.scores.orig_start)
-            self.store.record_use(d.variant, max(d.cfo, 1e-3))
-
-        # key-side (layout) stat ids for the model's mass statistic
+        seg_layout = np.full(S, -1, np.int32)
         layout_sid = np.full(S, cfg.stats_chunks - 1, np.int32)
-        for seg in plan.segments:
-            layout_sid[seg.start:seg.end] = seg.stat_id
-        layout_sid_j = jnp.asarray(layout_sid)[None]
 
-        # --- active rows (padded to bucket; row_map -> original index) -----
-        n_act = plan.num_active_tokens
-        A = _bucket(n_act, self.bucket)
+        # --- inject cached chunk KV (RoPE re-applied at local positions) ---
+        load_modeled = np.zeros(R)
+        load_measured = np.zeros(R)
+        tier_hits: List[Dict[str, int]] = [
+            {"hbm": 0, "cpu": 0, "ssd": 0} for _ in range(R)]
+        for r, plan in enumerate(plans):
+            off = int(offs[r])
+            for d in plan.decisions:
+                if not d.is_hit:
+                    continue
+                kv, info = self.store.get_kv(d.variant)
+                if info is not None:
+                    load_modeled[r] += info.seconds_modeled
+                    load_measured[r] += info.seconds_measured
+                    tier_hits[r][info.tier] += 1
+                span = np.arange(d.seg.start, d.seg.end, dtype=np.int32)
+                kc = jnp.asarray(np.asarray(kv["k"], np.float32))
+                rope_pos = span if self.fix_rpe else \
+                    (np.arange(d.seg.length) + d.variant.scores.orig_start)
+                kc = np.asarray(apply_rope(kc, jnp.asarray(rope_pos),
+                                           cfg.rope_theta))
+                k_np[:, off + d.seg.start:off + d.seg.end] = kc
+                v_np[:, off + d.seg.start:off + d.seg.end] = \
+                    np.asarray(kv["v"], np.float32)
+                pos_layout[off + d.seg.start:off + d.seg.end] = \
+                    span if self.fix_causality \
+                    else (np.arange(d.seg.length) +
+                          d.variant.scores.orig_start)
+                self.store.record_use(d.variant, max(d.cfo, 1e-3))
+            # key-side (layout) stat ids for the model's mass statistic
+            for seg in plan.segments:
+                layout_sid[off + seg.start:off + seg.end] = seg.stat_id
+            seg_layout[off:off + plan.total_len] = r
+        layout_sid_j = jnp.asarray(layout_sid)[None]
+        kv_seg_j = jnp.asarray(seg_layout)[None]
+
+        # --- active rows (padded to bucket; row_map -> packed index) -------
+        n_acts = [p.num_active_tokens for p in plans]
+        act_offs = np.concatenate([[0], np.cumsum(n_acts)]).astype(np.int64)
+        n_act_total = int(act_offs[-1])
+        A = _bucket(n_act_total, tot_bucket)
         act_tok = np.zeros(A, np.int32)
         act_pos = np.full(A, -1, np.int32)
+        act_slot = np.full(A, -1, np.int32)
+        act_seg = np.full(A, -1, np.int32)
         act_sid = np.full(A, cfg.stats_chunks - 1, np.int32)
-        act_tok[:n_act] = plan.active_tokens
-        act_pos[:n_act] = plan.active_positions
-        act_sid[:n_act] = plan.active_stat_ids
         row_map = np.full(A, -1, np.int64)
-        row_map[:n_act] = np.arange(n_act)
+        for r, plan in enumerate(plans):
+            a0, a1 = int(act_offs[r]), int(act_offs[r + 1])
+            act_tok[a0:a1] = plan.active_tokens
+            act_pos[a0:a1] = plan.active_positions
+            act_slot[a0:a1] = plan.active_positions + int(offs[r])
+            act_seg[a0:a1] = r
+            act_sid[a0:a1] = plan.active_stat_ids
+            row_map[a0:a1] = np.arange(a0, a1)
 
-        hit_ids = {d.seg.stat_id for d in plan.decisions
-                   if d.is_hit and len(d.recompute_idx) > 0}
-        tracker = FocusTracker(len(plan.decisions), w=self.focus_w) \
-            if (self.use_focus and hit_ids - {0}) else None
+        hit_ids = [{d.seg.stat_id for d in p.decisions
+                    if d.is_hit and len(d.recompute_idx) > 0}
+                   for p in plans]
+        trackers = [FocusTracker(len(plans[r].decisions), w=self.focus_w)
+                    if (self.use_focus and hit_ids[r] - {0}) else None
+                    for r in range(R)]
         P, G = len(cfg.pattern), cfg.n_groups
-        w_groups = max(1, -(-self.focus_w // P)) if tracker else max(1, G)
+        w_groups = max(1, -(-self.focus_w // P)) \
+            if any(t is not None for t in trackers) else max(1, G)
 
         h = self._embed(self.params, jnp.asarray(act_tok)[None])
         positions = jnp.asarray(act_pos)[None]
+        slots = jnp.asarray(act_slot)[None]
+        seg_ids = jnp.asarray(act_seg)[None]
         sid_np = act_sid.copy()
+        seg_np = act_seg.copy()
+
+        # block-diagonal gather maps: per-request query rows (recomputed
+        # after focus drops) and KV slots (static layout) so attention
+        # runs on [R, Amax] x [R, Smax] blocks, not the (sum A)(sum S)
+        # cross-request product
+        def _qidx_map():
+            if R == 1:
+                return None
+            rows = [np.where(seg_np == r)[0] for r in range(R)]
+            amax = _bucket(max(max(len(x) for x in rows), 1), blk_bucket)
+            out = np.full((R, amax), -1, np.int64)
+            for r, x in enumerate(rows):
+                out[r, :len(x)] = x
+            return jnp.asarray(out)
+
+        pack_qidx = _qidx_map()
+        pack_kidx = None
+        if R > 1:
+            smax = _bucket(max(p.total_len for p in plans), blk_bucket)
+            kidx = np.full((R, smax), -1, np.int64)
+            for r, plan in enumerate(plans):
+                kidx[r, :plan.total_len] = np.arange(
+                    int(offs[r]), int(offs[r]) + plan.total_len)
+            pack_kidx = jnp.asarray(kidx)
         cache = pack_cache(cfg, k_np, v_np, pos_layout)
-        stats_all = np.zeros((L, n_act, cfg.stats_chunks), np.float32) \
+        stats_all = np.zeros((L, n_act_total, cfg.stats_chunks), np.float32) \
             if collect_stats else None
         kstats_all = np.zeros((L, S), np.float32) if collect_stats else None
-        rows_layers = 0
-        focus_cutoff, focused = None, None
-        chunk_stat_ids = list(range(1, len(plan.decisions)))
+        rows_layers = np.zeros(R, np.int64)
+        focus_cutoff: List[Optional[int]] = [None] * R
+        focused: List[Optional[set]] = [None] * R
+        chunk_stat_ids = [list(range(1, len(p.decisions))) for p in plans]
 
         # window starts: groups in steps of w_groups, then the tail
         starts = list(range(0, G, w_groups)) or [0]
@@ -268,11 +351,13 @@ class CacheCraftExecutor:
             is_last = wi == len(starts) - 1
             h, new_cache, stats, kstats, _ = self._window(
                 self.params, h, positions, layout_sid_j, cache,
+                slots, seg_ids, kv_seg_j, pack_qidx, pack_kidx,
                 g0=g0, g1=g1, tail=is_last and cfg.n_tail > 0,
                 collect=collect_stats)
             nl = (g1 - g0) * P + (cfg.n_tail if is_last else 0)
-            live = int((np.asarray(positions[0]) >= 0).sum())
-            rows_layers += live * nl
+            live_pos = np.asarray(positions[0]) >= 0
+            for r in range(R):
+                rows_layers[r] += int((live_pos & (seg_np == r)).sum()) * nl
             # write back updated cache slices
             for p in range(P):
                 if g1 > g0:
@@ -290,55 +375,85 @@ class CacheCraftExecutor:
                 if kstats is not None and kstats.shape[-1] == S:
                     kstats_all[layer_idx:layer_idx + nl] += \
                         np.asarray(kstats[:, 0])
-                # Algorithm 1 update from question-row mass
-                if tracker and not tracker.converged:
-                    qrows = sid_np == plan.question.stat_id
+                # Algorithm 1 update from question-row mass, per request
+                newly_converged = []
+                for r, tracker in enumerate(trackers):
+                    if tracker is None or tracker.converged:
+                        continue
+                    qrows = (sid_np == plans[r].question.stat_id) & \
+                        (seg_np == r)
                     for li in range(st.shape[0]):
-                        qi = st[li][qrows][:, chunk_stat_ids].sum(0)
-                        full_vec = np.zeros(len(plan.decisions))
-                        full_vec[chunk_stat_ids] = qi
+                        qi = st[li][qrows][:, chunk_stat_ids[r]].sum(0)
+                        full_vec = np.zeros(len(plans[r].decisions))
+                        full_vec[chunk_stat_ids[r]] = qi
                         if tracker.update(full_vec):
                             break
                     if tracker.converged:
-                        focus_cutoff = tracker.cutoff_layer
-                        focused = tracker.focused
-                        unfocused = (hit_ids - {0}) - set(focused)
-                        drop = np.isin(sid_np, list(unfocused)) & \
-                            (np.asarray(positions[0]) >= 0) & \
-                            (sid_np != plan.question.stat_id)
-                        if drop.any() and not is_last:
-                            keep_idx = np.where(~drop & (row_map >= 0))[0]
-                            A2 = _bucket(len(keep_idx), self.bucket)
-                            gather = np.zeros(A2, np.int64)
-                            gather[:len(keep_idx)] = keep_idx
-                            h = jnp.asarray(np.asarray(h)[:, gather])
-                            pos2 = np.asarray(positions[0])[gather]
-                            sid2 = sid_np[gather]
-                            rm2 = row_map[gather]
-                            pos2[len(keep_idx):] = -1
-                            sid2[len(keep_idx):] = cfg.stats_chunks - 1
-                            rm2[len(keep_idx):] = -1
-                            positions = jnp.asarray(pos2)[None]
-                            sid_np = sid2
-                            row_map = rm2
+                        focus_cutoff[r] = tracker.cutoff_layer
+                        focused[r] = tracker.focused
+                        newly_converged.append(r)
+                if newly_converged and not is_last:
+                    drop = np.zeros(sid_np.shape[0], bool)
+                    pos_np = np.asarray(positions[0])
+                    for r in newly_converged:
+                        unfocused = (hit_ids[r] - {0}) - set(focused[r])
+                        if unfocused:
+                            drop |= np.isin(sid_np, list(unfocused)) & \
+                                (seg_np == r) & (pos_np >= 0) & \
+                                (sid_np != plans[r].question.stat_id)
+                    if drop.any():
+                        keep_idx = np.where(~drop & (row_map >= 0))[0]
+                        A2 = _bucket(len(keep_idx), tot_bucket)
+                        gather = np.zeros(A2, np.int64)
+                        gather[:len(keep_idx)] = keep_idx
+                        n_keep = len(keep_idx)
+                        h = jnp.asarray(np.asarray(h)[:, gather])
+                        pos2 = pos_np[gather]
+                        slot2 = np.asarray(slots[0])[gather]
+                        sid2 = sid_np[gather]
+                        seg2 = seg_np[gather]
+                        rm2 = row_map[gather]
+                        pos2[n_keep:] = -1
+                        slot2[n_keep:] = -1
+                        sid2[n_keep:] = cfg.stats_chunks - 1
+                        seg2[n_keep:] = -1
+                        rm2[n_keep:] = -1
+                        positions = jnp.asarray(pos2)[None]
+                        slots = jnp.asarray(slot2)[None]
+                        seg_ids = jnp.asarray(seg2)[None]
+                        sid_np = sid2
+                        seg_np = seg2
+                        row_map = rm2
+                        pack_qidx = _qidx_map()
             layer_idx += nl
 
-        # --- head: logits of the final question token -----------------------
-        lr = int(np.where(row_map == (n_act - 1))[0][0])
-        logits = self._head(self.params, h[:, lr:lr + 1])
-        logits_last = np.asarray(logits[0, 0])
+        # --- head: logits of each request's final question token -----------
+        last_rows = [int(np.where(row_map == int(act_offs[r + 1]) - 1)[0][0])
+                     for r in range(R)]
+        logits = self._head(self.params, h[:, np.asarray(last_rows)])
+        logits_np = np.asarray(logits[0])               # [R, V]
 
         k_fin, v_fin, pos_fin = unpack_cache(cfg, cache)
-        if self.store is not None and collect_stats:
-            self._capture(plan, stats_all, kstats_all, k_fin, v_fin)
-
-        return PrefillResult(
-            plan=plan, logits_last=logits_last, k_layers=k_fin,
-            v_layers=v_fin, pos_layout=pos_fin, total_len=plan.total_len,
-            active_rows_layers=rows_layers, focus_cutoff=focus_cutoff,
-            focused=focused, load_seconds_modeled=load_modeled,
-            load_seconds_measured=load_measured, tier_hits=tier_hits,
-            wall_seconds=time.perf_counter() - t_start)
+        wall = time.perf_counter() - t_start
+        results = []
+        for r, plan in enumerate(plans):
+            off, end = int(offs[r]), int(offs[r]) + plan.total_len
+            k_r = k_fin[:, off:end]
+            v_r = v_fin[:, off:end]
+            p_r = pos_fin[off:end]
+            if self.store is not None and collect_stats:
+                st_r = stats_all[:, int(act_offs[r]):int(act_offs[r + 1])]
+                ks_r = None if kstats_all is None else kstats_all[:, off:end]
+                self._capture(plan, st_r, ks_r, k_r, v_r)
+            results.append(PrefillResult(
+                plan=plan, logits_last=logits_np[r], k_layers=k_r,
+                v_layers=v_r, pos_layout=p_r, total_len=plan.total_len,
+                active_rows_layers=int(rows_layers[r]),
+                focus_cutoff=focus_cutoff[r], focused=focused[r],
+                load_seconds_modeled=float(load_modeled[r]),
+                load_seconds_measured=float(load_measured[r]),
+                tier_hits=tier_hits[r], wall_seconds=wall))
+        return results
 
     # ---- metadata + store update -------------------------------------------
     def _capture(self, plan: InferencePlan, stats, kstats, k_fin, v_fin):

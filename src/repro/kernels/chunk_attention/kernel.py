@@ -26,10 +26,12 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 NEG_INF = -1e30
 
 
-def _kernel(qp_ref, kp_ref, kc_ref, q_ref, k_ref, v_ref,
+def _kernel(qp_ref, kp_ref, kc_ref, qs_ref, ks_ref, q_ref, k_ref, v_ref,
             o_ref, mass_ref, m_s, l_s, acc, massacc, *,
             scale: float, window: int, num_chunks: int):
     j = pl.program_id(2)
@@ -58,6 +60,11 @@ def _kernel(qp_ref, kp_ref, kc_ref, q_ref, k_ref, v_ref,
     mask = (qpos >= kpos.T) & (qpos >= 0) & (kpos.T >= 0)
     if window:
         mask &= (qpos - kpos.T) < window
+    # per-request segment mask: packed multi-request prefill confines a
+    # query row to keys of its own request
+    qseg = qs_ref[...]                                  # [bq, 1]
+    kseg = ks_ref[...]                                  # [bk, 1]
+    mask &= qseg == kseg.T
     s = jnp.where(mask, s, NEG_INF)
 
     m_prev = m_s[...]                                   # [bq, 1]
@@ -83,12 +90,15 @@ def _kernel(qp_ref, kp_ref, kc_ref, q_ref, k_ref, v_ref,
 
 
 def chunk_attention_pallas(q, k, v, q_pos, k_pos, k_chunk, *,
+                           q_seg=None, k_seg=None,
                            num_chunks: int = 16, window: int = 0,
                            block_q: int = 128, block_k: int = 128,
                            interpret: bool = True):
     """q [A,H,D], k/v [S,Hkv,D], q_pos [A], k_pos [S], k_chunk [S].
-    Shapes must be pre-padded: A % block_q == 0 and S % block_k == 0
-    (padding rows use position -1). Returns (out [A,H,D], mass [A,C])."""
+    ``q_seg`` [A] / ``k_seg`` [S] (optional) carry packed-request segment
+    ids; attention never crosses segments. Shapes must be pre-padded:
+    A % block_q == 0 and S % block_k == 0 (padding rows use position
+    -1). Returns (out [A,H,D], mass [A,C])."""
     A, H, D = q.shape
     S, Hkv = k.shape[0], k.shape[1]
     G = H // Hkv
@@ -96,6 +106,10 @@ def chunk_attention_pallas(q, k, v, q_pos, k_pos, k_chunk, *,
     qp = q_pos.reshape(A, 1).astype(jnp.int32)
     kp = k_pos.reshape(S, 1).astype(jnp.int32)
     kc = k_chunk.reshape(S, 1).astype(jnp.int32)
+    qs = (jnp.zeros((A, 1), jnp.int32) if q_seg is None
+          else q_seg.reshape(A, 1).astype(jnp.int32))
+    ks = (jnp.zeros((S, 1), jnp.int32) if k_seg is None
+          else k_seg.reshape(S, 1).astype(jnp.int32))
 
     grid = (nq, H, nk)
     kernel = functools.partial(_kernel, scale=1.0 / np.sqrt(D),
@@ -106,6 +120,8 @@ def chunk_attention_pallas(q, k, v, q_pos, k_pos, k_chunk, *,
         in_specs=[
             pl.BlockSpec((block_q, 1), lambda i, h, j: (i, 0)),
             pl.BlockSpec((block_k, 1), lambda i, h, j: (j, 0)),
+            pl.BlockSpec((block_k, 1), lambda i, h, j: (j, 0)),
+            pl.BlockSpec((block_q, 1), lambda i, h, j: (i, 0)),
             pl.BlockSpec((block_k, 1), lambda i, h, j: (j, 0)),
             pl.BlockSpec((block_q, 1, D), lambda i, h, j: (i, h, 0)),
             pl.BlockSpec((block_k, 1, D), lambda i, h, j: (j, h // G, 0)),
@@ -125,8 +141,8 @@ def chunk_attention_pallas(q, k, v, q_pos, k_pos, k_chunk, *,
             pltpu.VMEM((block_q, D), jnp.float32),
             pltpu.VMEM((block_q, num_chunks), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
         interpret=interpret,
-    )(qp, kp, kc, q, k, v)
+    )(qp, kp, kc, qs, ks, q, k, v)
     return out, mass

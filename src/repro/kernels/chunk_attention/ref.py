@@ -15,8 +15,11 @@ NEG_INF = -1e30
 
 
 def chunk_attention_ref(q, k, v, q_pos, k_pos, k_chunk, *,
-                        num_chunks: int, window: int = 0):
+                        num_chunks: int, window: int = 0,
+                        q_seg=None, k_seg=None):
     """q [A,H,D], k/v [S,Hkv,D], q_pos [A], k_pos [S], k_chunk [S].
+    ``q_seg`` [A] / ``k_seg`` [S] (optional) confine attention to keys of
+    the same segment (request) id — cross-request token packing.
 
     Returns (out [A,H,D] (q dtype), mass [A,num_chunks] fp32).
     """
@@ -30,6 +33,8 @@ def chunk_attention_ref(q, k, v, q_pos, k_pos, k_chunk, *,
         (q_pos[:, None] >= 0) & (k_pos[None, :] >= 0)
     if window:
         mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    if q_seg is not None and k_seg is not None:
+        mask &= q_seg[:, None] == k_seg[None, :]
     scores = jnp.where(mask[None, None], scores, NEG_INF)
     m = jnp.maximum(jnp.max(scores, -1, keepdims=True), NEG_INF / 2)
     e = jnp.exp(scores - m)

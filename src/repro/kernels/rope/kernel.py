@@ -17,6 +17,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 
 def _kernel(pos_ref, x_ref, o_ref, *, theta: float, sign: float):
     x = x_ref[...].astype(jnp.float32)            # [bt, H, D]
@@ -53,7 +55,7 @@ def rope_pallas(x, pos, *, theta: float, inverse: bool = False,
         ],
         out_specs=pl.BlockSpec((bt, H, D), lambda i: (i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((Tp, H, D), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(pos.reshape(Tp, 1).astype(jnp.int32), x)

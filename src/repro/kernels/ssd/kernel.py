@@ -17,6 +17,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 
 def _kernel(x_ref, la_ref, b_ref, c_ref, y_ref, st_ref):
     x = x_ref[...][0, :, 0, :].astype(jnp.float32)    # [L, P] (dt-scaled)
@@ -70,7 +72,7 @@ def ssd_intra_pallas(xdt, log_a, B_mat, C_mat, *, interpret: bool = True):
             jax.ShapeDtypeStruct((nC, L, H, P), jnp.float32),
             jax.ShapeDtypeStruct((nC, H, P, N), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(xdt, log_a, B_mat, C_mat)

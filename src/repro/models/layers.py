@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import shard_map
 from repro.distributed.sharding import shd
 
 NEG_INF = -1e30
@@ -56,9 +57,16 @@ def apply_rope(x: jax.Array, pos: jax.Array, theta: float,
 # Attention masks from position vectors
 # ---------------------------------------------------------------------------
 def position_mask(q_pos: jax.Array, k_pos: jax.Array, window: int = 0,
-                  k_valid: Optional[jax.Array] = None) -> jax.Array:
+                  k_valid: Optional[jax.Array] = None,
+                  q_seg: Optional[jax.Array] = None,
+                  k_seg: Optional[jax.Array] = None) -> jax.Array:
     """[B,Tq],[B,Tk] -> bool [B,Tq,Tk]. Causal by absolute position, with
-    optional sliding window, masking invalid (padding) K slots."""
+    optional sliding window, masking invalid (padding) K slots.
+
+    ``q_seg``/``k_seg`` [B,Tq]/[B,Tk] carry per-token segment (request)
+    ids for cross-request token packing: attention is confined to keys of
+    the same segment, so several requests can share one packed sequence
+    row with per-segment (local) positions."""
     m = q_pos[:, :, None] >= k_pos[:, None, :]
     m &= q_pos[:, :, None] >= 0
     m &= k_pos[:, None, :] >= 0
@@ -66,6 +74,8 @@ def position_mask(q_pos: jax.Array, k_pos: jax.Array, window: int = 0,
         m &= (q_pos[:, :, None] - k_pos[:, None, :]) < window
     if k_valid is not None:
         m &= k_valid[:, None, :]
+    if q_seg is not None and k_seg is not None:
+        m &= q_seg[:, :, None] == k_seg[:, None, :]
     return m
 
 
@@ -244,7 +254,7 @@ def gqa_attend_flash_cp(q, k, v, q_pos, k_pos, mesh, window: int = 0,
                                 block_q=max(128, qs.shape[1] // 4),
                                 block_k=block_k)
 
-    f = jax.shard_map(
+    f = shard_map(
         body, mesh=mesh,
         in_specs=(P(None, axis, None, None), P(None, axis),
                   P(), P(), P()),

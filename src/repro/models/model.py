@@ -253,8 +253,23 @@ class Ctx:
     media: Optional[jax.Array] = None
     chunk_ids: Optional[jax.Array] = None   # [B,T] per-token chunk id
     collect_stats: bool = False
-    attn_impl: str = "auto"        # dense | flash | auto
+    attn_impl: str = "auto"        # dense | flash | auto | kernel
     decode_slot: Optional[jax.Array] = None  # [B] write slot for decode
+    # --- packed multi-request prefill (mode="partial") -------------------
+    # Several requests share one sequence row: each token carries a
+    # request-local position (RoPE / causality), a cache *slot* (request
+    # layout offset + local position), and a segment id; attention is
+    # confined to same-segment keys via the position mask.
+    slots: Optional[jax.Array] = None        # [B,T] cache write slots
+    seg_ids: Optional[jax.Array] = None      # [B,T] query segment ids
+    kv_seg: Optional[jax.Array] = None       # [B,S] cache-slot segment ids
+    # Block-diagonal gather maps (dense path): row/slot indices of each
+    # request's tokens (-1 padding). Attention then runs per request on
+    # [R, Amax] x [R, Smax] slices instead of the full [A, S] product —
+    # the packed pass keeps linear ops fused without paying the
+    # cross-request quadratic attention waste.
+    pack_qidx: Optional[jax.Array] = None    # [R, Amax] -> packed q rows
+    pack_kidx: Optional[jax.Array] = None    # [R, Smax] -> packed kv slots
 
 
 _CP_MESH = None
@@ -267,14 +282,81 @@ def set_cp_mesh(mesh):
     _CP_MESH = mesh
 
 
+def _attend_block_diagonal(ctx: Ctx, window: int, q, k_all, v_all, kv_pos):
+    """Packed-prefill attention without the cross-request quadratic
+    waste: gather each request's query rows [R, Amax] and KV slice
+    [R, Smax] (indices from the executor, -1 = padding), run batched
+    dense attention per request, and scatter results back to the packed
+    row order. Cost is R * Amax * Smax instead of (sum A)(sum S); the
+    segment mask is implied by the block structure."""
+    cfg = ctx.cfg
+    B, A = q.shape[:2]
+    S = k_all.shape[1]
+    qidx, kidx = ctx.pack_qidx, ctx.pack_kidx
+    R, Amax = qidx.shape
+    Smax = kidx.shape[1]
+    qsafe = jnp.clip(qidx, 0, A - 1)
+    ksafe = jnp.clip(kidx, 0, S - 1)
+    qr = q[0][qsafe]                                    # [R, Amax, H, D]
+    kr = k_all[0][ksafe]                                # [R, Smax, Hkv, D]
+    vr = v_all[0][ksafe]
+    qpos_r = jnp.where(qidx >= 0, ctx.positions[0][qsafe], -1)
+    kpos_r = jnp.where(kidx >= 0, kv_pos[0][ksafe], -1)
+    mask = L.position_mask(qpos_r, kpos_r, window)
+    k_chunk_r = None
+    if ctx.collect_stats and ctx.chunk_ids is not None:
+        k_chunk_r = jnp.where(kidx >= 0, ctx.chunk_ids[0][ksafe],
+                              cfg.stats_chunks - 1)
+    out_r, row_mass_r, key_mass_r = L.gqa_attend_dense(
+        qr, kr, vr, mask, k_chunk=k_chunk_r,
+        num_chunks=cfg.stats_chunks)
+    # scatter back (each live row/slot appears exactly once; padding
+    # lands in a dump slot that is sliced away)
+    qflat = jnp.where(qidx >= 0, qidx, A).reshape(-1)
+    H, D = out_r.shape[-2:]
+    out = jnp.zeros((A + 1, H, D), out_r.dtype) \
+        .at[qflat].set(out_r.reshape(-1, H, D))[:A][None]
+    row_mass = key_mass = None
+    if row_mass_r is not None:
+        C = row_mass_r.shape[-1]
+        row_mass = jnp.zeros((A + 1, C), row_mass_r.dtype) \
+            .at[qflat].set(row_mass_r.reshape(-1, C))[:A][None]
+    if key_mass_r is not None:
+        kflat = jnp.where(kidx >= 0, kidx, S).reshape(-1)
+        key_mass = jnp.zeros((S + 1,), key_mass_r.dtype) \
+            .at[kflat].set(key_mass_r.reshape(-1))[:S][None]
+    return out, row_mass, key_mass
+
+
 def _attend(ctx: Ctx, kind: str, q, k_all, v_all, kv_pos):
     cfg = ctx.cfg
     window = cfg.window if kind == "local" else 0
     Tq, Tk = q.shape[1], k_all.shape[1]
-    use_dense = ctx.attn_impl == "dense" or ctx.collect_stats or (
+    packed = ctx.seg_ids is not None and ctx.kv_seg is not None
+    if ctx.attn_impl == "kernel":
+        # Pallas chunk-attention kernel path: fused mass statistic, with
+        # the per-request segment mask threaded into the kernel.
+        from repro.kernels.chunk_attention.ops import chunk_attention
+        out, row_mass = chunk_attention(
+            q, k_all, v_all, ctx.positions, kv_pos,
+            ctx.chunk_ids if ctx.chunk_ids is not None
+            else jnp.zeros(kv_pos.shape, jnp.int32),
+            q_seg=ctx.seg_ids, k_seg=ctx.kv_seg,
+            num_chunks=cfg.stats_chunks, window=window)
+        if not ctx.collect_stats:
+            row_mass = None
+        # the fused kernel does not expose key-side received mass; the
+        # executor's capture falls back to inter-only scoring
+        # (token_total=None) when kstats stays zero
+        return out, row_mass, None
+    if packed and ctx.pack_qidx is not None and ctx.pack_kidx is not None:
+        return _attend_block_diagonal(ctx, window, q, k_all, v_all, kv_pos)
+    use_dense = ctx.attn_impl == "dense" or ctx.collect_stats or packed or (
         ctx.attn_impl == "auto" and Tq * Tk <= (1 << 21))
     if use_dense:
-        mask = L.position_mask(ctx.positions, kv_pos, window)
+        mask = L.position_mask(ctx.positions, kv_pos, window,
+                               q_seg=ctx.seg_ids if packed else None,
+                               k_seg=ctx.kv_seg if packed else None)
         out, row_mass, key_mass = L.gqa_attend_dense(
             q, k_all, v_all, mask,
             k_chunk=ctx.chunk_ids if ctx.collect_stats else None,
@@ -325,7 +407,10 @@ def _self_attention(ctx: Ctx, kind: str, p, x, state):
         else:
             # Scatter fresh KV into the (possibly pre-populated) cache at
             # absolute positions; padding positions (-1) become OOB drops.
-            slot = jnp.where(ctx.positions >= 0, ctx.positions, s_cache)
+            # Packed multi-request prefill supplies explicit write slots
+            # (request layout offset + local position) via ctx.slots.
+            wpos = ctx.slots if ctx.slots is not None else ctx.positions
+            slot = jnp.where(wpos >= 0, wpos, s_cache)
             k_all = state["k"].at[bi, slot].set(k, mode="drop")
             v_all = state["v"].at[bi, slot].set(v, mode="drop")
             kv_pos = state["pos"].at[bi, slot].set(
@@ -590,6 +675,9 @@ def forward(cfg: ModelConfig, params: PyTree, *,
             collect_stats: bool = False,
             attn_impl: str = "auto",
             decode_slot: Optional[jax.Array] = None,
+            slots: Optional[jax.Array] = None,
+            seg_ids: Optional[jax.Array] = None,
+            kv_seg: Optional[jax.Array] = None,
             logits_slice: str = "all") -> ModelOutput:
     dtype = jnp.dtype(cfg.dtype)
     if embeds is None:
@@ -606,7 +694,8 @@ def forward(cfg: ModelConfig, params: PyTree, *,
 
     ctx = Ctx(cfg=cfg, mode=mode, positions=positions, media=media,
               chunk_ids=chunk_ids, collect_stats=collect_stats,
-              attn_impl=attn_impl, decode_slot=decode_slot)
+              attn_impl=attn_impl, decode_slot=decode_slot,
+              slots=slots, seg_ids=seg_ids, kv_seg=kv_seg)
     h, new_cache, stats, kstats, aux_total = run_stack(
         cfg, params, h, ctx, cache=cache, collect_stats=collect_stats)
 

@@ -38,6 +38,13 @@ class KVPool:
     def free_blocks(self) -> int:
         return len(self.free)
 
+    @property
+    def free_tokens(self) -> int:
+        """Token capacity of the free list (admission-control headroom
+        for packed prefill: tokens, not blocks, is the scheduler's
+        currency)."""
+        return len(self.free) * self.block_size
+
     def blocks_needed(self, tokens: int) -> int:
         return -(-tokens // self.block_size)
 

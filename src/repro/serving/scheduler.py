@@ -1,9 +1,10 @@
 """ORCA-style iteration-level scheduler (paper §5.3 setup).
 
-Continuous batching: at every engine iteration the scheduler may admit
-one queued request's prefill (token-budget permitting) while the decode
-batch keeps stepping. Chunk-caches for queued requests are prefetched
-asynchronously so tier-load latency hides behind queue wait (§3.5).
+Continuous batching: at every engine iteration the scheduler drains as
+many queued requests as fit the ORCA token budget (packed multi-request
+prefill) while the decode batch keeps stepping. Chunk-caches for queued
+requests are prefetched asynchronously so tier-load latency hides behind
+queue wait (§3.5).
 """
 from __future__ import annotations
 
@@ -21,6 +22,7 @@ class SchedulerConfig:
     max_queue: int = 1024
     deadline_s: float = 0.0             # 0 = no deadline (straggler guard)
     retry_limit: int = 2
+    max_prefill_batch: int = 4          # prefills packed per iteration
 
 
 class Scheduler:
@@ -49,21 +51,52 @@ class Scheduler:
         self.queue.appendleft(req)
         return True
 
+    @staticmethod
+    def _need(req: Request) -> int:
+        return (len(req.system_tokens) +
+                sum(len(c) for c in req.chunk_tokens) +
+                len(req.question_tokens) + req.max_new_tokens)
+
+    def next_prefills(self, decode_tokens_in_flight: int,
+                      decode_batch_size: int, *,
+                      free_tokens: Optional[int] = None,
+                      block_size: int = 1,
+                      limit: Optional[int] = None) -> List[Request]:
+        """Drain head-of-line requests for one packed prefill pass while
+        the ORCA token budget and decode-batch capacity allow.
+
+        ``free_tokens`` (KV-pool headroom) bounds admissions *beyond the
+        first*: a request the pool cannot hold would burn its share of
+        the packed compute pass only to be requeued, but the first
+        admission is always attempted so the pool-exhaustion retry/fail
+        path stays reachable. Each request's token need is rounded up to
+        ``block_size`` so the estimate matches the pool's per-request
+        block allocation, not the raw token sum."""
+        cap = self.cfg.max_prefill_batch if limit is None \
+            else min(limit, self.cfg.max_prefill_batch)
+        out: List[Request] = []
+        budget = decode_tokens_in_flight
+        packed_blocks = 0
+        while self.queue and len(out) < cap and \
+                decode_batch_size + len(out) < self.cfg.max_decode_batch:
+            need = self._need(self.queue[0])
+            if budget + need > self.cfg.max_batch_tokens:
+                break
+            blocks = -(-need // block_size)
+            if out and free_tokens is not None and \
+                    (packed_blocks + blocks) * block_size > free_tokens:
+                break
+            out.append(self.queue.popleft())
+            budget += need
+            packed_blocks += blocks
+        return out
+
     def next_prefill(self, decode_tokens_in_flight: int,
                      decode_batch_size: int) -> Optional[Request]:
-        """Admit the head-of-line request if the ORCA token budget and
-        decode-batch capacity allow."""
-        if not self.queue:
-            return None
-        if decode_batch_size >= self.cfg.max_decode_batch:
-            return None
-        head = self.queue[0]
-        need = (len(head.system_tokens) +
-                sum(len(c) for c in head.chunk_tokens) +
-                len(head.question_tokens) + head.max_new_tokens)
-        if decode_tokens_in_flight + need > self.cfg.max_batch_tokens:
-            return None
-        return self.queue.popleft()
+        """Single-admission spelling of ``next_prefills`` (limit=1)."""
+        got = self.next_prefills(decode_tokens_in_flight,
+                                 decode_batch_size, limit=1)
+        return got[0] if got else None
 
     def expired(self, req: Request, clock: float) -> bool:
         return (self.cfg.deadline_s > 0 and req.t_enqueued is not None

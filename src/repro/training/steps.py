@@ -108,8 +108,11 @@ def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
             def body(carry, mb):
                 gsum, lsum = carry
                 loss, aux, grads = grads_of(params, mb)
-                gsum = shard_grads(jax.tree.map(jnp.add, gsum, grads))
-                return (gsum, lsum + loss), None
+                # accumulate in fp32 regardless of param/grad dtype so the
+                # running sum is order-deterministic and does not narrow
+                gsum = shard_grads(jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), gsum, grads))
+                return (gsum, lsum + jnp.float32(loss)), None
 
             zeros = shard_grads(jax.tree.map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), params))

@@ -4,7 +4,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+# canonical spelling: real hypothesis when installed, skipping stand-ins
+# otherwise (see repro.compat)
+from repro.compat import given, settings, st  # noqa: F401
 
 from repro.kernels.chunk_attention.ops import chunk_attention
 from repro.kernels.chunk_attention.ref import chunk_attention_ref
@@ -62,6 +64,54 @@ def test_chunk_attention_bf16(rng):
     np.testing.assert_allclose(np.asarray(o, np.float32),
                                np.asarray(oref, np.float32),
                                rtol=3e-2, atol=3e-2)
+
+
+def test_chunk_attention_segment_mask(rng):
+    """Packed multi-request masking: a kernel call over two packed
+    segments must equal (a) the oracle with the same seg ids and (b) two
+    independent per-segment kernel calls."""
+    H, Hkv, D, C = 4, 2, 32, 8
+    A1, S1, A2, S2 = 16, 48, 8, 32
+    q = _mk(rng, A1 + A2, H, D)
+    k = _mk(rng, S1 + S2, Hkv, D)
+    v = _mk(rng, S1 + S2, Hkv, D)
+    # request-local positions restart at 0 for the second segment
+    qpos = np.concatenate([np.arange(A1) * 2, np.arange(A2) * 3])
+    kpos = np.concatenate([np.arange(S1), np.arange(S2)]).astype(np.int32)
+    kch = np.concatenate([np.arange(S1) % C, np.arange(S2) % C])
+    qseg = np.concatenate([np.zeros(A1), np.ones(A2)]).astype(np.int32)
+    kseg = np.concatenate([np.zeros(S1), np.ones(S2)]).astype(np.int32)
+    o, m = chunk_attention(q, k, v, jnp.asarray(qpos, jnp.int32),
+                           jnp.asarray(kpos), jnp.asarray(kch, jnp.int32),
+                           q_seg=jnp.asarray(qseg), k_seg=jnp.asarray(kseg),
+                           num_chunks=C, block_q=16, block_k=32)
+    oref, mref = chunk_attention_ref(
+        q, k, v, jnp.asarray(qpos, jnp.int32), jnp.asarray(kpos),
+        jnp.asarray(kch, jnp.int32), q_seg=jnp.asarray(qseg),
+        k_seg=jnp.asarray(kseg), num_chunks=C)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(oref),
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(mref),
+                               rtol=3e-5, atol=3e-5)
+    # independent per-segment calls see exactly the same keys
+    o1, m1 = chunk_attention(q[:A1], k[:S1], v[:S1],
+                             jnp.asarray(qpos[:A1], jnp.int32),
+                             jnp.asarray(kpos[:S1]),
+                             jnp.asarray(kch[:S1], jnp.int32),
+                             num_chunks=C, block_q=16, block_k=32)
+    o2, m2 = chunk_attention(q[A1:], k[S1:], v[S1:],
+                             jnp.asarray(qpos[A1:], jnp.int32),
+                             jnp.asarray(kpos[S1:]),
+                             jnp.asarray(kch[S1:], jnp.int32),
+                             num_chunks=C, block_q=8, block_k=16)
+    np.testing.assert_allclose(np.asarray(o[:A1]), np.asarray(o1),
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(o[A1:]), np.asarray(o2),
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(m[:A1]), np.asarray(m1),
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(m[A1:]), np.asarray(m2),
+                               rtol=3e-5, atol=3e-5)
 
 
 def test_chunk_attention_mass_rows_sum_to_heads(rng):

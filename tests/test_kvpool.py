@@ -1,7 +1,9 @@
 """Paged KV pool invariants (hypothesis state-machine style)."""
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+# canonical spelling: real hypothesis when installed, skipping stand-ins
+# otherwise (see repro.compat)
+from repro.compat import given, st
 
 from repro.serving.kvpool import BlockTable, KVPool
 

@@ -1,0 +1,166 @@
+"""Packed multi-request prefill: a 2-request packed pass must be
+numerically identical to two sequential single-request passes (KV
+written to the pool, focus sets, logits), and the engine must admit
+several queued prefills in one iteration when the token budget allows.
+
+No hypothesis here on purpose: these are the tier-1 equivalence gates
+for the packed-admission tentpole.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_tiny
+from repro.core.chunkstore import ChunkStore
+from repro.core.prefill import CacheCraftExecutor
+from repro.core.tiers import TieredStore
+from repro.models import model as M
+from repro.serving.engine import Engine
+from repro.serving.kvpool import BlockTable, KVPool
+from repro.serving.rag import KnowledgeBase
+from repro.serving.request import Request, State
+from repro.serving.scheduler import Scheduler, SchedulerConfig
+from repro.serving.workload import WorkloadConfig, generate
+
+
+@pytest.fixture(scope="module")
+def world():
+    cfg = get_tiny("llama3-8b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    V = cfg.vocab_size
+    kb = [rng.integers(0, V, 24) for _ in range(6)]
+    sys_a = rng.integers(0, V, 8)
+    sys_b = rng.integers(0, V, 8)
+    q1 = rng.integers(0, V, 12)
+    q2 = rng.integers(0, V, 10)
+    return cfg, params, kb, sys_a, sys_b, q1, q2
+
+
+def _warm_store(world, tmp_path, tag):
+    """Deterministically warmed store: identical across calls so packed
+    and sequential paths start from the same cache state."""
+    cfg, params, kb, sys_a, sys_b, q1, q2 = world
+    tiers = TieredStore(1 << 30, 1 << 30, str(tmp_path / tag),
+                        start_worker=False)
+    store = ChunkStore(tiers, n_chunks=20, m_variants=3)
+    warm = CacheCraftExecutor(cfg, params, store, use_focus=False)
+    warm.process(sys_a, kb[:2], q2)
+    warm.process(sys_b, kb[2:4], q1)
+    return store
+
+
+def test_packed_matches_sequential(world, tmp_path):
+    cfg, params, kb, sys_a, sys_b, q1, q2 = world
+    # disjoint chunk/system sets per request so sequential store-use
+    # bookkeeping cannot alter the second request's plan
+    r1 = (sys_a, kb[:2], q1)
+    r2 = (sys_b, kb[2:4], q2)
+    kw = dict(use_focus=True, focus_w=2, store_fixed_variants=False,
+              store_new_chunks=False)
+
+    store_seq = _warm_store(world, tmp_path, "seq")
+    ex_seq = CacheCraftExecutor(cfg, params, store_seq, **kw)
+    res_seq = [ex_seq.process(*r1), ex_seq.process(*r2)]
+
+    store_pkd = _warm_store(world, tmp_path, "pkd")
+    ex_pkd = CacheCraftExecutor(cfg, params, store_pkd, **kw)
+    res_pkd = ex_pkd.process_batch([r1, r2])
+
+    pool_seq = KVPool(cfg.num_layers, cfg.num_kv_heads, cfg.head_dim_,
+                      256, 16)
+    pool_pkd = KVPool(cfg.num_layers, cfg.num_kv_heads, cfg.head_dim_,
+                      256, 16)
+    for rs, rp in zip(res_seq, res_pkd):
+        # same plan (hits, recompute sets) and focus behaviour
+        assert [d.is_hit for d in rp.plan.decisions] == \
+            [d.is_hit for d in rs.plan.decisions]
+        assert rp.plan.num_active_tokens == rs.plan.num_active_tokens
+        assert rp.focused == rs.focused
+        assert rp.focus_cutoff == rs.focus_cutoff
+        assert rp.active_rows_layers == rs.active_rows_layers
+        # logits of the final question token
+        np.testing.assert_allclose(rp.logits_last, rs.logits_last,
+                                   rtol=2e-4, atol=2e-4)
+        # KV written back through per-request block tables
+        ts, tp = BlockTable(), BlockTable()
+        assert pool_seq.write_prefill(ts, rs.k_layers, rs.v_layers,
+                                      rs.pos_layout)
+        assert pool_pkd.write_prefill(tp, rp.k_layers, rp.v_layers,
+                                      rp.pos_layout)
+        pad = 64
+        ks, vs, ps = pool_seq.gather(ts, pad)
+        kp, vp, pp = pool_pkd.gather(tp, pad)
+        np.testing.assert_array_equal(ps, pp)
+        np.testing.assert_allclose(kp, ks, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(vp, vs, rtol=2e-4, atol=2e-4)
+
+
+def test_scheduler_drains_multiple_within_budget():
+    sched = Scheduler(SchedulerConfig(max_batch_tokens=200,
+                                      max_decode_batch=8,
+                                      max_prefill_batch=4))
+    reqs = [Request(rid=i, system_tokens=np.zeros(10, np.int32),
+                    chunk_tokens=[np.zeros(40, np.int32)],
+                    question_tokens=np.zeros(10, np.int32),
+                    max_new_tokens=10)          # need = 70 each
+            for i in range(4)]
+    for r in reqs:
+        sched.enqueue(r, 0.0)
+    got = sched.next_prefills(0, 0)
+    assert [r.rid for r in got] == [0, 1]       # 3rd would exceed 200
+    # pool headroom bounds admissions beyond the first
+    sched2 = Scheduler(SchedulerConfig(max_batch_tokens=10_000,
+                                       max_decode_batch=8,
+                                       max_prefill_batch=4))
+    for r in reqs:
+        sched2.enqueue(r, 0.0)
+    got2 = sched2.next_prefills(0, 0, free_tokens=150)
+    assert [r.rid for r in got2] == [0, 1]      # 3rd would exceed headroom
+    got3 = sched2.next_prefills(0, 0, free_tokens=10)
+    assert [r.rid for r in got3] == [2]         # first is always admitted
+    # decode-batch capacity caps admissions
+    assert sched2.next_prefills(0, 8) == []
+    # per-request block rounding: 17+15=32 tokens fit 2 blocks of 16,
+    # but the pool would need ceil(17/16)+ceil(15/16)=3 blocks
+    sched3 = Scheduler(SchedulerConfig(max_batch_tokens=10_000,
+                                       max_decode_batch=8,
+                                       max_prefill_batch=4))
+    ra = Request(rid=10, system_tokens=np.zeros(7, np.int32),
+                 chunk_tokens=[], question_tokens=np.zeros(5, np.int32),
+                 max_new_tokens=5)               # need = 17
+    rb = Request(rid=11, system_tokens=np.zeros(5, np.int32),
+                 chunk_tokens=[], question_tokens=np.zeros(5, np.int32),
+                 max_new_tokens=5)               # need = 15
+    sched3.enqueue(ra, 0.0)
+    sched3.enqueue(rb, 0.0)
+    got4 = sched3.next_prefills(0, 0, free_tokens=32, block_size=16)
+    assert [r.rid for r in got4] == [10]
+
+
+def test_engine_packs_prefills_and_matches_serial(world):
+    cfg, params, _, _, _, _, _ = world
+    kb = KnowledgeBase(num_chunks=10, vocab_size=cfg.vocab_size, seed=0)
+    wl = WorkloadConfig(num_requests=6, qpm=1e9, seed=4, max_new_tokens=3)
+
+    def run(max_pack):
+        eng = Engine(cfg, params, None,
+                     sched=SchedulerConfig(max_batch_tokens=100_000,
+                                           max_decode_batch=8,
+                                           max_prefill_batch=max_pack),
+                     pool_blocks=2048,
+                     executor_kwargs=dict(strategy="all", use_focus=False))
+        reqs = generate(kb, wl)
+        stats = eng.run(reqs)
+        return stats, reqs
+
+    stats_p, reqs_p = run(4)
+    assert stats_p.prefill_batch_max >= 2       # packed admission happened
+    assert stats_p.completed == 6 and stats_p.failed == 0
+    assert stats_p.prefill_batches < stats_p.prefills
+    stats_s, reqs_s = run(1)
+    assert stats_s.prefill_batch_max == 1
+    assert stats_s.completed == 6
+    for rp, rs in zip(reqs_p, reqs_s):          # same greedy outputs
+        assert rp.state == State.DONE
+        assert rp.output_tokens == rs.output_tokens

@@ -1,7 +1,9 @@
 """Property tests for the Cache-Craft reusability metrics (§3.1-§3.2)."""
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+# canonical spelling: real hypothesis when installed, skipping stand-ins
+# otherwise (see repro.compat)
+from repro.compat import given, st
 
 from repro.core import scoring
 from repro.core.focus import FocusTracker, predict_focused_chunks

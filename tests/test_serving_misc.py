@@ -1,7 +1,9 @@
 """Metrics, RAG substrate, workload, planner, preloading math."""
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+# canonical spelling: real hypothesis when installed, skipping stand-ins
+# otherwise (see repro.compat)
+from repro.compat import given, st
 
 from repro.core.planner import build_plan
 from repro.core.preload import layerwise_schedule, preload_depth

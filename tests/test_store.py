@@ -1,7 +1,9 @@
 """Chunk store (NxM variants, f_r eviction) + tiered storage tests."""
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+# canonical spelling: real hypothesis when installed, skipping stand-ins
+# otherwise (see repro.compat)
+from repro.compat import given, st
 
 from repro.core.chunkstore import ChunkStore, chunk_hash
 from repro.core.scoring import ChunkScores
