@@ -1,8 +1,21 @@
 """Fig. 22: throughput and end-to-end latency under continuous batching
 (ORCA-style) across load levels: Cache-Craft (0% and 30% recompute) vs
 Prefix-Cache vs Full-Recomp. Engine clock = measured jitted compute +
-modeled (unhidden) tier-load time."""
+modeled (unhidden) tier-load time.
+
+Also emitted:
+
+* ``fig22_admission_{serial,packed}`` — packed multi-request prefill vs
+  serial admission under queue pressure (CI perf smoke asserts
+  packed >= serial via ``--ci-smoke``).
+* ``fig22_decode_churn_{rebuild,incremental}`` — rebuild-on-any-change
+  decode batch vs in-place join/leave row maintenance under a churny
+  join/leave schedule (reservation + incremental-decode tentpole).
+"""
 from __future__ import annotations
+
+import argparse
+import sys
 
 import numpy as np
 
@@ -23,25 +36,32 @@ METHODS = {
 
 
 def _measure(cfg, params, store, sched, exkw, kb, n_req, qpm,
-             warm_same: bool = False):
+             warm_same: bool = False, workload_fn=None, **engine_kw):
     eng = Engine(cfg, params, store, sched=sched, pool_blocks=4096,
-                 executor_kwargs=dict(store_fixed_variants=False, **exkw))
-    wl = WorkloadConfig(num_requests=n_req, qpm=qpm, seed=3,
-                        max_new_tokens=8)
-    reqs = generate(kb, wl)
+                 executor_kwargs=dict(store_fixed_variants=False, **exkw),
+                 **engine_kw)
+
+    def make():
+        if workload_fn is not None:
+            return workload_fn()
+        return generate(kb, WorkloadConfig(num_requests=n_req, qpm=qpm,
+                                           seed=3, max_new_tokens=8))
+
+    reqs = make()
     # warm the jit caches AND the chunk store before timing. For the
     # admission study the warm-up replays the measured workload twice
     # (fresh Request objects) so every packed-admission jit shape
     # (R, bucketed totals, block maps) and the steady-state chunk store
     # exist before the clock starts — run-twice-measure-second.
     if warm_same:
-        eng.run(generate(kb, wl))
-        eng.run(generate(kb, wl))
+        eng.run(make())
+        eng.run(make())
     else:
         eng.run(generate(kb, WorkloadConfig(num_requests=6, qpm=1e9,
                                             seed=7, max_new_tokens=8)))
     eng.clock = 0.0
     eng.stats = EngineStats()           # warm-up must not pollute counters
+    eng.counters.reset()
     for r in reqs:
         r.t_enqueued = None
     stats = eng.run(reqs)
@@ -49,7 +69,60 @@ def _measure(cfg, params, store, sched, exkw, kb, n_req, qpm,
     thr = len(done) / max(1e-9, stats.clock)
     lat = np.mean([r.e2e_latency for r in done])
     ttft = np.mean([r.ttft for r in done])
-    return stats, thr, lat, ttft
+    return eng, stats, thr, lat, ttft
+
+
+def _admission_compare(cfg, params, kb, n_req):
+    """Packed vs single prefill admission under queue pressure (all
+    requests arrive at once): packed multi-request prefill should beat
+    the serial-admission baseline on throughput."""
+    thr_by_label = {}
+    for label, npack in (("serial", 1), ("packed", 4)):
+        sched = SchedulerConfig(max_batch_tokens=8192, max_decode_batch=8,
+                                max_prefill_batch=npack)
+        exkw = dict(strategy="cachecraft", use_focus=False,
+                    force_recompute_fraction=0.3)
+        _eng, stats, thr, lat, ttft = _measure(
+            cfg, params, fresh_store(f"tl-adm-{label}"), sched, exkw,
+            kb, n_req, qpm=1e9, warm_same=True)
+        emit(f"fig22_admission_{label}", lat * 1e6,
+             f"throughput_rps={thr:.3f};mean_e2e_s={lat:.3f};"
+             f"mean_ttft_s={ttft:.3f};"
+             f"max_packed={stats.prefill_batch_max};"
+             f"prefill_batches={stats.prefill_batches}")
+        thr_by_label[label] = thr
+    return thr_by_label
+
+
+def _churn_workload(kb, n_req):
+    """All-at-once arrivals with varied decode lengths: with one
+    admission per iteration the decode batch churns on most steps."""
+    wl = WorkloadConfig(num_requests=n_req, qpm=1e9, seed=9, k_chunks=3,
+                        max_new_tokens=8)
+    reqs = generate(kb, wl)
+    for i, r in enumerate(reqs):
+        r.max_new_tokens = 4 + (i * 5) % 13
+    return reqs
+
+
+def _churn_compare(cfg, params, kb, n_req):
+    """Incremental decode batch (in-place join/leave) vs full rebuild on
+    every membership change, same churny schedule."""
+    sched = SchedulerConfig(max_batch_tokens=100_000, max_decode_batch=8,
+                            max_prefill_batch=1)
+    exkw = dict(strategy="all", use_focus=False)
+    for label, incremental in (("rebuild", False), ("incremental", True)):
+        eng, stats, thr, lat, _ttft = _measure(
+            cfg, params, None, sched, exkw, kb, n_req, qpm=1e9,
+            warm_same=True, workload_fn=lambda: _churn_workload(kb, n_req),
+            decode_bucket_b=8, seq_bucket=256,
+            incremental_decode=incremental)
+        c = eng.counters
+        emit(f"fig22_decode_churn_{label}", lat * 1e6,
+             f"throughput_rps={thr:.3f};mean_e2e_s={lat:.3f};"
+             f"decode_rebuilds={c.decode_rebuilds};"
+             f"joins={c.decode_joins};leaves={c.decode_leaves};"
+             f"rows_recycled={c.decode_rows_recycled}")
 
 
 def run(quick: bool = False):
@@ -62,31 +135,47 @@ def run(quick: bool = False):
             store = None if name == "full" else fresh_store(f"tl-{name}")
             sched = SchedulerConfig(max_batch_tokens=4096,
                                     max_decode_batch=4)
-            stats, thr, lat, ttft = _measure(cfg, params, store, sched,
-                                             exkw, kb, n_req, qpm)
+            _eng, stats, thr, lat, ttft = _measure(cfg, params, store,
+                                                   sched, exkw, kb,
+                                                   n_req, qpm)
             saved = 1 - stats.prefill_tokens_computed / \
                 max(1, stats.prefill_tokens_total)
             emit(f"fig22_qpm{qpm}_{name}", lat * 1e6,
                  f"throughput_rps={thr:.3f};mean_e2e_s={lat:.3f};"
                  f"mean_ttft_s={ttft:.3f};tokens_saved={saved:.2f}")
 
-    # packed vs single prefill admission under queue pressure (all
-    # requests arrive at once): packed multi-request prefill should beat
-    # the serial-admission baseline on throughput
-    for label, npack in (("serial", 1), ("packed", 4)):
-        sched = SchedulerConfig(max_batch_tokens=8192, max_decode_batch=8,
-                                max_prefill_batch=npack)
-        exkw = dict(strategy="cachecraft", use_focus=False,
-                    force_recompute_fraction=0.3)
-        stats, thr, lat, ttft = _measure(
-            cfg, params, fresh_store(f"tl-adm-{label}"), sched, exkw,
-            kb, n_req, qpm=1e9, warm_same=True)
-        emit(f"fig22_admission_{label}", lat * 1e6,
-             f"throughput_rps={thr:.3f};mean_e2e_s={lat:.3f};"
-             f"mean_ttft_s={ttft:.3f};"
-             f"max_packed={stats.prefill_batch_max};"
-             f"prefill_batches={stats.prefill_batches}")
+    _admission_compare(cfg, params, kb, n_req)
+    _churn_compare(cfg, params, kb, n_req)
+
+
+def ci_smoke() -> int:
+    """Quick-mode CI perf gate (ROADMAP): packed admission must not be
+    slower than serial admission. Returns a process exit code.
+
+    Throughput is wall-clock-derived, so shared CI runners add noise on
+    top of the real effect (locally packed wins by ~1.5x);
+    ``CI_SMOKE_TOLERANCE`` (default 1.0 = the strict ROADMAP threshold)
+    lets CI demand only ``packed >= tol * serial``."""
+    import os
+    tol = float(os.environ.get("CI_SMOKE_TOLERANCE", "1.0"))
+    cfg, params = get_trained_model()
+    kb, _retr, _sys_t, _rng = make_world(cfg)
+    thr = _admission_compare(cfg, params, kb, n_req=8)
+    ok = thr["packed"] >= tol * thr["serial"]
+    print(f"# ci-smoke: packed={thr['packed']:.3f} rps, "
+          f"serial={thr['serial']:.3f} rps, tol={tol:.2f} -> "
+          f"{'OK' if ok else 'FAIL (packed < tol * serial)'}",
+          file=sys.stderr)
+    return 0 if ok else 1
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--ci-smoke", action="store_true",
+                    help="run only the admission perf gate; exit 1 if "
+                         "packed admission is slower than serial")
+    args = ap.parse_args()
+    if args.ci_smoke:
+        raise SystemExit(ci_smoke())
+    run(quick=args.quick)

@@ -6,11 +6,21 @@
 # optional dev-deps (hypothesis) are absent — property tests skip, they
 # never break collection. pytest exits non-zero on collection errors or
 # failures, and `-p no:cacheprovider` keeps the tree clean for CI.
+#
+# Perf smoke (ROADMAP): with CI_PERF_SMOKE=1 (or --perf-smoke), a
+# quick-mode run of benchmarks/throughput_latency.py additionally gates
+# on fig22_admission_packed >= fig22_admission_serial throughput.
 set -uo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+perf_smoke="${CI_PERF_SMOKE:-0}"
+if [[ "${1:-}" == "--perf-smoke" ]]; then
+    perf_smoke=1
+    shift
+fi
 
 log="$(mktemp)"
 python -m pytest -q -p no:cacheprovider "$@" 2>&1 | tee "$log"
@@ -25,4 +35,12 @@ summary=$(grep -E "[0-9]+ (passed|failed|skipped|error)" "$log" | tail -1)
 echo "CI summary: ${summary:-no summary line found}"
 echo "CI exit status: $status"
 rm -f "$log"
+
+if [[ "$status" == "0" && "$perf_smoke" == "1" ]]; then
+    echo "CI: perf smoke (packed admission >= serial admission throughput)"
+    python -m benchmarks.throughput_latency --ci-smoke
+    status=$?
+    echo "CI perf smoke exit status: $status"
+fi
+
 exit "$status"

@@ -66,7 +66,14 @@ def decode_fn(cfg):
     """Shared jitted one-token decode (engine + benches). ``slots`` (the
     cache write index) is separate from ``positions`` (the RoPE/causality
     position): paged storage appends at the next free slot while the
-    token's logical position keeps counting real tokens."""
+    token's logical position keeps counting real tokens.
+
+    Row masking (incremental decode batch): a batch row with no live
+    request passes ``positions[i] == -1`` and ``slots[i] == -1`` — the
+    KV write for that row is dropped, the position mask zeroes all of
+    its attention, and its logits are garbage-but-finite and unread.
+    The engine recycles such rows in place on the next join instead of
+    rebuilding the whole (B, S) batch."""
     @jax.jit
     def fn(params, tokens, positions, cache, slots=None):
         out = M.decode_step(cfg, params, tokens, positions, cache,

@@ -421,12 +421,18 @@ def _self_attention(ctx: Ctx, kind: str, p, x, state):
             k_all = shd(k_all, "batch", None, "attn_kv", "attn_dim")
             v_all = shd(v_all, "batch", None, "attn_kv", "attn_dim")
     elif ctx.mode == "decode":
+        # Masked batch rows (incremental decode batch: no live request in
+        # the row) carry slot = -1 and position = -1: the KV write drops
+        # entirely and the row's query position masks all attention, so
+        # a dead row is inert until a join overwrites it.
         slot = ctx.decode_slot[:, None]
         if kind == "local":
-            slot = slot % state["k"].shape[1]
-        k_all = state["k"].at[bi, slot].set(k)
-        v_all = state["v"].at[bi, slot].set(v)
-        kv_pos = state["pos"].at[bi, slot].set(ctx.positions)
+            slot = jnp.where(slot >= 0, slot % state["k"].shape[1], slot)
+        s_cache = state["k"].shape[1]
+        slot = jnp.where(slot >= 0, slot, s_cache)
+        k_all = state["k"].at[bi, slot].set(k, mode="drop")
+        v_all = state["v"].at[bi, slot].set(v, mode="drop")
+        kv_pos = state["pos"].at[bi, slot].set(ctx.positions, mode="drop")
         new_state = {"k": k_all, "v": v_all, "pos": kv_pos}
     else:
         raise ValueError(ctx.mode)

@@ -7,6 +7,21 @@ overlaps loading with queue time; layer-wise preload (Eq. 16) overlaps
 the rest with layer execution). This gives reproducible throughput /
 latency curves at laptop scale with the same structure as the paper's
 A100 numbers.
+
+KV accounting is reservation-based: the scheduler reserves every
+admitted request's blocks up front (``KVPool.reserve``), prefill writes
+and decode appends draw from the reservation, and terminal states
+commit (success) or cancel (requeue/failure) it — so a request can
+never burn its share of the packed prefill pass and then fail
+``write_prefill`` (``counters.burn_requeues`` stays 0).
+
+Incremental decode batch (row-masking scheme): the jitted decode cache
+is a bucketed (B, S) arena with a request-per-row map. Joins write the
+new request's gathered KV into a free row in place; leaves mask the row
+(cache position row set to -1, per-step query position/slot -1, see
+``core.prefill.decode_fn``) and recycle it for the next join. A full
+gather rebuild happens only when the bucketed (B, S) shape must grow,
+cutting per-iteration overhead under churny workloads.
 """
 from __future__ import annotations
 
@@ -25,12 +40,71 @@ from repro.core.preload import preload_depth
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.serving.kvpool import KVPool
+from repro.serving.metrics import ServingCounters
 from repro.serving.request import Request, State
 from repro.serving.scheduler import Scheduler, SchedulerConfig
 
 
 def _bucket(n: int, b: int) -> int:
     return max(b, -(-n // b) * b)
+
+
+@functools.lru_cache(maxsize=None)
+def _join_row_fn(cfg):
+    """Jitted in-place decode-batch join: write one request's gathered
+    KV [L, S, Hkv, D] (+ pos [S]) into batch row ``row`` of the decode
+    cache. One fused call (cache donated, so XLA can alias the buffers
+    where the backend supports it) instead of 3 * (P + n_tail) separate
+    whole-cache copies."""
+    P, G = len(cfg.pattern), cfg.n_groups
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def fn(cache, row, k, v, pos):
+        out = {"groups": [], "tail": []}
+        if G:
+            kg = k[:G * P].reshape((G, P) + k.shape[1:])
+            vg = v[:G * P].reshape((G, P) + v.shape[1:])
+            for p in range(P):
+                c = cache["groups"][p]
+                out["groups"].append({
+                    "k": c["k"].at[:, row].set(kg[:, p]),
+                    "v": c["v"].at[:, row].set(vg[:, p]),
+                    "pos": c["pos"].at[:, row].set(pos),
+                })
+        for i in range(cfg.n_tail):
+            t = cache["tail"][i]
+            out["tail"].append({
+                "k": t["k"].at[row].set(k[G * P + i]),
+                "v": t["v"].at[row].set(v[G * P + i]),
+                "pos": t["pos"].at[row].set(pos),
+            })
+        return out
+    return fn
+
+
+@functools.lru_cache(maxsize=None)
+def _leave_row_fn(cfg):
+    """Jitted in-place decode-batch leave: mask batch row ``row`` by
+    setting its position row to -1 (KV left in place — the position
+    mask makes the row inert, and the next join overwrites it)."""
+    G = cfg.n_groups
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def fn(cache, row):
+        out = {"groups": [], "tail": []}
+        if G:
+            for c in cache["groups"]:
+                out["groups"].append({
+                    "k": c["k"], "v": c["v"],
+                    "pos": c["pos"].at[:, row].set(-1),
+                })
+        for t in cache["tail"]:
+            out["tail"].append({
+                "k": t["k"], "v": t["v"],
+                "pos": t["pos"].at[row].set(-1),
+            })
+        return out
+    return fn
 
 
 @dataclass
@@ -55,23 +129,34 @@ class Engine:
                  pool_blocks: int = 4096, block_size: int = 16,
                  decode_bucket_b: int = 4, seq_bucket: int = 64,
                  executor_kwargs: Optional[dict] = None,
-                 time_scale: float = 1.0):
+                 time_scale: float = 1.0,
+                 incremental_decode: bool = True,
+                 trace_decode: bool = False):
         self.cfg = cfg
         self.params = params
         self.store = store
         self.executor = CacheCraftExecutor(
             cfg, params, store, **(executor_kwargs or {}))
         self.scheduler = Scheduler(sched or SchedulerConfig())
+        self.counters = ServingCounters()
         self.pool = KVPool(cfg.num_layers, cfg.num_kv_heads, cfg.head_dim_,
-                           pool_blocks, block_size)
+                           pool_blocks, block_size, counters=self.counters)
         self.decode_bucket_b = decode_bucket_b
         self.seq_bucket = seq_bucket
         self.time_scale = time_scale
+        self.incremental_decode = incremental_decode
         self.clock = 0.0
         self.decoding: List[Request] = []
         self._dcache = None
         self._dshape = None
+        self._rows: List[Optional[Request]] = []   # batch row -> request
+        self._masked_rows: set = set()             # rows freed by a leave
+        self._needs_rebuild = True
         self.stats = EngineStats()
+        # test/bench support: per-step decode logits and final pool KV
+        self.trace_decode = trace_decode
+        self.decode_trace: List[Dict[int, np.ndarray]] = []
+        self.final_kv: Dict[int, tuple] = {}
         from repro.core.prefill import decode_fn
         self._decode_fn = decode_fn(cfg)
 
@@ -92,9 +177,7 @@ class Engine:
         worked = False
         decode_tokens = sum(r.table.length for r in self.decoding)
         reqs = self.scheduler.next_prefills(
-            decode_tokens, len(self.decoding),
-            free_tokens=self.pool.free_tokens,
-            block_size=self.pool.block_size)
+            decode_tokens, len(self.decoding), pool=self.pool)
         if reqs:
             self._run_prefills(reqs)
             worked = True
@@ -105,7 +188,9 @@ class Engine:
 
     def _run_prefills(self, reqs: Sequence[Request]):
         """Packed multi-request prefill: every admitted request's
-        recompute tokens execute as one jitted windowed pass."""
+        recompute tokens execute as one jitted windowed pass. Admission
+        reserved each request's KV blocks, so the write-back below
+        cannot fail under pool pressure."""
         for req in reqs:
             req.state = State.PREFILLING
             req.t_prefill_start = self.clock
@@ -138,13 +223,16 @@ class Engine:
         self.stats.prefill_batch_max = max(self.stats.prefill_batch_max,
                                            len(reqs))
 
-        added = False
+        joined: List[Request] = []
         for req, res in zip(reqs, results):
             ok = self.pool.write_prefill(req.table, res.k_layers,
-                                         res.v_layers, res.pos_layout)
+                                         res.v_layers, res.pos_layout,
+                                         reservation=req.reservation)
             if not ok:
-                self.pool.free_table(req.table)
-                self.scheduler.requeue(req)
+                # unreachable with reserve-at-admission; kept as a
+                # defensive path (and counted so tests can assert 0)
+                self.counters.burn_requeues += 1
+                self._requeue(req)
                 continue
             first = int(np.argmax(res.logits_last[:self.cfg.vocab_size]))
             req.output_tokens.append(first)
@@ -159,15 +247,30 @@ class Engine:
             self.stats.prefill_tokens_total += res.total_len
             self.stats.prefill_tokens_computed += res.plan.num_active_tokens
             self.decoding.append(req)
-            added = True
-        if added:
-            self._dcache = None          # force decode batch rebuild
+            joined.append(req)
+        self._decode_join_batch(joined)
+
+    def _requeue(self, req: Request):
+        """Return a request to the queue with its per-attempt state
+        reset: KV table freed, reservation cancelled, and any decoded
+        tokens discarded (a retry re-prefills from scratch — stale
+        ``output_tokens`` would terminate the retry early with a
+        corrupted output sequence)."""
+        self.pool.free_table(req.table)
+        self.pool.cancel(req.reservation)
+        req.reservation = None
+        req.output_tokens = []
+        req.total_len = 0
+        self.scheduler.requeue(req)
 
     # ---- decode batch -------------------------------------------------------
+    def _row_capacity(self, req: Request) -> int:
+        """Sequence slots this request may touch while decoding."""
+        return req.table.length + req.max_new_tokens + 1
+
     def _rebuild_decode_batch(self):
         B = _bucket(len(self.decoding), self.decode_bucket_b)
-        max_len = max(r.table.length + r.max_new_tokens + 1
-                      for r in self.decoding)
+        max_len = max(self._row_capacity(r) for r in self.decoding)
         S = _bucket(max_len, self.seq_bucket)
         L = self.cfg.num_layers
         hkv, dh = self.cfg.num_kv_heads, self.cfg.head_dim_
@@ -193,15 +296,74 @@ class Engine:
                  "pos": jnp.asarray(pos)} for i in range(self.cfg.n_tail)]
         self._dcache = {"groups": groups, "tail": tail}
         self._dshape = (B, S)
+        self._rows = list(self.decoding) + [None] * (B - len(self.decoding))
+        self._masked_rows = set()
+        self._needs_rebuild = False
+        self.counters.decode_rebuilds += 1
+
+    def _decode_join_batch(self, reqs: Sequence[Request]):
+        """Join newly-decoding requests into the decode batch in place,
+        or fall back to a full rebuild (flag only — the rebuild itself
+        is lazy) when there is no cache yet, not enough free rows, or
+        the row arena is too short for any of them. The all-or-nothing
+        check runs before the first join so a rebuild-forcing member
+        does not waste the earlier members' gathers and transfers."""
+        if not reqs:
+            return
+        if not self.incremental_decode or self._dcache is None or \
+                self._needs_rebuild:
+            self._needs_rebuild = True
+            return
+        _B, S = self._dshape
+        if len(reqs) > self._rows.count(None) or \
+                any(self._row_capacity(r) > S for r in reqs):
+            self._needs_rebuild = True
+            return
+        for req in reqs:
+            self._decode_join(req)
+
+    def _decode_join(self, req: Request):
+        """Write one newly-decoding request's gathered KV into a free
+        batch row in place (capacity pre-checked by
+        ``_decode_join_batch``)."""
+        _B, S = self._dshape
+        row = self._rows.index(None)
+        k, v, pos = self.pool.gather(req.table, S)
+        self._dcache = _join_row_fn(self.cfg)(
+            self._dcache, jnp.int32(row), jnp.asarray(k), jnp.asarray(v),
+            jnp.asarray(pos))
+        self._rows[row] = req
+        self.counters.decode_joins += 1
+        if row in self._masked_rows:
+            self._masked_rows.discard(row)
+            self.counters.decode_rows_recycled += 1
+
+    def _decode_leave(self, row: int):
+        """Mask a departing request's batch row: position row -> -1 kills
+        every key in the row's attention; the row is recycled by the
+        next join. In rebuild mode the whole batch is regathered
+        instead."""
+        self._rows[row] = None
+        if not self.incremental_decode:
+            self._needs_rebuild = True
+            return
+        if self._dcache is None or self._needs_rebuild:
+            return
+        self._dcache = _leave_row_fn(self.cfg)(self._dcache,
+                                               jnp.int32(row))
+        self._masked_rows.add(row)
+        self.counters.decode_leaves += 1
 
     def _run_decode_step(self):
-        if self._dcache is None or self._dshape[0] < len(self.decoding):
+        if self._dcache is None or self._needs_rebuild:
             self._rebuild_decode_batch()
         B, S = self._dshape
         toks = np.zeros(B, np.int32)
-        poss = np.zeros(B, np.int32)
-        slots = np.zeros(B, np.int32)
-        for i, r in enumerate(self.decoding):
+        poss = np.full(B, -1, np.int32)
+        slots = np.full(B, -1, np.int32)
+        for i, r in enumerate(self._rows):
+            if r is None:                  # masked row: inert (see
+                continue                   # decode_fn row-masking)
             toks[i] = r.output_tokens[-1]
             poss[i] = r.total_len          # logical position (RoPE/causal)
             slots[i] = r.table.length      # physical append slot
@@ -212,18 +374,23 @@ class Engine:
         logits = np.asarray(logits[:, 0])
         self.clock += (time.perf_counter() - t0) * self.time_scale
         self.stats.decode_steps += 1
+        if self.trace_decode:
+            self.decode_trace.append(
+                {r.rid: logits[i].copy() for i, r in enumerate(self._rows)
+                 if r is not None})
 
-        done_any = False
-        for i, r in enumerate(list(self.decoding)):
+        for i, r in enumerate(list(self._rows)):
+            if r is None:
+                continue
             nxt = int(np.argmax(logits[i, :self.cfg.vocab_size]))
             # persist the newly written KV into the paged pool
             ktok, vtok = self._extract_slot_kv(i, r.table.length)
             if not self.pool.append_token(r.table, ktok, vtok,
-                                          r.total_len):
-                self.scheduler.requeue(r)
+                                          r.total_len,
+                                          reservation=r.reservation):
                 self.decoding.remove(r)
-                self.pool.free_table(r.table)
-                done_any = True
+                self._decode_leave(i)
+                self._requeue(r)
                 continue
             r.output_tokens.append(nxt)
             r.total_len += 1
@@ -232,10 +399,14 @@ class Engine:
                 r.t_done = self.clock
                 self.stats.completed += 1
                 self.decoding.remove(r)
+                self._decode_leave(i)
+                if self.trace_decode:
+                    pad = _bucket(max(r.table.length, 1), self.seq_bucket)
+                    self.final_kv[r.rid] = self.pool.gather(r.table, pad)
                 self.pool.free_table(r.table)
-                done_any = True
-        if done_any:
-            self._dcache = None
+                self.pool.commit(r.reservation)
+                r.reservation = None
+                self.scheduler.on_terminal(r)
 
     def _extract_slot_kv(self, batch_idx: int, slot: int):
         cfg = self.cfg
@@ -275,6 +446,8 @@ class Engine:
             if not self.step():
                 if i < len(pending):     # idle: jump to next arrival
                     self.clock = max(self.clock, pending[i].arrival_time)
+                elif self.scheduler.queue:
+                    continue             # waiting on reserve headroom
                 else:
                     break
         self.stats.clock = self.clock

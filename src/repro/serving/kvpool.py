@@ -2,9 +2,37 @@
 
 The pool owns [L, num_blocks, block, Hkv, D] K/V arenas plus a free list
 and per-block refcounts. Chunk-cache injections can share blocks across
-requests (copy-on-write on the recompute path). Admission control in the
-scheduler keys off ``free_blocks``; the decode path gathers a request's
-block table into a dense view when the decode batch is (re)built.
+requests (copy-on-write on the recompute path). The decode path gathers
+a request's block table into a dense view when the request joins the
+decode batch.
+
+Reservation protocol (reserve-at-admission)
+-------------------------------------------
+Admission control used to key off ``free_blocks`` alone, which races the
+decode path: a request admitted under momentary headroom could burn its
+share of the packed prefill pass and then fail ``write_prefill`` when
+decode appends consumed the blocks in between. The pool therefore
+exposes a three-phase protocol:
+
+* ``reserve(n) -> Reservation`` atomically moves ``n`` blocks out of the
+  free list into the reservation (refcount stays 0, blocks excluded from
+  ``free_blocks``/``free_tokens``).
+* ``write_prefill``/``append_token`` draw blocks from the request's
+  reservation first and only fall back to the free list (e.g. for a
+  copy-on-write split of a block shared beyond the reservation's
+  estimate).
+* ``commit(res)`` (request reached a terminal success state) and
+  ``cancel(res)`` (requeue/expiry/failure) return the undrawn remainder
+  to the free list and close the reservation.
+
+Accounting is CoW-aware: a block is *live* once (``refs > 0``) no matter
+how many tables share it, so shared chunk-cache blocks count once and
+the conservation law
+
+    ``free_blocks + live_blocks + reserved_blocks == num_blocks``
+
+holds after every operation (machine-checked by
+``tests/test_kvpool_properties.py``).
 """
 from __future__ import annotations
 
@@ -13,6 +41,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.serving.metrics import ServingCounters
+
 
 @dataclass
 class BlockTable:
@@ -20,10 +50,28 @@ class BlockTable:
     length: int = 0                      # tokens used
 
 
+@dataclass
+class Reservation:
+    """Blocks set aside for one request at admission time.
+
+    ``blocks`` hold ids popped from the free list (refcount 0); they are
+    handed to the request's table one by one as ``write_prefill`` /
+    ``append_token`` need them. ``commit``/``cancel`` return whatever was
+    not drawn."""
+    blocks: List[int] = field(default_factory=list)
+    drawn: int = 0                       # blocks moved into a table
+    closed: bool = False
+
+    @property
+    def remaining(self) -> int:
+        return len(self.blocks)
+
+
 class KVPool:
     def __init__(self, num_layers: int, kv_heads: int, head_dim: int,
                  num_blocks: int, block_size: int = 16,
-                 dtype=np.float32):
+                 dtype=np.float32,
+                 counters: Optional[ServingCounters] = None):
         self.L = num_layers
         self.block_size = block_size
         self.num_blocks = num_blocks
@@ -33,6 +81,9 @@ class KVPool:
         self.pos = np.full((num_blocks, block_size), -1, np.int32)
         self.refs = np.zeros(num_blocks, np.int32)
         self.free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self._reserved = 0               # blocks inside open reservations
+        self.counters = counters if counters is not None \
+            else ServingCounters()
 
     @property
     def free_blocks(self) -> int:
@@ -40,20 +91,96 @@ class KVPool:
 
     @property
     def free_tokens(self) -> int:
-        """Token capacity of the free list (admission-control headroom
-        for packed prefill: tokens, not blocks, is the scheduler's
-        currency)."""
+        """Token capacity of the free list (admission-control headroom:
+        tokens, not blocks, is the scheduler's currency). Reserved
+        blocks are already excluded — they left the free list at
+        ``reserve`` time."""
         return len(self.free) * self.block_size
+
+    @property
+    def reserved_blocks(self) -> int:
+        """Blocks held by open reservations (refcount 0, not free)."""
+        return self._reserved
+
+    @property
+    def live_blocks(self) -> int:
+        """Blocks referenced by at least one table — shared (CoW) blocks
+        count once, which is what makes the conservation law hold."""
+        return int((self.refs > 0).sum())
 
     def blocks_needed(self, tokens: int) -> int:
         return -(-tokens // self.block_size)
 
-    def alloc(self, n: int) -> Optional[List[int]]:
+    # ---- reservations ------------------------------------------------------
+    def reserve(self, n: int) -> Optional[Reservation]:
+        """Move ``n`` blocks from the free list into a reservation, or
+        return None (and count a failure) when headroom is short."""
         if n > len(self.free):
+            self.counters.reserve_failures += 1
             return None
-        out = [self.free.pop() for _ in range(n)]
-        for b in out:
+        res = Reservation(blocks=[self.free.pop() for _ in range(n)])
+        self._reserved += n
+        self.counters.reservations_made += 1
+        self.counters.blocks_reserved_peak = max(
+            self.counters.blocks_reserved_peak, self._reserved)
+        return res
+
+    def commit(self, res: Optional[Reservation]):
+        """Close a reservation after terminal success; undrawn blocks
+        return to the free list."""
+        if self._close(res):
+            self.counters.reservations_committed += 1
+
+    def cancel(self, res: Optional[Reservation]):
+        """Close a reservation on requeue/expiry/failure paths."""
+        if self._close(res):
+            self.counters.reservations_cancelled += 1
+
+    def _close(self, res: Optional[Reservation]) -> bool:
+        if res is None or res.closed:
+            return False
+        for b in res.blocks:
+            self._reserved -= 1
+            self.free.append(b)
+        res.blocks = []
+        res.closed = True
+        return True
+
+    def _take(self, res: Optional[Reservation]) -> Optional[int]:
+        """Draw one block out of a reservation (refcount 0 -> 1)."""
+        if res is None or res.closed or not res.blocks:
+            return None
+        b = res.blocks.pop()
+        self._reserved -= 1
+        res.drawn += 1
+        self.refs[b] = 1
+        return b
+
+    # ---- allocation --------------------------------------------------------
+    def alloc(self, n: int,
+              reservation: Optional[Reservation] = None) -> Optional[List[int]]:
+        """Allocate ``n`` blocks, drawing from ``reservation`` first and
+        falling back to the free list; all-or-nothing."""
+        out: List[int] = []
+        while len(out) < n:
+            b = self._take(reservation)
+            if b is None:
+                break
+            out.append(b)
+        short = n - len(out)
+        if short > len(self.free):
+            # roll back reservation draws so accounting stays exact
+            if reservation is not None:
+                for b in reversed(out):
+                    self.refs[b] = 0
+                    reservation.blocks.append(b)
+                    reservation.drawn -= 1
+                    self._reserved += 1
+            return None
+        for _ in range(short):
+            b = self.free.pop()
             self.refs[b] = 1
+            out.append(b)
         return out
 
     def share(self, blocks: List[int]):
@@ -69,13 +196,15 @@ class KVPool:
 
     # ---- IO ----------------------------------------------------------------
     def write_prefill(self, table: BlockTable, k_layers: np.ndarray,
-                      v_layers: np.ndarray, pos: np.ndarray) -> bool:
-        """Copy [L,S,...] prefill KV into the table's blocks (allocating)."""
+                      v_layers: np.ndarray, pos: np.ndarray,
+                      reservation: Optional[Reservation] = None) -> bool:
+        """Copy [L,S,...] prefill KV into the table's blocks (allocating
+        from the request's reservation when one is supplied)."""
         S = k_layers.shape[1]
         need = self.blocks_needed(S)
         extra = need - len(table.blocks)
         if extra > 0:
-            got = self.alloc(extra)
+            got = self.alloc(extra, reservation)
             if got is None:
                 return False
             table.blocks.extend(got)
@@ -90,18 +219,19 @@ class KVPool:
         return True
 
     def append_token(self, table: BlockTable, k_tok: np.ndarray,
-                     v_tok: np.ndarray, pos: int) -> bool:
+                     v_tok: np.ndarray, pos: int,
+                     reservation: Optional[Reservation] = None) -> bool:
         """k_tok/v_tok [L, Hkv, D]: append one decoded token's KV."""
         idx = table.length
         bi, off = divmod(idx, self.block_size)
         if bi >= len(table.blocks):
-            got = self.alloc(1)
+            got = self.alloc(1, reservation)
             if got is None:
                 return False
             table.blocks.extend(got)
         b = table.blocks[bi]
         if self.refs[b] > 1:             # copy-on-write
-            nb = self.alloc(1)
+            nb = self.alloc(1, reservation)
             if nb is None:
                 return False
             self.k[:, nb[0]] = self.k[:, b]
@@ -117,9 +247,17 @@ class KVPool:
         return True
 
     def gather(self, table: BlockTable, pad_to: int):
-        """Block table -> dense [L, pad_to, Hkv, D] view (+ pos [pad_to])."""
+        """Block table -> dense [L, pad_to, Hkv, D] view (+ pos [pad_to]).
+
+        An empty table (``length == 0`` / no blocks) returns a
+        well-formed all-padding view: zero KV, positions all -1."""
+        if table.length == 0 or not table.blocks:
+            k = np.zeros((self.L, pad_to) + self.k.shape[3:], self.k.dtype)
+            v = np.zeros_like(k)
+            pos = np.full(pad_to, -1, np.int32)
+            return k, v, pos
         bs = self.block_size
-        n = self.blocks_needed(max(table.length, 1))
+        n = self.blocks_needed(table.length)
         ids = np.asarray(table.blocks[:n], np.int64)
         k = self.k[:, ids].reshape(self.L, n * bs, *self.k.shape[3:])
         v = self.v[:, ids].reshape(self.L, n * bs, *self.v.shape[3:])

@@ -1,10 +1,43 @@
 """Quality metrics (paper §5.1.3): ROUGE-L F1 and Jaccard similarity over
-token sequences, plus deviation measures used in Figs. 7/12/15."""
+token sequences, plus deviation measures used in Figs. 7/12/15, and the
+serving-side counters (reservation protocol + incremental decode batch)
+shared by the pool, the engine, and the Fig. 22 benches."""
 from __future__ import annotations
 
+import dataclasses
+from dataclasses import dataclass
 from typing import Sequence
 
 import numpy as np
+
+
+@dataclass
+class ServingCounters:
+    """Shared event counters for the serving layer.
+
+    One instance is threaded through ``Engine`` -> ``KVPool`` so
+    reservation-protocol events (pool) and decode-batch maintenance
+    events (engine) land in one place; benches and tests assert on it
+    directly (e.g. zero ``burn_requeues`` under reservation, membership
+    changes absorbed without ``decode_rebuilds``)."""
+    # --- KV reservation protocol (reserve-at-admission) ---
+    reservations_made: int = 0
+    reservations_committed: int = 0
+    reservations_cancelled: int = 0
+    reserve_failures: int = 0            # admissions deferred for headroom
+    blocks_reserved_peak: int = 0
+    # --- packed prefill admission ---
+    burn_requeues: int = 0               # computed a prefill, then failed
+    #     write_prefill and requeued (must stay 0 with reservations on)
+    # --- incremental decode batch ---
+    decode_rebuilds: int = 0             # full (B, S) gather rebuilds
+    decode_joins: int = 0                # requests written into a free row
+    decode_leaves: int = 0               # rows masked (pos = -1) on exit
+    decode_rows_recycled: int = 0        # masked rows reused by a join
+
+    def reset(self):
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, f.default)
 
 
 def _lcs(a: Sequence[int], b: Sequence[int]) -> int:

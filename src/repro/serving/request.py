@@ -8,7 +8,7 @@ from typing import List, Optional
 
 import numpy as np
 
-from repro.serving.kvpool import BlockTable
+from repro.serving.kvpool import BlockTable, Reservation
 
 
 class State(enum.Enum):
@@ -30,6 +30,9 @@ class Request:
     # --- engine state ---
     state: State = State.QUEUED
     table: BlockTable = field(default_factory=BlockTable)
+    # KV blocks reserved at admission; the engine commits on completion
+    # and cancels on requeue/failure
+    reservation: Optional[Reservation] = None
     output_tokens: List[int] = field(default_factory=list)
     total_len: int = 0
     # --- timings ---

@@ -5,6 +5,14 @@ many queued requests as fit the ORCA token budget (packed multi-request
 prefill) while the decode batch keeps stepping. Chunk-caches for queued
 requests are prefetched asynchronously so tier-load latency hides behind
 queue wait (§3.5).
+
+Admission is reservation-based when the engine hands over its ``KVPool``:
+every admitted request (including the first) gets its KV blocks reserved
+up front, so a request never burns its share of the packed compute pass
+only to fail ``write_prefill`` afterwards (the burn-then-requeue path).
+A request whose blocks cannot be reserved right now simply stays queued
+until decode completions return blocks; one that can *never* fit the
+pool fails fast instead of deadlocking the queue.
 """
 from __future__ import annotations
 
@@ -34,6 +42,7 @@ class Scheduler:
     def enqueue(self, req: Request, clock: float) -> bool:
         if len(self.queue) >= self.cfg.max_queue:
             req.state = State.FAILED
+            self.on_terminal(req)
             return False
         req.t_enqueued = clock
         req.state = State.QUEUED
@@ -46,10 +55,18 @@ class Scheduler:
         self.retries[req.rid] = n
         if n > self.cfg.retry_limit:
             req.state = State.FAILED
+            self.on_terminal(req)
             return False
         req.state = State.QUEUED
         self.queue.appendleft(req)
         return True
+
+    def on_terminal(self, req: Request):
+        """Drop per-request bookkeeping once a request reaches a terminal
+        state (DONE/FAILED). Without this the ``retries`` dict grows
+        without bound on long-running engines — one entry per request
+        that was ever requeued."""
+        self.retries.pop(req.rid, None)
 
     @staticmethod
     def _need(req: Request) -> int:
@@ -59,19 +76,27 @@ class Scheduler:
 
     def next_prefills(self, decode_tokens_in_flight: int,
                       decode_batch_size: int, *,
+                      pool=None,
                       free_tokens: Optional[int] = None,
                       block_size: int = 1,
                       limit: Optional[int] = None) -> List[Request]:
         """Drain head-of-line requests for one packed prefill pass while
         the ORCA token budget and decode-batch capacity allow.
 
-        ``free_tokens`` (KV-pool headroom) bounds admissions *beyond the
-        first*: a request the pool cannot hold would burn its share of
-        the packed compute pass only to be requeued, but the first
+        With ``pool`` (a ``KVPool``), admission reserves blocks for
+        *every* admitted request — ``req.reservation`` is populated and
+        ``write_prefill``/``append_token`` draw from it — so admission
+        can never over-commit the pool and the burn-compute-then-requeue
+        path disappears. A head request that cannot reserve right now
+        stays queued (blocks return as decode completes); one whose
+        block need exceeds the whole pool fails through the bounded
+        retry path so the queue cannot deadlock.
+
+        Without ``pool``, the legacy headroom estimate applies:
+        ``free_tokens`` bounds admissions *beyond the first* (the first
         admission is always attempted so the pool-exhaustion retry/fail
-        path stays reachable. Each request's token need is rounded up to
-        ``block_size`` so the estimate matches the pool's per-request
-        block allocation, not the raw token sum."""
+        path stays reachable), with each request's token need rounded up
+        to ``block_size`` to match per-request block allocation."""
         cap = self.cfg.max_prefill_batch if limit is None \
             else min(limit, self.cfg.max_prefill_batch)
         out: List[Request] = []
@@ -80,13 +105,42 @@ class Scheduler:
         while self.queue and len(out) < cap and \
                 decode_batch_size + len(out) < self.cfg.max_decode_batch:
             need = self._need(self.queue[0])
+            if pool is not None and need > self.cfg.max_batch_tokens:
+                # larger than the whole ORCA budget: can never be
+                # admitted, so fail fast instead of stalling the queue
+                req = self.queue.popleft()
+                req.state = State.FAILED
+                self.on_terminal(req)
+                continue
             if budget + need > self.cfg.max_batch_tokens:
                 break
-            blocks = -(-need // block_size)
-            if out and free_tokens is not None and \
-                    (packed_blocks + blocks) * block_size > free_tokens:
-                break
-            out.append(self.queue.popleft())
+            bsz = pool.block_size if pool is not None else block_size
+            blocks = -(-need // bsz)
+            if pool is not None:
+                if blocks > pool.num_blocks:
+                    # can never fit: fail fast, keep the queue moving
+                    req = self.queue.popleft()
+                    req.state = State.FAILED
+                    self.on_terminal(req)
+                    continue
+                res = pool.reserve(blocks)
+                if res is None:
+                    if not out and decode_batch_size == 0:
+                        # nothing in flight will ever free blocks, yet
+                        # the request fits the pool in principle: burn a
+                        # bounded retry so persistent shortage (e.g.
+                        # leaked blocks) converges to FAILED, not a
+                        # livelock
+                        self.requeue(self.queue.popleft())
+                    break
+                req = self.queue.popleft()
+                req.reservation = res
+            else:
+                if out and free_tokens is not None and \
+                        (packed_blocks + blocks) * bsz > free_tokens:
+                    break
+                req = self.queue.popleft()
+            out.append(req)
             budget += need
             packed_blocks += blocks
         return out

@@ -107,6 +107,34 @@ def test_scheduler_requeue_limit():
     assert r.state == State.FAILED
 
 
+def test_scheduler_retries_cleared_on_terminal():
+    """Regression: ``Scheduler.retries`` entries must not accumulate for
+    completed/failed requests — unbounded dict growth on a long-running
+    engine otherwise."""
+    sched = Scheduler(SchedulerConfig(retry_limit=1))
+    r = Request(rid=1, system_tokens=np.zeros(1, np.int32),
+                chunk_tokens=[], question_tokens=np.zeros(1, np.int32))
+    sched.enqueue(r, 0.0)
+    sched.queue.popleft()
+    assert sched.requeue(r)
+    assert 1 in sched.retries
+    sched.queue.popleft()
+    assert not sched.requeue(r)           # retry limit -> FAILED
+    assert r.state == State.FAILED
+    assert sched.retries == {}            # cleared on terminal state
+    # a retried request that later completes is cleared by on_terminal
+    r2 = Request(rid=2, system_tokens=np.zeros(1, np.int32),
+                 chunk_tokens=[], question_tokens=np.zeros(1, np.int32))
+    sched.enqueue(r2, 0.0)
+    sched.queue.popleft()
+    assert sched.requeue(r2)
+    assert 2 in sched.retries
+    sched.queue.popleft()
+    r2.state = State.DONE
+    sched.on_terminal(r2)
+    assert sched.retries == {}
+
+
 def test_engine_pool_exhaustion_fails_gracefully(world, tmp_path):
     cfg, params, kb = world
     eng = Engine(cfg, params, None,

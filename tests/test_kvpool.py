@@ -76,6 +76,63 @@ def test_pool_accounting_invariant(ops):
         assert all(p.refs[b] == 1 for h in held for b in h)
 
 
+def test_gather_empty_table_is_all_padding():
+    """length == 0 / no blocks: a well-formed all-padding view, not an
+    inconsistent zero-row slice of an empty block list."""
+    p = _pool(8)
+    t = BlockTable()
+    k, v, pos = p.gather(t, pad_to=8)
+    assert k.shape == (2, 8, 2, 4) and v.shape == k.shape
+    assert pos.shape == (8,)
+    assert (pos == -1).all()
+    assert (k == 0).all() and (v == 0).all()
+
+
+def test_reserve_commit_cancel_accounting():
+    p = _pool(8)
+    res = p.reserve(3)
+    assert res is not None and res.remaining == 3
+    # reserved blocks are excluded from free headroom
+    assert p.free_blocks == 5 and p.reserved_blocks == 3
+    assert p.free_tokens == 5 * 4
+    assert p.reserve(6) is None           # over-reservation fails cleanly
+    # write draws from the reservation, not the free list
+    t = BlockTable()
+    k = np.arange(2 * 6 * 2 * 4, dtype=np.float32).reshape(2, 6, 2, 4)
+    assert p.write_prefill(t, k, k, np.arange(6, dtype=np.int32),
+                           reservation=res)
+    assert p.free_blocks == 5 and p.reserved_blocks == 1
+    assert p.live_blocks == 2 and res.drawn == 2
+    p.commit(res)                         # undrawn remainder returns free
+    assert res.closed
+    assert p.free_blocks == 6 and p.reserved_blocks == 0
+    p.commit(res)                         # double-close is a no-op
+    assert p.free_blocks == 6
+    res2 = p.reserve(2)
+    p.cancel(res2)
+    assert p.free_blocks == 6 and p.reserved_blocks == 0
+    p.free_table(t)
+    assert p.free_blocks == 8
+
+
+def test_append_token_draws_from_reservation(rng):
+    p = _pool(8)
+    res = p.reserve(2)
+    t = BlockTable()
+    k = rng.normal(size=(2, 4, 2, 4)).astype(np.float32)
+    assert p.write_prefill(t, k, k, np.arange(4, dtype=np.int32),
+                           reservation=res)
+    assert res.remaining == 1
+    free_before = p.free_blocks
+    ktok = np.ones((2, 2, 4), np.float32)
+    assert p.append_token(t, ktok, ktok, pos=4, reservation=res)
+    # the new block came from the reservation, not the free list
+    assert p.free_blocks == free_before and res.remaining == 0
+    p.commit(res)
+    p.free_table(t)
+    assert p.free_blocks == 8
+
+
 def test_free_table_releases_everything(rng):
     p = _pool(8)
     t = BlockTable()

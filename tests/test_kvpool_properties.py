@@ -1,0 +1,169 @@
+"""Property-based KV-pool invariants (reservation protocol + CoW).
+
+Random interleavings of ``reserve``/``commit``/``cancel``/``alloc``/
+``share``/``release``/``write_prefill``/``append_token`` must preserve:
+
+* refcounts >= 0 everywhere;
+* no block is simultaneously free and live (or free and reserved);
+* conservation: ``free_blocks + live_blocks + reserved_blocks ==
+  num_blocks`` (shared CoW blocks count once);
+* ``gather`` round-trips every written token's KV bit-exactly.
+
+Uses the compat ``hypothesis`` shim: skips cleanly when the dev-dep is
+absent, never breaks collection (see repro.compat).
+"""
+import numpy as np
+
+from repro.compat import given, st
+
+from repro.serving.kvpool import BlockTable, KVPool
+
+L, HKV, DH, BS, NB = 2, 2, 4, 4, 12
+
+OPS = ["alloc", "release", "share", "reserve", "commit", "cancel",
+       "write", "append", "free_table"]
+
+
+def _pool():
+    return KVPool(num_layers=L, kv_heads=HKV, head_dim=DH,
+                  num_blocks=NB, block_size=BS)
+
+
+def _tok(i):
+    """Deterministic, distinct per-token KV payload (bit-exact in f32)."""
+    base = np.arange(L * HKV * DH, dtype=np.float32).reshape(L, HKV, DH)
+    return base + 1000.0 * i
+
+
+def _check_invariants(pool, reservations, tables):
+    assert (pool.refs >= 0).all()
+    free = pool.free
+    free_set = set(free)
+    assert len(free_set) == len(free), "duplicate block in free list"
+    live = {b for b in range(pool.num_blocks) if pool.refs[b] > 0}
+    assert not (free_set & live), "block both free and live"
+    reserved = [b for r in reservations if not r.closed for b in r.blocks]
+    assert len(set(reserved)) == len(reserved)
+    assert not (set(reserved) & free_set), "block both free and reserved"
+    assert not (set(reserved) & live), "block both live and reserved"
+    assert pool.reserved_blocks == len(reserved)
+    assert all(pool.refs[b] == 0 for b in reserved)
+    assert pool.free_blocks + pool.live_blocks + pool.reserved_blocks \
+        == pool.num_blocks
+    assert pool.free_tokens == pool.free_blocks * pool.block_size
+    # every table's written KV reads back bit-exactly
+    for table, _res, exp_k, exp_v, exp_pos in tables:
+        pad = max(pool.block_size,
+                  pool.blocks_needed(max(table.length, 1))
+                  * pool.block_size)
+        gk, gv, gpos = pool.gather(table, pad)
+        n = table.length
+        assert n == len(exp_k)
+        if n:
+            np.testing.assert_array_equal(
+                gk[:, :n], np.stack(exp_k, axis=1))
+            np.testing.assert_array_equal(
+                gv[:, :n], np.stack(exp_v, axis=1))
+            np.testing.assert_array_equal(gpos[:n], np.asarray(exp_pos))
+        assert (gpos[n:] == -1).all()
+
+
+@given(st.lists(st.tuples(st.sampled_from(OPS), st.integers(0, 5)),
+                max_size=60))
+def test_random_interleavings_preserve_invariants(ops):
+    pool = _pool()
+    held = []           # block lists we own one reference to
+    reservations = []   # every Reservation ever made (closed ones too)
+    tables = []         # (table, reservation|None, exp_k, exp_v, exp_pos)
+    counter = 0
+    for step, (op, n) in enumerate(ops):
+        open_res = [r for r in reservations if not r.closed]
+        if op == "alloc":
+            got = pool.alloc(n % 4 + 1)
+            if got is not None:
+                held.append(got)
+        elif op == "release" and held:
+            pool.release(held.pop(n % len(held)))
+        elif op == "share" and held:
+            blocks = held[n % len(held)]
+            pool.share(blocks)
+            held.append(list(blocks))
+        elif op == "reserve":
+            res = pool.reserve(n % 5 + 1)
+            if res is not None:
+                reservations.append(res)
+        elif op == "commit" and open_res:
+            pool.commit(open_res[n % len(open_res)])
+        elif op == "cancel" and open_res:
+            pool.cancel(open_res[n % len(open_res)])
+        elif op == "write":
+            S = n % 7 + 1
+            res = open_res[n % len(open_res)] if open_res and n % 2 \
+                else None
+            toks = [_tok(counter + i) for i in range(S)]
+            counter += S
+            k = np.stack(toks, axis=1)
+            v = k + 0.5
+            pos = np.arange(S, dtype=np.int32)
+            table = BlockTable()
+            if pool.write_prefill(table, k, v, pos, reservation=res):
+                tables.append((table, res,
+                               toks, [t + 0.5 for t in toks], list(pos)))
+        elif op == "append" and tables:
+            table, res, exp_k, exp_v, exp_pos = tables[n % len(tables)]
+            tok = _tok(counter)
+            counter += 1
+            pos = exp_pos[-1] + 1 if exp_pos else 0
+            if pool.append_token(table, tok, tok + 0.5, pos,
+                                 reservation=res):
+                exp_k.append(tok)
+                exp_v.append(tok + 0.5)
+                exp_pos.append(pos)
+        elif op == "free_table" and tables:
+            table, _res, _k, _v, _pos = tables.pop(n % len(tables))
+            pool.free_table(table)
+        _check_invariants(pool, reservations, tables)
+
+    # drain everything: the pool must return to fully free
+    for table, _res, _k, _v, _pos in tables:
+        pool.free_table(table)
+    for blocks in held:
+        pool.release(blocks)
+    for res in reservations:
+        pool.cancel(res)
+    assert pool.free_blocks == pool.num_blocks
+    assert pool.live_blocks == 0 and pool.reserved_blocks == 0
+
+
+@given(st.lists(st.integers(0, 4), min_size=0, max_size=8))
+def test_cow_append_preserves_shared_content(ns):
+    """Appending into a block shared with another table must CoW: the
+    sharer's view stays bit-identical, the appender's view gains the
+    token, and accounting still conserves."""
+    pool = _pool()
+    S = 3
+    toks = [_tok(i) for i in range(S)]
+    k = np.stack(toks, axis=1)
+    table = BlockTable()
+    assert pool.write_prefill(table, k, k, np.arange(S, dtype=np.int32))
+    shared = list(table.blocks)
+    pool.share(shared)
+    before = pool.k[:, shared[0]].copy()
+    res = pool.reserve(2)
+    pos = S
+    for i, _ in enumerate(ns):
+        tok = _tok(100 + i)
+        if not pool.append_token(table, tok, tok, pos, reservation=res):
+            break
+        toks.append(tok)
+        pos += 1
+        np.testing.assert_array_equal(pool.k[:, shared[0]], before)
+        gk, _gv, gpos = pool.gather(table, 16)
+        np.testing.assert_array_equal(gk[:, :len(toks)],
+                                      np.stack(toks, axis=1))
+        assert pool.free_blocks + pool.live_blocks \
+            + pool.reserved_blocks == pool.num_blocks
+    pool.cancel(res)
+    pool.release(shared)
+    pool.free_table(table)
+    assert pool.free_blocks == pool.num_blocks
