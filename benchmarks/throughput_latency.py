@@ -11,10 +11,20 @@ Also emitted:
 * ``fig22_decode_churn_{rebuild,incremental}`` — rebuild-on-any-change
   decode batch vs in-place join/leave row maintenance under a churny
   join/leave schedule (reservation + incremental-decode tentpole).
+* ``fig22_shared_blocks_{copy,zerocopy}`` — per-request KV copies vs
+  zero-copy shared chunk blocks + delta-only admission on an
+  overlapping-chunk workload (zero-copy tentpole).
+
+``--ci-smoke`` runs the perf gates (admission throughput, decode-churn
+rebuild *counts*, copy-vs-zerocopy reserved *blocks* — the latter two
+count-based, immune to shared-runner timing noise) and writes the gate
+numbers to ``results/fig22_ci_smoke.json`` for the CI artifact upload.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 
 import numpy as np
@@ -23,6 +33,7 @@ from benchmarks.common import emit, fresh_store, get_trained_model, \
     make_world
 from repro.serving.engine import Engine, EngineStats
 from repro.serving.rag import KnowledgeBase
+from repro.serving.request import Request
 from repro.serving.scheduler import SchedulerConfig
 from repro.serving.workload import WorkloadConfig, generate
 
@@ -105,16 +116,18 @@ def _churn_workload(kb, n_req):
     return reqs
 
 
-def _churn_compare(cfg, params, kb, n_req):
+def _churn_compare(cfg, params, kb, n_req, warm: bool = True):
     """Incremental decode batch (in-place join/leave) vs full rebuild on
-    every membership change, same churny schedule."""
+    every membership change, same churny schedule. Returns the rebuild
+    counters per mode (the count-based CI gate)."""
     sched = SchedulerConfig(max_batch_tokens=100_000, max_decode_batch=8,
                             max_prefill_batch=1)
     exkw = dict(strategy="all", use_focus=False)
+    rebuilds = {}
     for label, incremental in (("rebuild", False), ("incremental", True)):
         eng, stats, thr, lat, _ttft = _measure(
             cfg, params, None, sched, exkw, kb, n_req, qpm=1e9,
-            warm_same=True, workload_fn=lambda: _churn_workload(kb, n_req),
+            warm_same=warm, workload_fn=lambda: _churn_workload(kb, n_req),
             decode_bucket_b=8, seq_bucket=256,
             incremental_decode=incremental)
         c = eng.counters
@@ -123,6 +136,57 @@ def _churn_compare(cfg, params, kb, n_req):
              f"decode_rebuilds={c.decode_rebuilds};"
              f"joins={c.decode_joins};leaves={c.decode_leaves};"
              f"rows_recycled={c.decode_rows_recycled}")
+        rebuilds[label] = c.decode_rebuilds
+    return rebuilds
+
+
+def _overlap_workload(kb, n_req, k=3, max_new=6):
+    """Every request carries the SAME system prompt and chunk list
+    (distinct questions), all arriving at once: the adversarial-best
+    case for zero-copy sharing — N concurrent readers of the same hot
+    chunks."""
+    rng = np.random.default_rng(21)
+    sys_t = rng.integers(0, kb.vocab_size, 8).astype(np.int32)
+    chunks = [kb.chunks[i % len(kb.chunks)] for i in range(k)]
+    return [Request(rid=i, system_tokens=sys_t,
+                    chunk_tokens=[c.copy() for c in chunks],
+                    question_tokens=rng.integers(
+                        0, kb.vocab_size, 12).astype(np.int32),
+                    max_new_tokens=max_new, arrival_time=0.0)
+            for i in range(n_req)]
+
+
+def _shared_blocks_compare(cfg, params, kb, n_req):
+    """Per-request KV copies vs zero-copy shared chunk blocks on the
+    overlapping workload. Returns the per-mode counters the CI gate
+    checks: blocks reserved at admission (strictly fewer with delta
+    reservation), live-block peak (the HBM saving), shared-block peak
+    (refcount > 1 existed)."""
+    out = {}
+    for label, share in (("copy", False), ("zerocopy", True)):
+        sched = SchedulerConfig(max_batch_tokens=100_000,
+                                max_decode_batch=8, max_prefill_batch=4)
+        exkw = dict(strategy="cachecraft", use_focus=False,
+                    force_recompute_fraction=0.25)
+        eng, stats, thr, lat, _ttft = _measure(
+            cfg, params, fresh_store(f"tl-shb-{label}"), sched, exkw,
+            kb, n_req, qpm=1e9, warm_same=True,
+            workload_fn=lambda: _overlap_workload(kb, n_req),
+            share_chunk_kv=share)
+        c = eng.counters
+        emit(f"fig22_shared_blocks_{label}", lat * 1e6,
+             f"throughput_rps={thr:.3f};mean_e2e_s={lat:.3f};"
+             f"blocks_reserved_total={c.blocks_reserved_total};"
+             f"live_blocks_peak={c.live_blocks_peak};"
+             f"shared_blocks_peak={c.shared_blocks_peak};"
+             f"delta_blocks_saved={c.delta_blocks_saved};"
+             f"cow_clones={c.cow_clones}")
+        out[label] = dict(blocks_reserved_total=c.blocks_reserved_total,
+                          live_blocks_peak=c.live_blocks_peak,
+                          shared_blocks_peak=c.shared_blocks_peak,
+                          delta_blocks_saved=c.delta_blocks_saved,
+                          throughput_rps=thr)
+    return out
 
 
 def run(quick: bool = False):
@@ -146,35 +210,76 @@ def run(quick: bool = False):
 
     _admission_compare(cfg, params, kb, n_req)
     _churn_compare(cfg, params, kb, n_req)
+    _shared_blocks_compare(cfg, params, kb, n_req)
 
 
 def ci_smoke() -> int:
-    """Quick-mode CI perf gate (ROADMAP): packed admission must not be
-    slower than serial admission. Returns a process exit code.
+    """CI perf gate matrix (ROADMAP). Returns a process exit code.
 
-    Throughput is wall-clock-derived, so shared CI runners add noise on
-    top of the real effect (locally packed wins by ~1.5x);
-    ``CI_SMOKE_TOLERANCE`` (default 1.0 = the strict ROADMAP threshold)
-    lets CI demand only ``packed >= tol * serial``."""
-    import os
+    Three gates:
+
+    * admission — packed admission throughput must not fall below
+      ``CI_SMOKE_TOLERANCE * serial`` (wall-clock-derived, so shared CI
+      runners add noise on top of the real ~1.5x effect; default tol
+      1.0 is the strict local threshold).
+    * decode churn — the incremental decode batch must absorb
+      membership churn with far fewer full rebuilds than rebuild mode
+      (count-based: immune to runner timing noise).
+    * shared blocks — zero-copy sharing must reserve strictly fewer
+      blocks at admission than the copy path on an overlapping-chunk
+      workload, with shared (refcount > 1) blocks actually observed
+      (count-based as well).
+
+    Gate numbers land in ``results/fig22_ci_smoke.json`` so CI can
+    upload them as a workflow artifact."""
     tol = float(os.environ.get("CI_SMOKE_TOLERANCE", "1.0"))
     cfg, params = get_trained_model()
     kb, _retr, _sys_t, _rng = make_world(cfg)
+
     thr = _admission_compare(cfg, params, kb, n_req=8)
-    ok = thr["packed"] >= tol * thr["serial"]
-    print(f"# ci-smoke: packed={thr['packed']:.3f} rps, "
-          f"serial={thr['serial']:.3f} rps, tol={tol:.2f} -> "
-          f"{'OK' if ok else 'FAIL (packed < tol * serial)'}",
-          file=sys.stderr)
-    return 0 if ok else 1
+    ok_adm = thr["packed"] >= tol * thr["serial"]
+
+    rebuilds = _churn_compare(cfg, params, kb, n_req=8, warm=False)
+    # "<<": rebuild mode regathers on (almost) every membership change,
+    # the incremental batch only when the bucketed shape must grow
+    ok_churn = rebuilds["incremental"] * 4 <= rebuilds["rebuild"]
+
+    shb = _shared_blocks_compare(cfg, params, kb, n_req=8)
+    ok_shared = (
+        shb["zerocopy"]["blocks_reserved_total"]
+        < shb["copy"]["blocks_reserved_total"]
+        and shb["zerocopy"]["shared_blocks_peak"] > 0)
+
+    gates = {
+        "admission": dict(ok=ok_adm, tolerance=tol, **{
+            f"throughput_rps_{k}": v for k, v in thr.items()}),
+        "decode_churn": dict(ok=ok_churn, **{
+            f"rebuilds_{k}": v for k, v in rebuilds.items()}),
+        "shared_blocks": dict(ok=ok_shared, copy=shb["copy"],
+                              zerocopy=shb["zerocopy"]),
+    }
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "results")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "fig22_ci_smoke.json"), "w") as f:
+        json.dump(gates, f, indent=2)
+
+    for name, g in gates.items():
+        print(f"# ci-smoke[{name}]: "
+              f"{'OK' if g['ok'] else 'FAIL'} "
+              f"{ {k: v for k, v in g.items() if k != 'ok'} }",
+              file=sys.stderr)
+    return 0 if all(g["ok"] for g in gates.values()) else 1
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--ci-smoke", action="store_true",
-                    help="run only the admission perf gate; exit 1 if "
-                         "packed admission is slower than serial")
+                    help="run the CI perf gates (admission throughput, "
+                         "decode-churn rebuild counts, copy-vs-zerocopy "
+                         "reserved blocks); writes "
+                         "results/fig22_ci_smoke.json; exit 1 on any "
+                         "gate failure")
     args = ap.parse_args()
     if args.ci_smoke:
         raise SystemExit(ci_smoke())

@@ -9,13 +9,23 @@ CFO = CCI * (1 - beta'); every access bumps the variant's
 reuse-frequency f_r += 1/CFO, and the globally-lowest-f_r variants are
 evicted once the store exceeds N*M instances — the paper's argument for
 why plain LRU/LFU/FIFO is insufficient.
+
+Pool residency (zero-copy chunk sharing): ``attach_pool`` wires the
+store to the serving ``KVPool``. The ``PoolResidency`` registry then
+pins one canonical, block-aligned KV run per (variant, layout-start)
+into pool blocks; requests reference those shared blocks instead of
+copying the chunk KV per request. The store holds the run's owning pool
+reference; variant eviction unpins immediately at zero readers and
+defers the unpin to the last reader's release otherwise, and the
+variant's tier entry stays pinned against demotion while pool-resident
+(it is read by every hitting prefill's compute pass).
 """
 from __future__ import annotations
 
 import hashlib
 import itertools
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -27,6 +37,18 @@ def chunk_hash(tokens: np.ndarray) -> str:
     return hashlib.sha256(np.asarray(tokens, np.int32).tobytes()).hexdigest()[:16]
 
 
+def prompt_hashes(system_tokens, chunks: Sequence[np.ndarray]) -> List[str]:
+    """Canonical per-segment hash list for a [system][chunks...] prompt.
+
+    Single source of truth shared by plan building, prefetch scheduling
+    and the delta-reservation estimator — the latter probes pool
+    residency by (variant, layout start), so a drifting copy of this
+    logic would silently desynchronize admission estimates from the
+    actual write-back."""
+    return ["SYS-" + chunk_hash(np.asarray(system_tokens))] + \
+        [chunk_hash(np.asarray(c)) for c in chunks]
+
+
 @dataclass
 class Variant:
     variant_id: str
@@ -36,6 +58,107 @@ class Variant:
     nbytes: int
     f_r: float = 0.0
     uses: int = 0
+
+
+@dataclass
+class SharedRun:
+    """One canonical pool-resident KV run for (variant, layout start).
+
+    ``blocks`` carry the store's owning reference (refcount 1 from the
+    materializing ``alloc``); each reader adds one more via
+    ``KVPool.append_shared``. ``readers`` counts requests currently
+    referencing the run; ``evict_pending`` marks a variant eviction that
+    arrived while readers were live — the unpin happens at the last
+    ``release``."""
+    key: Tuple[str, int]
+    variant_id: str
+    blocks: List[int]
+    n_tokens: int
+    readers: int = 0
+    evict_pending: bool = False
+
+
+class PoolResidency:
+    """Registry of pool-resident chunk-cache runs (pin/unpin lifecycle,
+    see the ``kvpool`` module docstring)."""
+
+    def __init__(self, pool):
+        self.pool = pool
+        self.runs: Dict[Tuple[str, int], SharedRun] = {}
+
+    def resident(self, variant_id: str, start: int) -> bool:
+        return (variant_id, start) in self.runs
+
+    def acquire(self, variant: "Variant", start: int,
+                loader: Callable[[], Optional[tuple]],
+                reservation=None) -> Optional[SharedRun]:
+        """Return the canonical run for (variant, start) with one reader
+        reference added, materializing it on first use. ``loader`` must
+        yield the (k [L,S,..], v, pos [S]) exactly as the executor would
+        inject them (roped at the layout span); returning None — e.g.
+        the variant's KV is gone from every tier — aborts the pin and
+        the caller falls back to the copy path."""
+        key = (variant.variant_id, start)
+        run = self.runs.get(key)
+        if run is None:
+            loaded = loader()
+            if loaded is None:
+                return None
+            k, v, pos = loaded
+            blocks = self.pool.alloc(self.pool.blocks_needed(k.shape[1]),
+                                     reservation)
+            if blocks is None:
+                return None
+            self.pool.write_run(blocks, k, v, pos)
+            run = SharedRun(key=key, variant_id=variant.variant_id,
+                            blocks=blocks, n_tokens=int(k.shape[1]))
+            self.runs[key] = run
+            self.pool.counters.shared_runs_materialized += 1
+        run.readers += 1
+        return run
+
+    def release(self, run: SharedRun):
+        """Drop one reader reference; a deferred eviction unpins once
+        the last reader is gone."""
+        run.readers -= 1
+        if run.readers <= 0 and run.evict_pending:
+            self._unpin(run)
+
+    def reclaim(self, n_blocks: int) -> int:
+        """Pool-pressure backpressure: unpin zero-reader runs (oldest
+        materialization first — dict order) until roughly ``n_blocks``
+        pool blocks were freed. Returns the number actually freed; the
+        variants stay in the store, so a later hit simply
+        re-materializes. Without this, accumulated cold runs could pin
+        the whole pool and starve admissions forever."""
+        freed = 0
+        for run in list(self.runs.values()):
+            if freed >= n_blocks:
+                break
+            if run.readers <= 0 and not run.evict_pending:
+                # only the owner ref frees a block; readers-gone means
+                # every block drops to refcount 0 here
+                freed += sum(1 for b in run.blocks
+                             if self.pool.refs[b] == 1)
+                self._unpin(run)
+                self.pool.counters.run_reclaims += 1
+        return freed
+
+    def evict(self, variant_id: str):
+        """Variant left the store: unpin its runs now, or defer each
+        run's unpin until its readers drain."""
+        for run in [r for r in self.runs.values()
+                    if r.variant_id == variant_id]:
+            if run.readers > 0:
+                run.evict_pending = True
+                self.pool.counters.run_unpins_deferred += 1
+            else:
+                self._unpin(run)
+
+    def _unpin(self, run: SharedRun):
+        self.pool.release(run.blocks)        # the store's owning ref
+        self.runs.pop(run.key, None)
+        self.pool.counters.run_unpins += 1
 
 
 class ChunkStore:
@@ -53,6 +176,64 @@ class ChunkStore:
         self.table: Dict[str, List[Variant]] = {}
         self._counter = itertools.count()
         self.evictions = 0
+        self.residency: Optional[PoolResidency] = None
+
+    # ---- pool residency (zero-copy chunk sharing) ------------------------
+    def attach_pool(self, pool) -> PoolResidency:
+        """Wire the store to the serving KVPool so chunk-cache hits can
+        be pinned once and shared across requests' block tables. One
+        store serves one pool at a time: a re-attach (sequential
+        engines over one store) drains the previous pool's zero-reader
+        runs — tier pins included — and only errors if readers are
+        still live there (a silent swap would leak the old pool's
+        owning refs and desynchronize tier pin counts)."""
+        if self.residency is not None and self.residency.pool is not pool:
+            self.reclaim_pool_runs(pool.num_blocks + self.residency
+                                   .pool.num_blocks)
+            if self.residency.runs:
+                raise ValueError(
+                    "ChunkStore already attached to a different KVPool "
+                    "with live readers; use one store per pool (or "
+                    "finish the old engine's requests first)")
+            self.residency = PoolResidency(pool)
+        elif self.residency is None:
+            self.residency = PoolResidency(pool)
+        return self.residency
+
+    def reclaim_pool_runs(self, n_blocks: int) -> int:
+        """Free ~``n_blocks`` pool blocks by unpinning zero-reader runs
+        (tier pins released alongside). Admission-side backpressure."""
+        if self.residency is None:
+            return 0
+        before = dict(self.residency.runs)
+        freed = self.residency.reclaim(n_blocks)
+        for key, run in before.items():
+            if key not in self.residency.runs:
+                self.tiers.unpin(run.variant_id)
+        return freed
+
+    def pin_pool_run(self, variant: "Variant", start: int,
+                     loader: Callable[[], Optional[tuple]],
+                     reservation=None) -> Optional[SharedRun]:
+        """Acquire (materializing if needed) the shared pool run for
+        ``variant`` at layout ``start``; the variant's tier entry is
+        pinned against demotion while pool-resident. Returns None when
+        no pool is attached or the pin cannot be satisfied."""
+        if self.residency is None:
+            return None
+        fresh = not self.residency.resident(variant.variant_id, start)
+        run = self.residency.acquire(variant, start, loader, reservation)
+        if run is not None and fresh:
+            self.tiers.pin(variant.variant_id)
+        return run
+
+    def release_pool_run(self, run: SharedRun):
+        """Drop one reader; the tier pin follows the run's lifetime."""
+        if self.residency is None:
+            return
+        self.residency.release(run)
+        if run.key not in self.residency.runs:
+            self.tiers.unpin(run.variant_id)
 
     # ---- capacity --------------------------------------------------------
     @property
@@ -92,6 +273,10 @@ class ChunkStore:
         if not self.table[var.chunk_hash]:
             del self.table[var.chunk_hash]
         self.tiers.delete(var.variant_id)
+        if self.residency is not None:
+            # pool-resident runs unpin now, or on the last reader's
+            # release when the eviction races live requests
+            self.residency.evict(var.variant_id)
 
     # ---- lookup ----------------------------------------------------------
     def lookup(self, chash: str) -> List[Variant]:

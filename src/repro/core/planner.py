@@ -14,7 +14,7 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.chunkstore import ChunkStore, Variant, chunk_hash
+from repro.core.chunkstore import ChunkStore, Variant, prompt_hashes
 from repro.core.select import select_recompute_tokens
 
 
@@ -77,8 +77,7 @@ def build_plan(store: Optional[ChunkStore], system_tokens: np.ndarray,
     segs: List[Segment] = []
     pos = 0
     all_parts = [np.asarray(system_tokens)] + [np.asarray(c) for c in chunks]
-    hashes = [("SYS-" + chunk_hash(all_parts[0]))] + \
-        [chunk_hash(c) for c in all_parts[1:]]
+    hashes = prompt_hashes(all_parts[0], all_parts[1:])
     for i, part in enumerate(all_parts):
         segs.append(Segment(stat_id=i, start=pos, end=pos + len(part),
                             tokens=part, chash=hashes[i]))

@@ -34,6 +34,20 @@ def _bucket(n: int, b: int) -> int:
     return max(b, -(-n // b) * b)
 
 
+def inject_chunk_kv(cfg: ModelConfig, kv, rope_pos) -> Tuple[np.ndarray,
+                                                             np.ndarray]:
+    """Stored (de-roped) chunk-cache KV -> the exact bytes injected into
+    a prefill layout at ``rope_pos``: float32 cast + RoPE at the target
+    positions. Single source of truth shared by the executor's compute
+    injection and the engine's canonical pool-run materialization — the
+    zero-copy design's bit-equality REQUIRES both to produce identical
+    bytes, so never fork this transform."""
+    k = np.asarray(apply_rope(
+        jnp.asarray(np.asarray(kv["k"], np.float32)),
+        jnp.asarray(rope_pos), cfg.rope_theta))
+    return k, np.asarray(kv["v"], np.float32)
+
+
 @functools.lru_cache(maxsize=None)
 def _embed_fn(cfg):
     return jax.jit(functools.partial(M.embed_tokens, cfg))
@@ -261,14 +275,11 @@ class CacheCraftExecutor:
                     load_measured[r] += info.seconds_measured
                     tier_hits[r][info.tier] += 1
                 span = np.arange(d.seg.start, d.seg.end, dtype=np.int32)
-                kc = jnp.asarray(np.asarray(kv["k"], np.float32))
                 rope_pos = span if self.fix_rpe else \
                     (np.arange(d.seg.length) + d.variant.scores.orig_start)
-                kc = np.asarray(apply_rope(kc, jnp.asarray(rope_pos),
-                                           cfg.rope_theta))
+                kc, vc = inject_chunk_kv(cfg, kv, rope_pos)
                 k_np[:, off + d.seg.start:off + d.seg.end] = kc
-                v_np[:, off + d.seg.start:off + d.seg.end] = \
-                    np.asarray(kv["v"], np.float32)
+                v_np[:, off + d.seg.start:off + d.seg.end] = vc
                 pos_layout[off + d.seg.start:off + d.seg.end] = \
                     span if self.fix_causality \
                     else (np.arange(d.seg.length) +

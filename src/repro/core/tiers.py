@@ -64,6 +64,10 @@ class TieredStore:
         os.makedirs(ssd_dir, exist_ok=True)
         self.sizes: Dict[str, int] = {}
         self.lru: Dict[str, float] = {}
+        # pin counts: pool-resident chunk caches are read by every
+        # hitting prefill's compute pass, so demotion skips them (one
+        # count per pool-resident run referencing the key)
+        self.pins: Dict[str, int] = {}
         self.lock = threading.RLock()
         self.stats = {"hits": {"hbm": 0, "cpu": 0, "ssd": 0},
                       "demotions": 0, "promotions": 0}
@@ -91,14 +95,29 @@ class TieredStore:
         self._write_ssd(key, value)
         return "ssd"
 
+    def pin(self, key: str):
+        """Exclude ``key`` from tier demotion (counted; one count per
+        pool-resident run referencing it)."""
+        with self.lock:
+            self.pins[key] = self.pins.get(key, 0) + 1
+
+    def unpin(self, key: str):
+        with self.lock:
+            n = self.pins.get(key, 0) - 1
+            if n <= 0:
+                self.pins.pop(key, None)
+            else:
+                self.pins[key] = n
+
     def _make_room(self, tier: str, nb: int) -> bool:
         if nb > self.caps[tier]:
             return False
         store = self.hbm if tier == "hbm" else self.cpu
         while self.used[tier] + nb > self.caps[tier]:
-            if not store:
+            victims = [k for k in store if k not in self.pins]
+            if not victims:
                 return False
-            victim = min(store, key=lambda k: self.lru.get(k, 0.0))
+            victim = min(victims, key=lambda k: self.lru.get(k, 0.0))
             self._demote(victim, tier)
         return True
 
@@ -202,6 +221,7 @@ class TieredStore:
             os.remove(p)
             self.used["ssd"] = max(0, self.used["ssd"] - nb)
         self.lru.pop(key, None)
+        self.pins.pop(key, None)
 
     # ---- async preloading (§3.5) ------------------------------------------
     def prefetch(self, key: str):

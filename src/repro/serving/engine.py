@@ -22,6 +22,17 @@ new request's gathered KV into a free row in place; leaves mask the row
 ``core.prefill.decode_fn``) and recycle it for the next join. A full
 gather rebuild happens only when the bucketed (B, S) shape must grow,
 cutting per-iteration overhead under churny workloads.
+
+Zero-copy chunk sharing (``share_chunk_kv``, on by default with a
+store): instead of copying every hit chunk's KV into private pool
+blocks per request, the write-back assembles the block table segment by
+segment — hit chunks attach the store's canonical pool-resident run via
+``KVPool.append_shared`` (refcount bump, nothing copied), recompute
+fixup rows CoW into the request's table, and only miss/question
+segments allocate fresh blocks. Admission then reserves only the delta
+blocks (``_estimate_blocks``), so N concurrent requests over the same
+hot chunk pay ~1x its HBM instead of Nx and more requests pack per
+iteration under pool pressure.
 """
 from __future__ import annotations
 
@@ -34,8 +45,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.chunkstore import ChunkStore, chunk_hash
-from repro.core.prefill import CacheCraftExecutor, pack_cache
+from repro.core.chunkstore import ChunkStore, prompt_hashes
+from repro.core.prefill import CacheCraftExecutor, inject_chunk_kv, \
+    pack_cache
 from repro.core.preload import preload_depth
 from repro.models import model as M
 from repro.models.config import ModelConfig
@@ -131,6 +143,7 @@ class Engine:
                  executor_kwargs: Optional[dict] = None,
                  time_scale: float = 1.0,
                  incremental_decode: bool = True,
+                 share_chunk_kv: bool = True,
                  trace_decode: bool = False):
         self.cfg = cfg
         self.params = params
@@ -141,6 +154,19 @@ class Engine:
         self.counters = ServingCounters()
         self.pool = KVPool(cfg.num_layers, cfg.num_kv_heads, cfg.head_dim_,
                            pool_blocks, block_size, counters=self.counters)
+        # zero-copy chunk sharing needs a store AND layout-local
+        # positions (fix_rpe/fix_causality), otherwise the injected KV
+        # is not a function of (variant, layout start) alone; a
+        # recompute fraction of 1.0 rewrites every cached row, leaving
+        # nothing shareable (the write-back would pin runs only to CoW
+        # every block, and the delta estimate would under-reserve)
+        frac = self.executor.force_recompute_fraction
+        self.share_chunk_kv = bool(
+            share_chunk_kv and store is not None
+            and self.executor.fix_rpe and self.executor.fix_causality
+            and (frac is None or frac < 1.0))
+        if self.share_chunk_kv:
+            store.attach_pool(self.pool)
         self.decode_bucket_b = decode_bucket_b
         self.seq_bucket = seq_bucket
         self.time_scale = time_scale
@@ -164,20 +190,41 @@ class Engine:
     def submit(self, req: Request):
         self.clock = max(self.clock, req.arrival_time)
         self.scheduler.enqueue(req, self.clock)
-        # async preload (§3.5): schedule tier promotion while queued
+        # async preload (§3.5): schedule tier promotion while queued.
+        # Storeless engines never consult prompt hashes — skip the SHA
+        # work entirely (the delta estimator computes lazily if needed).
         if self.store is not None:
-            hashes = [("SYS-" + chunk_hash(req.system_tokens))] + \
-                [chunk_hash(c) for c in req.chunk_tokens]
-            for i, h in enumerate(hashes):
-                self.store.prefetch(h, hashes[:i])
+            if req.prompt_hashes is None:
+                req.prompt_hashes = prompt_hashes(req.system_tokens,
+                                                  req.chunk_tokens)
+            for i, h in enumerate(req.prompt_hashes):
+                self.store.prefetch(h, req.prompt_hashes[:i])
 
     # ---- one ORCA iteration -------------------------------------------------
     def step(self) -> bool:
         """Returns True if any work was done."""
         worked = False
-        decode_tokens = sum(r.table.length for r in self.decoding)
+        decode_tokens = sum(r.total_len for r in self.decoding)
+        fails_before = self.counters.reserve_failures
         reqs = self.scheduler.next_prefills(
-            decode_tokens, len(self.decoding), pool=self.pool)
+            decode_tokens, len(self.decoding), pool=self.pool,
+            reserve_blocks_fn=self._estimate_blocks
+            if self.share_chunk_kv else None)
+        if not reqs and self.scheduler.queue and self.share_chunk_kv \
+                and self.counters.reserve_failures > fails_before:
+            # admission backpressure: cold canonical runs (zero
+            # readers) must not pin the pool while the queue starves.
+            # Gated on an actual pool.reserve failure this iteration
+            # (an ORCA-budget or decode-cap deferral must not churn
+            # runs) and sized by the head's DELTA shortfall — even
+            # with sharing the head could not reserve, so any cold
+            # run freed helps.
+            head = self.scheduler.queue[0]
+            need = self._estimate_blocks(head)
+            if self.pool.free_blocks < need:
+                if self.store.reclaim_pool_runs(
+                        need - self.pool.free_blocks):
+                    worked = True
         if reqs:
             self._run_prefills(reqs)
             worked = True
@@ -225,13 +272,16 @@ class Engine:
 
         joined: List[Request] = []
         for req, res in zip(reqs, results):
-            ok = self.pool.write_prefill(req.table, res.k_layers,
-                                         res.v_layers, res.pos_layout,
-                                         reservation=req.reservation)
+            ok = self._write_back(req, res)
             if not ok:
-                # unreachable with reserve-at-admission; kept as a
-                # defensive path (and counted so tests can assert 0)
+                # copy path: unreachable with reserve-at-admission
+                # (counted so tests can assert 0). Zero-copy path: the
+                # delta estimate does not budget CoW clones, so a tight
+                # pool can fail the write-back — escalate the retry to
+                # a full reservation + copy-style write-back, which the
+                # reservation then covers by construction.
                 self.counters.burn_requeues += 1
+                req.reserve_full = True
                 self._requeue(req)
                 continue
             first = int(np.argmax(res.logits_last[:self.cfg.vocab_size]))
@@ -246,9 +296,140 @@ class Engine:
             self.stats.prefills += 1
             self.stats.prefill_tokens_total += res.total_len
             self.stats.prefill_tokens_computed += res.plan.num_active_tokens
+            self.counters.delta_blocks_saved += req.delta_blocks_saved
+            req.delta_blocks_saved = 0
             self.decoding.append(req)
             joined.append(req)
         self._decode_join_batch(joined)
+
+    # ---- zero-copy chunk sharing -------------------------------------------
+    def _run_loader(self, variant, start: int, length: int):
+        """Loader for a canonical pool run: the variant's stored KV
+        roped at the layout span via the same ``inject_chunk_kv``
+        transform the executor's compute pass uses — byte-identity is
+        the zero-copy bit-equality contract (fix_rpe/fix_causality)."""
+        def load():
+            # re-reads the variant (the compute pass promoted it to the
+            # HBM tier moments earlier) and re-ropes it: a once-per-run
+            # cost, accepted over retaining a second copy of every hit
+            # segment's injected bytes in each PrefillResult
+            kv, _info = self.store.get_kv(variant)
+            if kv is None:
+                return None
+            span = np.arange(start, start + length, dtype=np.int32)
+            k, v = inject_chunk_kv(self.cfg, kv, span)
+            return k, v, span
+        return load
+
+    def _write_back(self, req: Request, res) -> bool:
+        """Persist one prefill result into the request's block table.
+
+        Copy mode: one dense ``write_prefill``. Zero-copy mode: segment
+        by segment — hit chunks attach the store's canonical shared run
+        (recompute-fixup rows CoW into this table), everything else
+        (miss chunks, the question) gets fresh block-aligned segments.
+        Non-recompute rows of a hit segment are never touched by the
+        windowed pass, so shared-run bytes + per-request fixups
+        reproduce the copy path's KV exactly."""
+        pool, plan = self.pool, res.plan
+        if not self.share_chunk_kv or req.reserve_full:
+            return pool.write_prefill(req.table, res.k_layers,
+                                      res.v_layers, res.pos_layout,
+                                      reservation=req.reservation)
+        table = req.table
+        for d in plan.decisions:
+            seg = d.seg
+            if seg.length == 0:
+                continue
+            # a hit whose recompute set covers the whole segment would
+            # pin the run and then CoW-clone every block — strictly
+            # more work than a private copy, so fall through
+            if d.is_hit and len(d.recompute_idx) < seg.length:
+                run = self.store.pin_pool_run(
+                    d.variant, seg.start,
+                    self._run_loader(d.variant, seg.start, seg.length),
+                    reservation=req.reservation)
+                if run is not None:
+                    base = pool.append_shared(table, run.blocks)
+                    req.shared_runs.append(run)
+                    self.counters.shared_seg_hits += 1
+                    ridx = np.asarray(d.recompute_idx, np.int64)
+                    if ridx.size and not pool.write_rows(
+                            table, base + ridx,
+                            res.k_layers[:, seg.start + ridx],
+                            res.v_layers[:, seg.start + ridx],
+                            res.pos_layout[seg.start + ridx],
+                            reservation=req.reservation):
+                        return False
+                    continue
+            # miss (or pin failed, e.g. variant evicted mid-batch):
+            # private block-aligned copy of this segment's final KV
+            if pool.append_segment(
+                    table, res.k_layers[:, seg.start:seg.end],
+                    res.v_layers[:, seg.start:seg.end],
+                    res.pos_layout[seg.start:seg.end],
+                    reservation=req.reservation) is None:
+                return False
+        q = plan.question
+        if q.length == 0:
+            return True
+        return pool.append_segment(
+            table, res.k_layers[:, q.start:q.end],
+            res.v_layers[:, q.start:q.end], res.pos_layout[q.start:q.end],
+            reservation=req.reservation) is not None
+
+    def _release_runs(self, req: Request):
+        for run in req.shared_runs:
+            self.store.release_pool_run(run)
+        req.shared_runs = []
+
+    def _estimate_blocks(self, req: Request) -> int:
+        """Delta-aware admission estimate: segments covered by an
+        already-resident shared run cost zero new blocks; everything
+        else is counted at block-aligned granularity (plus the question
+        + decode tail). CoW clones beyond the estimate fall back to the
+        free list. Strategies whose hit logic diverges from
+        ``best_variant`` (prefix) reserve the full estimate, as does a
+        retry after a failed zero-copy write-back (``reserve_full``) —
+        the pairing with the copy-style write-back guarantees the
+        retry cannot fail again for lack of blocks.
+
+        Layout and hit selection must mirror ``build_plan`` (same
+        ``prompt_hashes``, same cumulative starts, same ``best_variant``
+        probe) — a mismatched residency key would under-reserve and
+        push write-backs onto the defensive burn-requeue path."""
+        bs = self.pool.block_size
+        if req.reserve_full:
+            # the escalated retry writes back copy-style (dense
+            # write_prefill), whose need is the DENSE block count —
+            # the per-segment aligned sum below would overshoot it and
+            # could trip the scheduler's can-never-fit fail-fast on
+            # pools the copy path serves
+            req.delta_blocks_saved = 0
+            return self.pool.blocks_needed(Scheduler._need(req))
+        parts = [np.asarray(req.system_tokens)] + \
+            [np.asarray(c) for c in req.chunk_tokens]
+        if req.prompt_hashes is None:
+            req.prompt_hashes = prompt_hashes(parts[0], parts[1:])
+        hashes = req.prompt_hashes
+        residency = self.store.residency
+        predict = self.executor.strategy not in ("prefix", "all")
+        blocks = full = 0
+        start = 0
+        for i, part in enumerate(parts):
+            n = -(-len(part) // bs)
+            full += n
+            shared = False
+            if predict and residency is not None:
+                hit = self.store.best_variant(hashes[i], hashes[:i])
+                shared = hit is not None and \
+                    residency.resident(hit[0].variant_id, start)
+            if not shared:
+                blocks += n
+            start += len(part)
+        tail = -(-(len(req.question_tokens) + req.max_new_tokens) // bs)
+        req.delta_blocks_saved = full - blocks
+        return blocks + tail
 
     def _requeue(self, req: Request):
         """Return a request to the queue with its per-attempt state
@@ -257,6 +438,7 @@ class Engine:
         ``output_tokens`` would terminate the retry early with a
         corrupted output sequence)."""
         self.pool.free_table(req.table)
+        self._release_runs(req)
         self.pool.cancel(req.reservation)
         req.reservation = None
         req.output_tokens = []
@@ -265,8 +447,10 @@ class Engine:
 
     # ---- decode batch -------------------------------------------------------
     def _row_capacity(self, req: Request) -> int:
-        """Sequence slots this request may touch while decoding."""
-        return req.table.length + req.max_new_tokens + 1
+        """Arena sequence slots this request may touch while decoding
+        (the arena holds the compact logical view, so capacity follows
+        ``total_len``, not the block-aligned table length)."""
+        return req.total_len + req.max_new_tokens + 1
 
     def _rebuild_decode_batch(self):
         B = _bucket(len(self.decoding), self.decode_bucket_b)
@@ -278,7 +462,7 @@ class Engine:
         v = np.zeros_like(k)
         pos = np.full((B, S), -1, np.int32)
         for i, r in enumerate(self.decoding):
-            kk, vv, pp = self.pool.gather(r.table, S)
+            kk, vv, pp = self.pool.gather(r.table, S, compact=True)
             k[:, i], v[:, i], pos[i] = kk, vv, pp
         # to model cache format (batched pack)
         P, G = len(self.cfg.pattern), self.cfg.n_groups
@@ -328,7 +512,7 @@ class Engine:
         ``_decode_join_batch``)."""
         _B, S = self._dshape
         row = self._rows.index(None)
-        k, v, pos = self.pool.gather(req.table, S)
+        k, v, pos = self.pool.gather(req.table, S, compact=True)
         self._dcache = _join_row_fn(self.cfg)(
             self._dcache, jnp.int32(row), jnp.asarray(k), jnp.asarray(v),
             jnp.asarray(pos))
@@ -366,7 +550,9 @@ class Engine:
                 continue                   # decode_fn row-masking)
             toks[i] = r.output_tokens[-1]
             poss[i] = r.total_len          # logical position (RoPE/causal)
-            slots[i] = r.table.length      # physical append slot
+            slots[i] = r.total_len         # arena append slot (compact
+            #   logical view; the pool's block-aligned slot is private
+            #   to append_token below)
         t0 = time.perf_counter()
         logits, self._dcache = self._decode_fn(
             self.params, jnp.asarray(toks), jnp.asarray(poss), self._dcache,
@@ -384,10 +570,16 @@ class Engine:
                 continue
             nxt = int(np.argmax(logits[i, :self.cfg.vocab_size]))
             # persist the newly written KV into the paged pool
-            ktok, vtok = self._extract_slot_kv(i, r.table.length)
+            ktok, vtok = self._extract_slot_kv(i, r.total_len)
             if not self.pool.append_token(r.table, ktok, vtok,
                                           r.total_len,
                                           reservation=r.reservation):
+                # zero-copy: CoW fixups may have drained the delta
+                # reservation write_rows drew on — escalate the retry
+                # to a full reservation like the write-back burn path,
+                # so the request cannot exhaust retries and FAIL where
+                # the copy path would have served it
+                r.reserve_full = True
                 self.decoding.remove(r)
                 self._decode_leave(i)
                 self._requeue(r)
@@ -404,6 +596,7 @@ class Engine:
                     pad = _bucket(max(r.table.length, 1), self.seq_bucket)
                     self.final_kv[r.rid] = self.pool.gather(r.table, pad)
                 self.pool.free_table(r.table)
+                self._release_runs(r)
                 self.pool.commit(r.reservation)
                 r.reservation = None
                 self.scheduler.on_terminal(r)

@@ -33,6 +33,46 @@ the conservation law
 
 holds after every operation (machine-checked by
 ``tests/test_kvpool_properties.py``).
+
+Zero-copy chunk sharing (pin/unpin lifecycle)
+---------------------------------------------
+Chunk-cache hits are injected as *shared block runs* instead of being
+copied into each request's private blocks. The lifecycle:
+
+* **pin** — the chunk store materializes one canonical, block-aligned
+  run per (variant, layout-start) pair: ``alloc`` + ``write_run``. The
+  store holds the run's owning reference (``refs == 1``) for as long as
+  the variant stays pool-resident.
+* **share** — each request's table references the run via
+  ``append_shared`` (``refs += 1`` per reader, blocks appear in the
+  table's block list; the table always starts shared runs and fresh
+  segments on a block boundary, padding slots carry ``pos == -1`` so
+  attention masks them and numerics stay bit-identical to the copy
+  path).
+* **CoW** — a write that would mutate a block visible to other readers
+  (``refs > 1``) — the recompute-fixup rows of a hit chunk
+  (``write_rows``) or a decode append into a shared tail
+  (``append_token``) — first clones the block into the writer's table,
+  so no reader ever observes another request's writes.
+* **unpin** — when the variant is evicted from the chunk store the
+  owning reference is dropped — immediately at zero readers, deferred
+  to the last reader's ``free_table``/run-release otherwise
+  (``PoolResidency`` in ``core.chunkstore`` tracks readers and the
+  ``evict_pending`` flag). Under admission pressure the engine also
+  *reclaims* cold runs (zero readers) oldest-first, so pinned blocks
+  never starve the queue — the variants stay cached in the tiers and
+  re-materialize on the next hit.
+
+Delta-only reservation protocol
+-------------------------------
+With sharing on, admission reserves only the *delta* blocks — the
+segments the request cannot share: miss chunks, the question tail and
+decode headroom. Resident shared runs cost the admitting request zero
+new blocks (the owner already holds them), so
+``Scheduler.next_prefills`` (via the engine's block estimator) packs
+strictly more requests per iteration under pool pressure while the
+conservation law keeps holding: a CoW clone that exceeds the delta
+estimate simply falls back from the reservation to the free list.
 """
 from __future__ import annotations
 
@@ -82,6 +122,10 @@ class KVPool:
         self.refs = np.zeros(num_blocks, np.int32)
         self.free: List[int] = list(range(num_blocks - 1, -1, -1))
         self._reserved = 0               # blocks inside open reservations
+        # incremental mirrors of (refs > 0).sum() / (refs > 1).sum() so
+        # the hot alloc/share/release paths never scan the whole pool
+        self._live = 0
+        self._shared = 0
         self.counters = counters if counters is not None \
             else ServingCounters()
 
@@ -105,8 +149,22 @@ class KVPool:
     @property
     def live_blocks(self) -> int:
         """Blocks referenced by at least one table — shared (CoW) blocks
-        count once, which is what makes the conservation law hold."""
-        return int((self.refs > 0).sum())
+        count once, which is what makes the conservation law hold
+        (incrementally maintained; the property suite machine-checks it
+        against the free list)."""
+        return self._live
+
+    @property
+    def shared_blocks(self) -> int:
+        """Blocks currently referenced by more than one holder (a
+        canonical run's owner counts as one holder)."""
+        return self._shared
+
+    def _note_usage(self):
+        self.counters.live_blocks_peak = max(
+            self.counters.live_blocks_peak, self._live)
+        self.counters.shared_blocks_peak = max(
+            self.counters.shared_blocks_peak, self._shared)
 
     def blocks_needed(self, tokens: int) -> int:
         return -(-tokens // self.block_size)
@@ -121,6 +179,7 @@ class KVPool:
         res = Reservation(blocks=[self.free.pop() for _ in range(n)])
         self._reserved += n
         self.counters.reservations_made += 1
+        self.counters.blocks_reserved_total += n
         self.counters.blocks_reserved_peak = max(
             self.counters.blocks_reserved_peak, self._reserved)
         return res
@@ -154,6 +213,7 @@ class KVPool:
         self._reserved -= 1
         res.drawn += 1
         self.refs[b] = 1
+        self._live += 1
         return b
 
     # ---- allocation --------------------------------------------------------
@@ -173,6 +233,7 @@ class KVPool:
             if reservation is not None:
                 for b in reversed(out):
                     self.refs[b] = 0
+                    self._live -= 1
                     reservation.blocks.append(b)
                     reservation.drawn -= 1
                     self._reserved += 1
@@ -180,19 +241,29 @@ class KVPool:
         for _ in range(short):
             b = self.free.pop()
             self.refs[b] = 1
+            self._live += 1
             out.append(b)
+        self._note_usage()
         return out
 
     def share(self, blocks: List[int]):
         for b in blocks:
             self.refs[b] += 1
+            if self.refs[b] == 1:
+                self._live += 1
+            elif self.refs[b] == 2:
+                self._shared += 1
+        self._note_usage()
 
     def release(self, blocks: List[int]):
         for b in blocks:
             self.refs[b] -= 1
             if self.refs[b] == 0:
+                self._live -= 1
                 self.pos[b] = -1
                 self.free.append(b)
+            elif self.refs[b] == 1:
+                self._shared -= 1
 
     # ---- IO ----------------------------------------------------------------
     def write_prefill(self, table: BlockTable, k_layers: np.ndarray,
@@ -208,14 +279,103 @@ class KVPool:
             if got is None:
                 return False
             table.blocks.extend(got)
+        self.write_run(table.blocks[:need], k_layers, v_layers, pos)
+        table.length = S
+        return True
+
+    def write_run(self, blocks: List[int], k_layers: np.ndarray,
+                  v_layers: np.ndarray, pos: np.ndarray):
+        """Write [L,S,...] KV into a pre-allocated block run (the
+        canonical pool-resident copy of a chunk-cache variant). Padding
+        slots of the tail block are zeroed with ``pos == -1`` so every
+        reader sees deterministic, attention-inert padding."""
+        S = k_layers.shape[1]
         bs = self.block_size
-        for i in range(need):
+        assert len(blocks) == self.blocks_needed(S)
+        for i, b in enumerate(blocks):
             s0, s1 = i * bs, min(S, (i + 1) * bs)
-            b = table.blocks[i]
             self.k[:, b, :s1 - s0] = k_layers[:, s0:s1]
             self.v[:, b, :s1 - s0] = v_layers[:, s0:s1]
             self.pos[b, :s1 - s0] = pos[s0:s1]
-        table.length = S
+            if s1 - s0 < bs:
+                self.k[:, b, s1 - s0:] = 0.0
+                self.v[:, b, s1 - s0:] = 0.0
+                self.pos[b, s1 - s0:] = -1
+
+    def append_shared(self, table: BlockTable, blocks: List[int]) -> int:
+        """Zero-copy: reference a canonical run's blocks from this
+        table (``refs += 1`` per block, nothing copied). The run starts
+        on the next block boundary (``len(table.blocks)`` whole blocks);
+        padding slots before and inside it carry ``pos == -1`` and are
+        masked by attention. Returns the table-slot index where the
+        run's first token landed."""
+        assert table.length <= len(table.blocks) * self.block_size
+        base = len(table.blocks)
+        self.share(blocks)
+        table.blocks.extend(blocks)
+        table.length = (base + len(blocks)) * self.block_size
+        self.counters.shared_block_refs += len(blocks)
+        return base * self.block_size
+
+    def append_segment(self, table: BlockTable, k_layers: np.ndarray,
+                       v_layers: np.ndarray, pos: np.ndarray,
+                       reservation: Optional[Reservation] = None
+                       ) -> Optional[int]:
+        """Append a fresh (private) block-aligned segment of S tokens at
+        the table tail, drawing blocks from ``reservation`` first.
+        Returns the segment's first table-slot index, or None when the
+        pool cannot supply the blocks. The final segment of a prefill
+        leaves ``table.length`` at its exact token end so decode appends
+        continue in the same block."""
+        S = k_layers.shape[1]
+        need = self.blocks_needed(S)
+        got = self.alloc(need, reservation)
+        if got is None:
+            return None
+        base = len(table.blocks)
+        table.blocks.extend(got)
+        self.write_run(got, k_layers, v_layers, pos)
+        table.length = base * self.block_size + S
+        return base * self.block_size
+
+    def _cow_block(self, table: BlockTable, bi: int,
+                   reservation: Optional[Reservation] = None
+                   ) -> Optional[int]:
+        """Clone table block ``bi`` if other holders still reference it
+        (copy-on-write); returns the (possibly new) block id."""
+        b = table.blocks[bi]
+        if self.refs[b] <= 1:
+            return b
+        nb = self.alloc(1, reservation)
+        if nb is None:
+            return None
+        self.k[:, nb[0]] = self.k[:, b]
+        self.v[:, nb[0]] = self.v[:, b]
+        self.pos[nb[0]] = self.pos[b]
+        self.release([b])
+        table.blocks[bi] = nb[0]
+        self.counters.cow_clones += 1
+        return nb[0]
+
+    def write_rows(self, table: BlockTable, slots: np.ndarray,
+                   k_rows: np.ndarray, v_rows: np.ndarray,
+                   pos_rows: np.ndarray,
+                   reservation: Optional[Reservation] = None) -> bool:
+        """Overwrite individual table slots (the recompute-fixup rows of
+        a hit chunk): k_rows/v_rows [L, n, Hkv, D] land at table slot
+        indices ``slots`` [n]. Blocks shared with other holders are
+        CoW-cloned first, so the canonical run (and every other reader)
+        keeps its bytes."""
+        bs = self.block_size
+        for bi in sorted({int(s) // bs for s in slots}):
+            if self._cow_block(table, bi, reservation) is None:
+                return False
+        for j, s in enumerate(np.asarray(slots, np.int64)):
+            b = table.blocks[int(s) // bs]
+            off = int(s) % bs
+            self.k[:, b, off] = k_rows[:, j]
+            self.v[:, b, off] = v_rows[:, j]
+            self.pos[b, off] = pos_rows[j]
         return True
 
     def append_token(self, table: BlockTable, k_tok: np.ndarray,
@@ -229,28 +389,28 @@ class KVPool:
             if got is None:
                 return False
             table.blocks.extend(got)
-        b = table.blocks[bi]
-        if self.refs[b] > 1:             # copy-on-write
-            nb = self.alloc(1, reservation)
-            if nb is None:
-                return False
-            self.k[:, nb[0]] = self.k[:, b]
-            self.v[:, nb[0]] = self.v[:, b]
-            self.pos[nb[0]] = self.pos[b]
-            self.release([b])
-            table.blocks[bi] = nb[0]
-            b = nb[0]
+        b = self._cow_block(table, bi, reservation)
+        if b is None:
+            return False
         self.k[:, b, off] = k_tok
         self.v[:, b, off] = v_tok
         self.pos[b, off] = pos
         table.length = idx + 1
         return True
 
-    def gather(self, table: BlockTable, pad_to: int):
+    def gather(self, table: BlockTable, pad_to: int,
+               compact: bool = False):
         """Block table -> dense [L, pad_to, Hkv, D] view (+ pos [pad_to]).
 
         An empty table (``length == 0`` / no blocks) returns a
-        well-formed all-padding view: zero KV, positions all -1."""
+        well-formed all-padding view: zero KV, positions all -1.
+
+        ``compact=True`` strips the block-aligned layout's internal
+        padding and orders tokens by logical position — the decode
+        arena MUST use this view so attention reductions see the exact
+        same operand layout whether the table was built by the copy or
+        the zero-copy write-back (interleaved padding is numerically
+        inert but shifts reduction groupings, breaking bit-equality)."""
         if table.length == 0 or not table.blocks:
             k = np.zeros((self.L, pad_to) + self.k.shape[3:], self.k.dtype)
             v = np.zeros_like(k)
@@ -263,7 +423,20 @@ class KVPool:
         v = self.v[:, ids].reshape(self.L, n * bs, *self.v.shape[3:])
         pos = self.pos[ids].reshape(n * bs).copy()
         pos[table.length:] = -1
-        S = n * bs
+        if compact:
+            idx = np.where(pos >= 0)[0]
+            order = idx[np.argsort(pos[idx], kind="stable")]
+            if order.size and (order == np.arange(order.size)).all():
+                # copy-path tables are already compact (a contiguous
+                # sorted prefix): slice the tail padding off without
+                # the full fancy-index copy — the decode hot path
+                m = order.size
+                k, v, pos = k[:, :m], v[:, :m], pos[:m]
+            else:
+                k = k[:, order]
+                v = v[:, order]
+                pos = pos[order]
+        S = pos.shape[0]
         if S < pad_to:
             padw = ((0, 0), (0, pad_to - S), (0, 0), (0, 0))
             k = np.pad(k, padw)

@@ -26,9 +26,26 @@ class ServingCounters:
     reservations_cancelled: int = 0
     reserve_failures: int = 0            # admissions deferred for headroom
     blocks_reserved_peak: int = 0
+    blocks_reserved_total: int = 0       # sum of all reservation sizes
+    # --- delta-only admission (zero-copy chunk sharing) ---
+    delta_blocks_saved: int = 0          # full-estimate minus reserved
+    # --- zero-copy shared chunk blocks (pin/share/CoW/unpin) ---
+    shared_seg_hits: int = 0             # hit segments attached zero-copy
+    shared_runs_materialized: int = 0    # canonical runs pinned into pool
+    shared_block_refs: int = 0           # block references added by shares
+    shared_blocks_peak: int = 0          # max blocks with refcount > 1
+    live_blocks_peak: int = 0            # max blocks with refcount > 0
+    cow_clones: int = 0                  # copy-on-write block splits
+    run_unpins: int = 0                  # canonical runs released
+    run_unpins_deferred: int = 0         # evictions that waited on readers
+    run_reclaims: int = 0                # zero-reader runs unpinned under
+    #     pool pressure (admission backpressure)
     # --- packed prefill admission ---
     burn_requeues: int = 0               # computed a prefill, then failed
-    #     write_prefill and requeued (must stay 0 with reservations on)
+    #     the KV write-back and requeued. Stays 0 on the copy path with
+    #     reservations on; the zero-copy path may burn at most once per
+    #     pressured request (delta estimates do not budget CoW clones)
+    #     before the retry escalates to a full reservation
     # --- incremental decode batch ---
     decode_rebuilds: int = 0             # full (B, S) gather rebuilds
     decode_joins: int = 0                # requests written into a free row

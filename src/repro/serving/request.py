@@ -33,6 +33,17 @@ class Request:
     # KV blocks reserved at admission; the engine commits on completion
     # and cancels on requeue/failure
     reservation: Optional[Reservation] = None
+    # zero-copy chunk sharing: canonical pool runs this request's table
+    # references (reader refs released on terminal states / requeue)
+    shared_runs: List = field(default_factory=list)
+    # per-segment prompt hashes, computed once at submit (admission
+    # estimates probe them on every scheduler attempt)
+    prompt_hashes: Optional[List[str]] = None
+    # escalation after a failed zero-copy write-back: the retry
+    # reserves the full block need and writes back copy-style, so a
+    # delta estimate that under-budgeted CoW clones cannot FAIL a
+    # request the copy path would serve
+    reserve_full: bool = False
     output_tokens: List[int] = field(default_factory=list)
     total_len: int = 0
     # --- timings ---
@@ -41,6 +52,10 @@ class Request:
     t_first_token: Optional[float] = None
     t_done: Optional[float] = None
     # --- counters ---
+    # blocks the delta-aware admission estimate skipped vs a full
+    # per-request reservation (set by the engine's estimator, rolled
+    # into ServingCounters.delta_blocks_saved on admission)
+    delta_blocks_saved: int = 0
     prefill_tokens_computed: int = 0
     prefill_tokens_total: int = 0
     cache_hits: int = 0

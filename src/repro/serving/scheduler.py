@@ -77,6 +77,7 @@ class Scheduler:
     def next_prefills(self, decode_tokens_in_flight: int,
                       decode_batch_size: int, *,
                       pool=None,
+                      reserve_blocks_fn=None,
                       free_tokens: Optional[int] = None,
                       block_size: int = 1,
                       limit: Optional[int] = None) -> List[Request]:
@@ -91,6 +92,14 @@ class Scheduler:
         stays queued (blocks return as decode completes); one whose
         block need exceeds the whole pool fails through the bounded
         retry path so the queue cannot deadlock.
+
+        ``reserve_blocks_fn(req) -> int`` overrides the block estimate
+        (delta-only admission with zero-copy chunk sharing: segments
+        covered by a pool-resident shared run reserve nothing, so
+        admission headroom reflects true marginal cost and more
+        requests pack per iteration under pool pressure). The ORCA
+        token budget still counts full prompt tokens — shared keys
+        occupy attention compute either way.
 
         Without ``pool``, the legacy headroom estimate applies:
         ``free_tokens`` bounds admissions *beyond the first* (the first
@@ -115,7 +124,10 @@ class Scheduler:
             if budget + need > self.cfg.max_batch_tokens:
                 break
             bsz = pool.block_size if pool is not None else block_size
-            blocks = -(-need // bsz)
+            if pool is not None and reserve_blocks_fn is not None:
+                blocks = reserve_blocks_fn(self.queue[0])
+            else:
+                blocks = -(-need // bsz)
             if pool is not None:
                 if blocks > pool.num_blocks:
                     # can never fit: fail fast, keep the queue moving

@@ -4,6 +4,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# the whole module is the interpret-mode kernel matrix job in CI
+# (`-m kernel_interpret`, continue-on-error until CPU interpret cost is
+# resolved; the tier1 job deselects the marker so the soft gate is the
+# only CI gate on these). Default local runs still include it.
+pytestmark = pytest.mark.kernel_interpret
 # canonical spelling: real hypothesis when installed, skipping stand-ins
 # otherwise (see repro.compat)
 from repro.compat import given, settings, st  # noqa: F401

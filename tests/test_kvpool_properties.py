@@ -1,13 +1,20 @@
-"""Property-based KV-pool invariants (reservation protocol + CoW).
+"""Property-based KV-pool invariants (reservation protocol + CoW +
+zero-copy shared segments).
 
 Random interleavings of ``reserve``/``commit``/``cancel``/``alloc``/
-``share``/``release``/``write_prefill``/``append_token`` must preserve:
+``share``/``release``/``write_prefill``/``append_token`` plus the
+shared-segment ops (``pin`` a canonical run, ``share_ref`` it into a
+table, ``cow`` a row write over shared blocks, ``unpin``) must
+preserve:
 
 * refcounts >= 0 everywhere;
 * no block is simultaneously free and live (or free and reserved);
 * conservation: ``free_blocks + live_blocks + reserved_blocks ==
-  num_blocks`` (shared CoW blocks count once);
-* ``gather`` round-trips every written token's KV bit-exactly.
+  num_blocks`` (shared blocks count once no matter how many tables and
+  canonical runs reference them);
+* ``gather`` round-trips every written token's KV bit-exactly;
+* a CoW write never mutates a canonical run's bytes or another
+  reader's gathered KV.
 
 Uses the compat ``hypothesis`` shim: skips cleanly when the dev-dep is
 absent, never breaks collection (see repro.compat).
@@ -21,7 +28,8 @@ from repro.serving.kvpool import BlockTable, KVPool
 L, HKV, DH, BS, NB = 2, 2, 4, 4, 12
 
 OPS = ["alloc", "release", "share", "reserve", "commit", "cancel",
-       "write", "append", "free_table"]
+       "write", "append", "free_table", "pin", "share_ref", "cow",
+       "unpin"]
 
 
 def _pool():
@@ -35,7 +43,7 @@ def _tok(i):
     return base + 1000.0 * i
 
 
-def _check_invariants(pool, reservations, tables):
+def _check_invariants(pool, reservations, tables, runs=()):
     assert (pool.refs >= 0).all()
     free = pool.free
     free_set = set(free)
@@ -66,6 +74,40 @@ def _check_invariants(pool, reservations, tables):
                 gv[:, :n], np.stack(exp_v, axis=1))
             np.testing.assert_array_equal(gpos[:n], np.asarray(exp_pos))
         assert (gpos[n:] == -1).all()
+    # canonical shared runs keep their bytes no matter what readers do
+    # (CoW must clone before any write lands on a shared block)
+    for run in runs:
+        assert all(pool.refs[b] >= 1 for b in run["blocks"])
+        for i, b in enumerate(run["blocks"]):
+            s0 = i * pool.block_size
+            s1 = s0 + pool.block_size
+            np.testing.assert_array_equal(
+                pool.k[:, b], np.stack(run["exp_k"][s0:s1], axis=1))
+            np.testing.assert_array_equal(
+                pool.v[:, b], np.stack(run["exp_v"][s0:s1], axis=1))
+            np.testing.assert_array_equal(
+                pool.pos[b], np.asarray(run["exp_pos"][s0:s1]))
+
+
+def _pin_run(pool, counter, S):
+    """Materialize a canonical shared run of S tokens; returns (run
+    dict with expected content incl. the zeroed tail padding, tokens
+    consumed) or (None, 0)."""
+    blocks = pool.alloc(pool.blocks_needed(S))
+    if blocks is None:
+        return None, 0
+    toks = [_tok(counter + i) for i in range(S)]
+    k = np.stack(toks, axis=1)
+    pos = np.arange(S, dtype=np.int32)
+    pool.write_run(blocks, k, k + 0.5, pos)
+    pad = len(blocks) * pool.block_size - S
+    zero = np.zeros((L, HKV, DH), np.float32)
+    return {
+        "blocks": blocks,
+        "exp_k": toks + [zero] * pad,
+        "exp_v": [t + 0.5 for t in toks] + [zero] * pad,
+        "exp_pos": list(pos) + [-1] * pad,
+    }, S
 
 
 @given(st.lists(st.tuples(st.sampled_from(OPS), st.integers(0, 5)),
@@ -75,6 +117,7 @@ def test_random_interleavings_preserve_invariants(ops):
     held = []           # block lists we own one reference to
     reservations = []   # every Reservation ever made (closed ones too)
     tables = []         # (table, reservation|None, exp_k, exp_v, exp_pos)
+    runs = []           # canonical shared runs (we hold the owner ref)
     counter = 0
     for step, (op, n) in enumerate(ops):
         open_res = [r for r in reservations if not r.closed]
@@ -122,13 +165,47 @@ def test_random_interleavings_preserve_invariants(ops):
         elif op == "free_table" and tables:
             table, _res, _k, _v, _pos = tables.pop(n % len(tables))
             pool.free_table(table)
-        _check_invariants(pool, reservations, tables)
+        elif op == "pin":
+            run, used = _pin_run(pool, counter, n % 7 + 1)
+            counter += used
+            if run is not None:
+                runs.append(run)
+        elif op == "share_ref" and runs:
+            # zero-copy: a new table references the canonical run's
+            # blocks (padding included — it is part of the used span)
+            run = runs[n % len(runs)]
+            table = BlockTable()
+            pool.append_shared(table, run["blocks"])
+            tables.append((table, None, list(run["exp_k"]),
+                           list(run["exp_v"]), list(run["exp_pos"])))
+        elif op == "cow" and tables:
+            # overwrite one slot in place; shared blocks must clone
+            # first (the canonical-run check below catches any leak)
+            table, res, exp_k, exp_v, exp_pos = tables[n % len(tables)]
+            if table.length:
+                slot = n % table.length
+                tok = _tok(counter)
+                counter += 1
+                pos = max(exp_pos) + 1 if exp_pos else 0
+                if pool.write_rows(table, np.asarray([slot]),
+                                   tok[:, None], tok[:, None] + 0.5,
+                                   np.asarray([pos], np.int32),
+                                   reservation=res):
+                    exp_k[slot] = tok
+                    exp_v[slot] = tok + 0.5
+                    exp_pos[slot] = pos
+        elif op == "unpin" and runs:
+            run = runs.pop(n % len(runs))
+            pool.release(run["blocks"])      # drop the owner reference
+        _check_invariants(pool, reservations, tables, runs)
 
     # drain everything: the pool must return to fully free
     for table, _res, _k, _v, _pos in tables:
         pool.free_table(table)
     for blocks in held:
         pool.release(blocks)
+    for run in runs:
+        pool.release(run["blocks"])
     for res in reservations:
         pool.cancel(res)
     assert pool.free_blocks == pool.num_blocks

@@ -1,0 +1,373 @@
+"""Zero-copy chunk-cache sharing inside the KVPool (tentpole gates).
+
+* Requests hitting the same chunk must produce decode logits (and final
+  per-position pool KV) bit-identical to the copy-based write-back,
+  while the pool holds strictly fewer blocks and ``ServingCounters``
+  shows shared (refcount > 1) blocks.
+* Evicting a variant whose pool run has a live reader defers the unpin
+  to the last reader's release.
+* Delta-only reservation admits a packed batch that full per-request
+  reservation would have split across iterations.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_tiny
+from repro.core.chunkstore import ChunkStore
+from repro.core.scoring import ChunkScores
+from repro.core.tiers import TieredStore
+from repro.models import model as M
+from repro.serving.engine import Engine
+from repro.serving.kvpool import KVPool
+from repro.serving.rag import KnowledgeBase
+from repro.serving.request import Request, State
+from repro.serving.scheduler import SchedulerConfig
+
+
+@pytest.fixture(scope="module")
+def world():
+    cfg = get_tiny("llama3-8b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    kb = KnowledgeBase(num_chunks=8, vocab_size=cfg.vocab_size, seed=0)
+    return cfg, params, kb
+
+
+def _store(tmp_path, name):
+    return ChunkStore(TieredStore(1 << 28, 1 << 28,
+                                  str(tmp_path / f"tiers-{name}"),
+                                  start_worker=False),
+                      n_chunks=50, m_variants=4)
+
+
+def _overlap_requests(kb, n, max_new=4):
+    """n requests over the SAME system prompt and chunk list (distinct
+    questions): every chunk hit is shareable across all of them."""
+    rng = np.random.default_rng(17)
+    sys_t = rng.integers(0, kb.vocab_size, 8).astype(np.int32)
+    chunks = [kb.chunks[0], kb.chunks[1], kb.chunks[2]]
+    return [Request(rid=i, system_tokens=sys_t,
+                    chunk_tokens=[c.copy() for c in chunks],
+                    question_tokens=rng.integers(
+                        0, kb.vocab_size, 10).astype(np.int32),
+                    max_new_tokens=max_new, arrival_time=0.0)
+            for i in range(n)]
+
+
+def _dense_kv(gathered):
+    """(k, v, pos) pool gather -> padding-free arrays ordered by logical
+    position (layouts differ between copy and zero-copy tables)."""
+    k, v, pos = gathered
+    idx = np.where(pos >= 0)[0]
+    order = idx[np.argsort(pos[idx], kind="stable")]
+    return k[:, order], v[:, order], pos[order]
+
+
+def test_zerocopy_matches_copy_path_and_shares_blocks(world, tmp_path):
+    cfg, params, kb = world
+    results = {}
+    for share in (False, True):
+        store = _store(tmp_path, f"eq-{share}")
+        eng = Engine(cfg, params, store,
+                     sched=SchedulerConfig(max_batch_tokens=100_000,
+                                           max_decode_batch=8,
+                                           max_prefill_batch=4),
+                     pool_blocks=256,
+                     executor_kwargs=dict(use_focus=False,
+                                          store_fixed_variants=False,
+                                          force_recompute_fraction=0.3),
+                     share_chunk_kv=share, trace_decode=True)
+        from repro.serving.engine import EngineStats
+        eng.run(_overlap_requests(kb, 4))      # populate the store
+        eng.run(_overlap_requests(kb, 4))      # hit + pin pool runs
+        eng.clock = 0.0
+        eng.stats = EngineStats()
+        eng.counters.reset()
+        eng.decode_trace = []
+        eng.final_kv = {}
+        reqs = _overlap_requests(kb, 4)
+        stats = eng.run(reqs)
+        assert stats.completed == 4 and stats.failed == 0
+        assert all(r.state == State.DONE for r in reqs)
+        assert all(r.cache_hits > 0 for r in reqs)
+        results[share] = (eng, stats, reqs)
+
+    eng_c, stats_c, reqs_c = results[False]
+    eng_z, stats_z, reqs_z = results[True]
+
+    # identical outputs and per-step decode logits, bit for bit
+    for rc, rz in zip(reqs_c, reqs_z):
+        assert rc.output_tokens == rz.output_tokens
+    assert stats_c.decode_steps == stats_z.decode_steps
+    for step, (tc, tz) in enumerate(zip(eng_c.decode_trace,
+                                        eng_z.decode_trace)):
+        assert set(tc) == set(tz), f"step {step}: membership differs"
+        for rid in tc:
+            np.testing.assert_array_equal(
+                tc[rid], tz[rid],
+                err_msg=f"step {step}, rid {rid}: logits differ")
+
+    # identical final pool KV at every logical position (layouts differ:
+    # the zero-copy table is block-aligned per segment)
+    assert set(eng_c.final_kv) == set(eng_z.final_kv)
+    for rid in eng_c.final_kv:
+        kc, vc, pc = _dense_kv(eng_c.final_kv[rid])
+        kz, vz, pz = _dense_kv(eng_z.final_kv[rid])
+        np.testing.assert_array_equal(pc, pz)
+        np.testing.assert_array_equal(kc, kz)
+        np.testing.assert_array_equal(vc, vz)
+
+    # sharing actually happened: refcount>1 blocks existed, hit segments
+    # attached zero-copy, recompute fixups went through CoW
+    cz, cc = eng_z.counters, eng_c.counters
+    assert cz.shared_seg_hits > 0
+    assert cz.shared_blocks_peak > 0
+    # runs were pinned during warm-up (before the counter reset) and are
+    # still resident
+    assert len(eng_z.store.residency.runs) > 0
+    assert cz.cow_clones > 0               # recompute fixups split blocks
+    assert cc.shared_seg_hits == 0 and cc.shared_blocks_peak == 0
+
+    # the HBM/accounting win: strictly fewer blocks reserved at
+    # admission AND a strictly lower live-block peak than the copy path
+    assert cz.blocks_reserved_total < cc.blocks_reserved_total
+    assert cz.live_blocks_peak < cc.live_blocks_peak
+    assert cz.delta_blocks_saved > 0
+
+    # every reader released: runs still pinned, tables drained
+    assert eng_z.pool.live_blocks == sum(
+        len(r.blocks) for r in eng_z.store.residency.runs.values())
+    assert all(r.readers == 0 for r in eng_z.store.residency.runs.values())
+
+
+def _fake_variant(store, pool, cfg_dims, tokens, chash="c0"):
+    """Insert a variant with deterministic KV through the real store
+    API (so tiers + eviction bookkeeping apply)."""
+    L, hkv, dh = cfg_dims
+    S = len(tokens)
+    rng = np.random.default_rng(3)
+    kv = {"k": rng.normal(size=(L, S, hkv, dh)).astype(np.float32),
+          "v": rng.normal(size=(L, S, hkv, dh)).astype(np.float32)}
+    scores = ChunkScores(chunk_index=0, length=S, a_bar=1.0, b_bar=0.0,
+                         cci=0.1)
+    return store.add_variant(chash, kv, scores)
+
+
+def test_evicting_variant_with_live_reader_defers_unpin(tmp_path):
+    L, hkv, dh, bs = 2, 2, 4, 4
+    pool = KVPool(num_layers=L, kv_heads=hkv, head_dim=dh,
+                  num_blocks=16, block_size=bs)
+    store = ChunkStore(TieredStore(1 << 20, 1 << 20,
+                                   str(tmp_path / "evict"),
+                                   start_worker=False),
+                       n_chunks=1, m_variants=1)
+    store.attach_pool(pool)
+    var = _fake_variant(store, pool, (L, hkv, dh), np.arange(6))
+
+    def loader():
+        kv, _ = store.get_kv(var)
+        if kv is None:
+            return None
+        S = kv["k"].shape[1]
+        return (np.asarray(kv["k"], np.float32),
+                np.asarray(kv["v"], np.float32),
+                np.arange(S, dtype=np.int32))
+
+    run = store.pin_pool_run(var, 0, loader)
+    assert run is not None and run.readers == 1
+    assert pool.live_blocks == len(run.blocks) == 2
+    canonical = pool.k[:, run.blocks[0]].copy()
+    # the tier entry is demotion-pinned while pool-resident
+    assert store.tiers.pins.get(var.variant_id, 0) == 1
+
+    # evict while the reader is live: the unpin must be DEFERRED
+    store.remove(var)
+    assert run.evict_pending
+    assert pool.counters.run_unpins_deferred == 1
+    assert pool.counters.run_unpins == 0
+    assert pool.live_blocks == 2           # blocks survive the eviction
+    np.testing.assert_array_equal(pool.k[:, run.blocks[0]], canonical)
+
+    # last reader leaves -> the run unpins and the pool drains
+    store.release_pool_run(run)
+    assert pool.counters.run_unpins == 1
+    assert pool.live_blocks == 0
+    assert pool.free_blocks == pool.num_blocks
+    assert store.residency.runs == {}
+
+
+def test_evicting_variant_without_readers_unpins_immediately(tmp_path):
+    L, hkv, dh = 2, 2, 4
+    pool = KVPool(num_layers=L, kv_heads=hkv, head_dim=dh,
+                  num_blocks=16, block_size=4)
+    store = ChunkStore(TieredStore(1 << 20, 1 << 20,
+                                   str(tmp_path / "evict0"),
+                                   start_worker=False),
+                       n_chunks=1, m_variants=1)
+    store.attach_pool(pool)
+    var = _fake_variant(store, pool, (L, hkv, dh), np.arange(6))
+
+    def loader():
+        kv, _ = store.get_kv(var)
+        return None if kv is None else (
+            np.asarray(kv["k"], np.float32),
+            np.asarray(kv["v"], np.float32),
+            np.arange(kv["k"].shape[1], dtype=np.int32))
+
+    run = store.pin_pool_run(var, 0, loader)
+    store.release_pool_run(run)            # reader gone before eviction
+    assert pool.live_blocks == 2           # still pinned by the store
+    store.remove(var)
+    assert pool.counters.run_unpins == 1
+    assert pool.counters.run_unpins_deferred == 0
+    assert pool.free_blocks == pool.num_blocks
+
+
+def test_delta_reservation_admits_what_full_reservation_defers(world,
+                                                               tmp_path):
+    """Pool sized so 4 overlapping requests cannot all reserve their
+    full block need, but the shared-run delta fits: the zero-copy
+    engine packs all 4 into one prefill pass with zero reserve
+    failures; the copy engine must defer admissions."""
+    cfg, params, kb = world
+    packed_max = {}
+    fails = {}
+    for share in (False, True):
+        store = _store(tmp_path, f"delta-{share}")
+        eng = Engine(cfg, params, store,
+                     sched=SchedulerConfig(max_batch_tokens=100_000,
+                                           max_decode_batch=8,
+                                           max_prefill_batch=4),
+                     pool_blocks=22,
+                     executor_kwargs=dict(use_focus=False,
+                                          store_fixed_variants=False,
+                                          force_recompute_fraction=0.0),
+                     share_chunk_kv=share)
+        from repro.serving.engine import EngineStats
+        eng.run(_overlap_requests(kb, 2))  # populate the store
+        eng.run(_overlap_requests(kb, 2))  # hit + pin pool runs
+        eng.clock = 0.0
+        eng.stats = EngineStats()
+        eng.counters.reset()
+        reqs = _overlap_requests(kb, 4)
+        stats = eng.run(reqs)
+        assert stats.completed == 4 and stats.failed == 0
+        packed_max[share] = stats.prefill_batch_max
+        fails[share] = eng.counters.reserve_failures
+    assert packed_max[True] == 4           # one packed pass, all admitted
+    assert packed_max[False] < 4           # full reservation had to defer
+    assert fails[True] == 0
+    assert fails[False] > 0
+
+
+def test_unbudgeted_cow_pressure_escalates_not_fails(world, tmp_path):
+    """Regression: the delta estimate does not budget CoW-clone blocks
+    for recompute-fixup rows. Under a pool sized near the delta, the
+    zero-copy write-back may fail — the retry must escalate to a full
+    reservation + copy-style write-back and COMPLETE the request (it
+    used to exhaust retries and FAIL requests the copy path served)."""
+    cfg, params, kb = world
+    store = _store(tmp_path, "cow-pressure")
+    eng = Engine(cfg, params, store,
+                 sched=SchedulerConfig(max_batch_tokens=100_000,
+                                       max_decode_batch=8,
+                                       max_prefill_batch=4),
+                 pool_blocks=22,
+                 executor_kwargs=dict(use_focus=False,
+                                      store_fixed_variants=False,
+                                      force_recompute_fraction=0.3),
+                 share_chunk_kv=True)
+    eng.run(_overlap_requests(kb, 2))      # populate the store
+    eng.run(_overlap_requests(kb, 2))      # hit + pin pool runs
+    from repro.serving.engine import EngineStats
+    eng.stats = EngineStats()
+    eng.counters.reset()
+    reqs = _overlap_requests(kb, 4)
+    stats = eng.run(reqs)
+    assert stats.completed == 4 and stats.failed == 0
+    assert all(r.state == State.DONE for r in reqs)
+    # the escalation is bounded: at most one burned pass per request
+    assert eng.counters.burn_requeues <= 4
+
+
+def _requests_for(kb, chunk_ids, n, seed, max_new=3):
+    rng = np.random.default_rng(seed)
+    sys_t = np.random.default_rng(17).integers(
+        0, kb.vocab_size, 8).astype(np.int32)
+    chunks = [kb.chunks[i] for i in chunk_ids]
+    return [Request(rid=seed * 100 + i, system_tokens=sys_t,
+                    chunk_tokens=[c.copy() for c in chunks],
+                    question_tokens=rng.integers(
+                        0, kb.vocab_size, 10).astype(np.int32),
+                    max_new_tokens=max_new, arrival_time=0.0)
+            for i in range(n)]
+
+
+def test_cold_runs_reclaimed_under_admission_pressure(world, tmp_path):
+    """Canonical runs with zero readers must not pin the pool forever:
+    when a new working set cannot reserve, the engine reclaims cold
+    runs (admission backpressure) instead of failing the requests."""
+    cfg, params, kb = world
+    store = _store(tmp_path, "reclaim")
+    eng = Engine(cfg, params, store,
+                 sched=SchedulerConfig(max_batch_tokens=100_000,
+                                       max_decode_batch=8,
+                                       max_prefill_batch=2),
+                 pool_blocks=24,
+                 executor_kwargs=dict(use_focus=False,
+                                      store_fixed_variants=False,
+                                      force_recompute_fraction=0.0),
+                 share_chunk_kv=True)
+    # two disjoint hot sets, each run twice (populate, then hit + pin):
+    # their cold runs accumulate toward the pool capacity
+    for chunk_ids, seed in (((0, 1, 2), 1), ((3, 4, 5), 2)):
+        eng.run(_requests_for(kb, chunk_ids, 2, seed))
+        eng.run(_requests_for(kb, chunk_ids, 2, seed))
+    pinned = sum(len(r.blocks) for r in store.residency.runs.values())
+    assert pinned > 0
+    # a third, disjoint working set that cannot reserve without
+    # evicting cold runs
+    reqs = _requests_for(kb, (6, 7), 3, 3)
+    assert eng.pool.free_blocks < 3 * eng.pool.blocks_needed(
+        sum(len(t) for t in [reqs[0].system_tokens,
+                             *reqs[0].chunk_tokens,
+                             reqs[0].question_tokens]))
+    stats_before_failed = eng.stats.failed
+    eng.run(reqs)
+    assert all(r.state == State.DONE for r in reqs)
+    assert eng.stats.failed == stats_before_failed
+    assert eng.counters.run_reclaims > 0
+
+
+def test_sequential_engines_reuse_one_store(world, tmp_path):
+    """A second share-enabled engine over the same store must drain the
+    previous pool's (zero-reader) runs and re-attach — not raise, not
+    leak tier pins."""
+    cfg, params, kb = world
+
+    def make(store):
+        return Engine(cfg, params, store,
+                      sched=SchedulerConfig(max_batch_tokens=100_000,
+                                            max_decode_batch=8,
+                                            max_prefill_batch=2),
+                      pool_blocks=128,
+                      executor_kwargs=dict(use_focus=False,
+                                           store_fixed_variants=False,
+                                           force_recompute_fraction=0.0),
+                      share_chunk_kv=True)
+
+    store = _store(tmp_path, "seq")
+    eng1 = make(store)
+    eng1.run(_overlap_requests(kb, 2))
+    eng1.run(_overlap_requests(kb, 2))      # hits pin runs in pool 1
+    assert store.residency.runs
+    old_pins = dict(store.tiers.pins)
+    assert old_pins
+
+    eng2 = make(store)                      # re-attach drains pool 1
+    assert store.residency.pool is eng2.pool
+    assert store.residency.runs == {}
+    assert store.tiers.pins == {}           # no leaked demotion pins
+    reqs = _overlap_requests(kb, 2)
+    eng2.run(reqs)
+    assert all(r.state == State.DONE for r in reqs)
