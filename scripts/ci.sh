@@ -20,7 +20,13 @@
 #   * incremental decode-churn rebuild count << rebuild-mode count,
 #   * zero-copy sharing reserving strictly fewer blocks than the copy
 #     path on an overlapping-chunk workload,
-# and writes results/fig22_ci_smoke.json for the CI artifact upload.
+#   * reservation-aware preemption on a pool-starved workload:
+#     preemptions > 0, every preempted request reaches DONE (zero
+#     FAILED), final logits bit-identical to an unpressured run, and a
+#     strictly lower max head-stall iteration count than preemption-off
+#     (count-based, immune to runner timing noise),
+# and writes results/fig22_ci_smoke.json for the CI artifact upload
+# (plus the preemption trajectory in results/BENCH_preemption.json).
 # --smoke-only skips the pytest suite for fast local iteration on the
 # perf gates.
 set -euo pipefail
@@ -69,7 +75,7 @@ fi
 
 if [[ "$status" == "0" && "$perf_smoke" == "1" ]]; then
     echo "CI: perf smoke (admission throughput + decode-churn counts" \
-         "+ copy-vs-zerocopy shared-block gate)"
+         "+ copy-vs-zerocopy shared-block gate + preemption gate)"
     python -m benchmarks.throughput_latency --ci-smoke || status=$?
     echo "CI perf smoke exit status: $status"
 fi

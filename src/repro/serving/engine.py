@@ -33,6 +33,34 @@ segments allocate fresh blocks. Admission then reserves only the delta
 blocks (``_estimate_blocks``), so N concurrent requests over the same
 hot chunk pay ~1x its HBM instead of Nx and more requests pack per
 iteration under pool pressure.
+
+Reservation-aware preemption (preempt lifecycle): admission only
+*defers* a queue head that cannot reserve, so a fully-reserved decode
+batch under sustained shortage would starve it indefinitely — zero-copy
+sharing makes resident blocks cheaper but shortage *stickier* (shared
+runs and deep reservations pin the pool). When the head has failed to
+reserve for ``SchedulerConfig.preempt_after_iters`` consecutive
+iterations and the cold-run reclaim found nothing to free, ``step``
+preempts scheduler-selected victims (newest decode requests first,
+one at a time until the head's retried admission succeeds): per
+victim, ``_preempt`` masks its decode row (``_decode_leave``),
+releases its shared-run reader refs (``_release_runs``), frees its
+block table and cancels its reservation in one pool op
+(``KVPool.reclaim_request``), and resets its attempt state
+(``Request.reset_attempt``, with ``reserve_full`` cleared — re-entry
+is a normal prefill that re-uses any shared runs it just released,
+which stay pool-resident at zero readers). Admission is retried *in
+the same iteration* so the starved head — not a victim — takes the
+freed blocks, and only afterwards are the victims requeued at the
+queue *front* (``Scheduler.preempt_requeue``), preserving their FCFS
+priority over the rest of the queue; freed blocks therefore
+accumulate across victims until they cover the head's shortfall
+instead of being re-reserved by the victim one iteration later. Preemptions are counted separately from retries, so
+``retry_limit`` still bounds genuine failures; ``preempt_limit`` caps
+per-request victimhood for liveness. The same teardown
+(``_teardown``) also serves the straggler guard: queued requests whose
+wait exceeds ``SchedulerConfig.deadline_s`` FAIL at the top of
+``step`` instead of deadlocking the queue.
 """
 from __future__ import annotations
 
@@ -203,28 +231,71 @@ class Engine:
     # ---- one ORCA iteration -------------------------------------------------
     def step(self) -> bool:
         """Returns True if any work was done."""
-        worked = False
-        decode_tokens = sum(r.total_len for r in self.decoding)
+        worked = self._expire_queued()
         fails_before = self.counters.reserve_failures
-        reqs = self.scheduler.next_prefills(
-            decode_tokens, len(self.decoding), pool=self.pool,
-            reserve_blocks_fn=self._estimate_blocks
-            if self.share_chunk_kv else None)
-        if not reqs and self.scheduler.queue and self.share_chunk_kv \
+        reqs = self._admit()
+        if not reqs and self.scheduler.queue \
                 and self.counters.reserve_failures > fails_before:
-            # admission backpressure: cold canonical runs (zero
-            # readers) must not pin the pool while the queue starves.
-            # Gated on an actual pool.reserve failure this iteration
-            # (an ORCA-budget or decode-cap deferral must not churn
-            # runs) and sized by the head's DELTA shortfall — even
-            # with sharing the head could not reserve, so any cold
-            # run freed helps.
+            # head-of-line reservation failure this iteration. An
+            # ORCA-budget or decode-cap deferral (reqs empty, no
+            # reserve failure) skips this whole branch: it neither
+            # counts toward the stall (nor resets it — budget churn
+            # must not defeat preemption) nor triggers reclaim —
+            # decode progress resolves those on its own
             head = self.scheduler.queue[0]
-            need = self._estimate_blocks(head)
-            if self.pool.free_blocks < need:
-                if self.store.reclaim_pool_runs(
-                        need - self.pool.free_blocks):
+            reclaimed = False
+            if self.share_chunk_kv:
+                # admission backpressure: cold canonical runs (zero
+                # readers) must not pin the pool while the queue
+                # starves. Sized by the head's DELTA shortfall — even
+                # with sharing the head could not reserve, so any cold
+                # run freed helps.
+                need = self._estimate_blocks(head)
+                if self.pool.free_blocks < need:
+                    if self.store.reclaim_pool_runs(
+                            need - self.pool.free_blocks):
+                        reclaimed = worked = True
+            stall = self.scheduler.note_head_stall(head.rid)
+            self.counters.head_stall_iters_max = max(
+                self.counters.head_stall_iters_max, stall)
+            if not reclaimed:
+                victims: List[Request] = []
+                if self.scheduler.should_preempt():
+                    # preempt newest-first, retrying admission after
+                    # each victim, until the starved head admits or
+                    # eligible victims run out. Victims are requeued
+                    # only AFTER the head's retry: requeued at the
+                    # front they would be the new head and re-reserve
+                    # their own freed blocks, burning a prefill per
+                    # cycle without unblocking anyone — held back, the
+                    # freed blocks accumulate until they cover the
+                    # head's shortfall
+                    while not reqs:
+                        victim = self.scheduler.select_victim(
+                            self.decoding)
+                        if victim is None:
+                            break
+                        self._preempt(victim)
+                        victims.append(victim)
+                        reqs = self._admit()
+                if victims:
+                    # newest-first preemption order means appendleft
+                    # restores FCFS: the oldest victim ends up at the
+                    # queue front, ahead of everything still waiting
+                    for victim in victims:
+                        self.scheduler.preempt_requeue(victim)
                     worked = True
+                elif not self._shortage_recoverable():
+                    # shortage valve: nothing in flight will free
+                    # blocks, nothing is reclaimable or preemptable,
+                    # yet the head fits the pool in principle — burn a
+                    # bounded retry so persistent shortage (e.g.
+                    # leaked blocks) converges to FAILED, not a
+                    # livelock
+                    self.scheduler.requeue(self.scheduler.queue.popleft())
+                    worked = True
+        elif reqs:
+            self.scheduler.note_head_progress()
         if reqs:
             self._run_prefills(reqs)
             worked = True
@@ -232,6 +303,44 @@ class Engine:
             self._run_decode_step()
             worked = True
         return worked
+
+    def _admit(self) -> List[Request]:
+        return self.scheduler.next_prefills(
+            sum(r.total_len for r in self.decoding), len(self.decoding),
+            pool=self.pool,
+            reserve_blocks_fn=self._estimate_blocks
+            if self.share_chunk_kv else None)
+
+    def _shortage_recoverable(self) -> bool:
+        """Can blocks still come back without failing anyone? Decode
+        completions free tables (and make preemption possible), and
+        pool-resident runs at zero readers are reclaimable the moment
+        admission pressure asks for them. Only when neither source
+        exists is a reservation shortage terminal — that is when the
+        shortage valve in ``step`` may burn a bounded retry."""
+        if self.decoding:
+            return True
+        if self.share_chunk_kv and self.store.residency is not None:
+            return any(r.readers <= 0 and not r.evict_pending
+                       for r in self.store.residency.runs.values())
+        return False
+
+    def _expire_queued(self) -> bool:
+        """Straggler guard (``SchedulerConfig.deadline_s``): FAIL queued
+        requests whose wait exceeded the deadline, with full teardown —
+        this used to be dead code (``Scheduler.expired`` had no caller),
+        so the documented guard never fired."""
+        sched = self.scheduler
+        if sched.cfg.deadline_s <= 0 or not sched.queue:
+            return False
+        expired = [r for r in sched.queue if sched.expired(r, self.clock)]
+        for r in expired:
+            sched.queue.remove(r)
+            self._teardown(r)
+            r.state = State.FAILED
+            self.counters.deadline_expired += 1
+            sched.on_terminal(r)
+        return bool(expired)
 
     def _run_prefills(self, reqs: Sequence[Request]):
         """Packed multi-request prefill: every admitted request's
@@ -241,6 +350,8 @@ class Engine:
         for req in reqs:
             req.state = State.PREFILLING
             req.t_prefill_start = self.clock
+            if req.t_first_service is None:
+                req.t_first_service = self.clock
         t0 = time.perf_counter()
         results = self.executor.process_batch(
             [(r.system_tokens, r.chunk_tokens, r.question_tokens)
@@ -431,19 +542,56 @@ class Engine:
         req.delta_blocks_saved = full - blocks
         return blocks + tail
 
+    def _teardown(self, req: Request) -> int:
+        """Release every pool resource a request's burned attempt
+        holds: shared-run reader refs, table blocks, and the open
+        reservation (one compound ``KVPool.reclaim_request``). Shared
+        by the requeue, preemption, and deadline-expiry paths. Returns
+        the blocks returned to the free list — deferred unpins that the
+        last reader's release triggered included, which is why the
+        count is measured around the whole teardown rather than taken
+        from ``reclaim_request`` alone."""
+        before = self.pool.free_blocks
+        self._release_runs(req)
+        self.pool.reclaim_request(req.table, req.reservation)
+        req.reservation = None
+        return self.pool.free_blocks - before
+
     def _requeue(self, req: Request):
         """Return a request to the queue with its per-attempt state
-        reset: KV table freed, reservation cancelled, and any decoded
-        tokens discarded (a retry re-prefills from scratch — stale
-        ``output_tokens`` would terminate the retry early with a
-        corrupted output sequence)."""
-        self.pool.free_table(req.table)
-        self._release_runs(req)
-        self.pool.cancel(req.reservation)
-        req.reservation = None
-        req.output_tokens = []
-        req.total_len = 0
+        reset: KV table freed, reservation cancelled, and every
+        attempt-scoped field cleared (``Request.reset_attempt`` — a
+        retry re-prefills from scratch, so stale ``output_tokens``
+        would corrupt the output and stale ``t_first_token`` /
+        ``prefill_tokens_*`` / ``cache_hits`` would report metrics
+        from the discarded pass)."""
+        self._teardown(req)
+        req.reset_attempt()
         self.scheduler.requeue(req)
+
+    def _preempt(self, req: Request):
+        """Preempt one decode request for a starved queue head: leave
+        its decode row, tear down its pool state (the recovered blocks
+        are what the head's retried admission reserves from), and reset
+        it for re-entry as a normal prefill — ``reserve_full`` cleared,
+        so it shares any still-resident runs it just released instead
+        of escalating to a full copy-style reservation. The caller
+        (``step``) requeues it at the queue front *after* retrying
+        admission for the head."""
+        row = next((i for i, r in enumerate(self._rows) if r is req),
+                   None)
+        self.decoding.remove(req)
+        if row is not None:
+            self._decode_leave(row)
+        else:
+            # admitted while a rebuild was pending: never entered the
+            # row map, so membership just changed under the stale cache
+            self._needs_rebuild = True
+        recovered = self._teardown(req)
+        req.reserve_full = False
+        req.reset_attempt()
+        self.counters.preemptions += 1
+        self.counters.preempt_block_recovered += recovered
 
     # ---- decode batch -------------------------------------------------------
     def _row_capacity(self, req: Request) -> int:

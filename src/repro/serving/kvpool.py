@@ -448,3 +448,21 @@ class KVPool:
         self.release(table.blocks)
         table.blocks = []
         table.length = 0
+
+    def reclaim_request(self, table: BlockTable,
+                        reservation: Optional[Reservation]) -> int:
+        """Tear down one request's pool state mid-flight (preemption,
+        expiry, requeue): release the table's blocks and cancel the
+        reservation in one step. Shared refcounts are respected — a
+        block a canonical run or another table still references stays
+        live, so only the request's *private* share returns to the free
+        list — and the conservation law holds across the compound op
+        even when the reservation was partially drawn into the table
+        (drawn blocks come back via the release, undrawn via the
+        cancel; nothing is double-freed because ``_take`` pops drawn
+        blocks out of the reservation). Returns the number of blocks
+        returned to the free list."""
+        before = len(self.free)
+        self.free_table(table)
+        self.cancel(reservation)
+        return len(self.free) - before

@@ -46,6 +46,17 @@ class ServingCounters:
     #     reservations on; the zero-copy path may burn at most once per
     #     pressured request (delta estimates do not budget CoW clones)
     #     before the retry escalates to a full reservation
+    # --- reservation-aware preemption (TTFT tail bounding) ---
+    preemptions: int = 0                 # decode requests preempted for a
+    #     starved queue head (requeued at the front, not a retry)
+    preempt_block_recovered: int = 0     # pool blocks freed by preemption
+    #     teardowns (table refs + cancelled reservation + deferred unpins)
+    head_stall_iters_max: int = 0        # longest run of consecutive
+    #     iterations one queue head failed to reserve (count-based
+    #     stand-in for the head-of-line wait tail: preemption bounds it
+    #     near preempt_after_iters, deferral lets it run to decode drain)
+    deadline_expired: int = 0            # queued requests FAILed by the
+    #     straggler guard (SchedulerConfig.deadline_s)
     # --- incremental decode batch ---
     decode_rebuilds: int = 0             # full (B, S) gather rebuilds
     decode_joins: int = 0                # requests written into a free row
@@ -55,6 +66,28 @@ class ServingCounters:
     def reset(self):
         for f in dataclasses.fields(self):
             setattr(self, f.name, f.default)
+
+
+def percentile(xs: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile (inclusive, numpy 'lower' flavor is too
+    optimistic for tail latencies with few samples). Empty input -> 0."""
+    xs = sorted(float(x) for x in xs)
+    if not xs:
+        return 0.0
+    rank = max(1, int(np.ceil(q / 100.0 * len(xs))))
+    return xs[rank - 1]
+
+
+def ttft_p99(requests) -> float:
+    """p99 time-to-first-token over the requests that produced one
+    (the tail the preemption subsystem bounds, Fig. 22)."""
+    return percentile([r.ttft for r in requests if r.ttft is not None], 99)
+
+
+def queue_wait_p99(requests) -> float:
+    """p99 head-of-line wait (enqueue -> serving prefill start)."""
+    return percentile([r.queue_wait for r in requests
+                       if r.queue_wait is not None], 99)
 
 
 def _lcs(a: Sequence[int], b: Sequence[int]) -> int:

@@ -48,6 +48,11 @@ class Request:
     total_len: int = 0
     # --- timings ---
     t_enqueued: Optional[float] = None
+    # first time ANY attempt entered a prefill pass. Unlike
+    # ``t_prefill_start`` this survives ``reset_attempt``: it dates the
+    # head-of-line wait (``queue_wait``) — a preempted request was
+    # already served once, so its requeue must not re-open that clock
+    t_first_service: Optional[float] = None
     t_prefill_start: Optional[float] = None
     t_first_token: Optional[float] = None
     t_done: Optional[float] = None
@@ -61,11 +66,46 @@ class Request:
     cache_hits: int = 0
     load_seconds_modeled: float = 0.0
 
+    def reset_attempt(self):
+        """Clear attempt-scoped state before the request re-enters the
+        queue (requeue after a failed write-back, or preemption).
+
+        Arrival identity — ``rid``, ``arrival_time``, ``t_enqueued``,
+        ``prompt_hashes`` — survives: TTFT/queue-wait metrics must
+        measure from the original enqueue, not the retry. Everything a
+        single prefill+decode attempt produced is dropped: without
+        this, a requeued request reported ``t_first_token`` /
+        ``t_prefill_start`` / ``prefill_tokens_*`` / ``cache_hits``
+        from the burned attempt (stale-metrics bug), and stale
+        ``output_tokens`` would terminate the retry early with a
+        corrupted output sequence. ``reserve_full`` is attempt-spanning
+        escalation state and is managed by the caller (the engine
+        resets it on preemption, sets it on write-back burns)."""
+        self.output_tokens = []
+        self.total_len = 0
+        self.t_prefill_start = None
+        self.t_first_token = None
+        self.prefill_tokens_computed = 0
+        self.prefill_tokens_total = 0
+        self.cache_hits = 0
+        self.load_seconds_modeled = 0.0
+        self.delta_blocks_saved = 0
+
     @property
     def ttft(self) -> Optional[float]:
         if self.t_first_token is None or self.t_enqueued is None:
             return None
         return self.t_first_token - self.t_enqueued
+
+    @property
+    def queue_wait(self) -> Optional[float]:
+        """Head-of-line wait: enqueue to first service (the first
+        attempt's prefill start) — the tail the preemption subsystem
+        bounds. Preemption re-queues a request *after* it was served,
+        so later attempts do not re-open this clock."""
+        if self.t_first_service is None or self.t_enqueued is None:
+            return None
+        return self.t_first_service - self.t_enqueued
 
     @property
     def e2e_latency(self) -> Optional[float]:

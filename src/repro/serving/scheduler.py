@@ -13,6 +13,26 @@ only to fail ``write_prefill`` afterwards (the burn-then-requeue path).
 A request whose blocks cannot be reserved right now simply stays queued
 until decode completions return blocks; one that can *never* fit the
 pool fails fast instead of deadlocking the queue.
+
+Reservation-aware preemption (bounding TTFT tails)
+--------------------------------------------------
+Admission alone only *defers* the queue head, so under sustained
+shortage a fully-reserved decode batch can starve it indefinitely. The
+scheduler therefore tracks consecutive head-of-line reservation
+failures (``note_head_stall``); once the head has stalled for
+``preempt_after_iters`` iterations — and the engine's cold-run reclaim
+found nothing to free — the engine preempts the victims the scheduler
+selects (``select_victim``: *newest* decode requests first, so the
+oldest in-flight work always keeps making progress), retrying
+admission after each one until the head fits, and only then requeues
+the victims at the queue front (``preempt_requeue``) so they keep
+FCFS priority over everything still waiting — held back until the
+head admits, their freed blocks accumulate toward the head's
+shortfall instead of being re-reserved by a front-requeued victim. Preemptions are counted separately from retries — the bounded
+``retry_limit`` keeps governing genuine failures — and a request
+preempted ``preempt_limit`` times becomes ineligible for further
+victim selection (liveness guard: two requests ping-ponging over a
+one-request pool must eventually fall back to plain FIFO).
 """
 from __future__ import annotations
 
@@ -31,6 +51,13 @@ class SchedulerConfig:
     deadline_s: float = 0.0             # 0 = no deadline (straggler guard)
     retry_limit: int = 2
     max_prefill_batch: int = 4          # prefills packed per iteration
+    # reservation-aware preemption: preempt the newest decode request
+    # once one queue head accumulated this many reservation-failure
+    # iterations (0 = preemption disabled; non-failure deferrals
+    # neither count nor reset — see note_head_stall). ``preempt_limit``
+    # caps how often one request may be chosen as victim (liveness).
+    preempt_after_iters: int = 0
+    preempt_limit: int = 2
 
 
 class Scheduler:
@@ -38,6 +65,9 @@ class Scheduler:
         self.cfg = cfg
         self.queue: Deque[Request] = deque()
         self.retries: dict[int, int] = {}
+        self.preemptions: dict[int, int] = {}  # rid -> times preempted
+        self._stall_rid: Optional[int] = None  # head whose stall we count
+        self._stall_iters = 0
 
     def enqueue(self, req: Request, clock: float) -> bool:
         if len(self.queue) >= self.cfg.max_queue:
@@ -67,6 +97,68 @@ class Scheduler:
         without bound on long-running engines — one entry per request
         that was ever requeued."""
         self.retries.pop(req.rid, None)
+        self.preemptions.pop(req.rid, None)
+        if self._stall_rid == req.rid:
+            self.note_head_progress()
+
+    # ---- reservation-aware preemption --------------------------------------
+    def note_head_stall(self, rid: int) -> int:
+        """Record one iteration in which the queue head failed to
+        reserve its blocks. The counter is keyed to the head's rid so a
+        new head starts from zero; iterations where the head is
+        deferred for other reasons (ORCA budget, decode cap) neither
+        count nor reset it — only an admission (``note_head_progress``)
+        or a head change does, so budget churn cannot defeat the
+        threshold. Returns the accumulated stall count."""
+        if self._stall_rid != rid:
+            self._stall_rid = rid
+            self._stall_iters = 0
+        self._stall_iters += 1
+        return self._stall_iters
+
+    def note_head_progress(self):
+        """The head was admitted (or changed for another reason):
+        reset the stall tracker."""
+        self._stall_rid = None
+        self._stall_iters = 0
+
+    def should_preempt(self) -> bool:
+        """Preemption policy: fire once the head has stalled on
+        reservation for ``preempt_after_iters`` consecutive iterations
+        (0 disables preemption entirely)."""
+        return (self.cfg.preempt_after_iters > 0
+                and self._stall_iters >= self.cfg.preempt_after_iters)
+
+    def select_victim(self, decoding: List[Request]) -> Optional[Request]:
+        """Victim selection hook: the *newest* decode request — the
+        oldest in-flight work keeps progressing, which is what
+        guarantees liveness. Requests already preempted
+        ``preempt_limit`` times are skipped (a pool that fits one
+        request would otherwise ping-pong two requests forever).
+        Override for other policies (e.g. fewest-blocks-held)."""
+        for req in reversed(decoding):
+            if self.preemptions.get(req.rid, 0) < self.cfg.preempt_limit:
+                return req
+        return None
+
+    def preempt_requeue(self, req: Request):
+        """Return a preempted request to the *front* of the queue: it
+        keeps FCFS priority over everything still waiting (the starved
+        head was already re-admitted by the engine before this call).
+        Counted separately from ``retries`` so the bounded
+        ``retry_limit`` keeps governing genuine failures — and the
+        rid's retry debt is cleared: the engine *chose* to discard the
+        attempt, so burns the preemption churn caused (e.g. a delta
+        write-back whose ``reserve_full`` escalation the preemption
+        reset) must not accumulate across preemption cycles into a
+        FAILED state. Within one serving lifecycle ``retry_limit``
+        still bounds retries, and ``preempt_limit`` bounds how many
+        lifecycles preemption can open."""
+        self.preemptions[req.rid] = self.preemptions.get(req.rid, 0) + 1
+        self.retries.pop(req.rid, None)
+        req.state = State.QUEUED
+        self.queue.appendleft(req)
+        self.note_head_progress()
 
     @staticmethod
     def _need(req: Request) -> int:
@@ -114,9 +206,13 @@ class Scheduler:
         while self.queue and len(out) < cap and \
                 decode_batch_size + len(out) < self.cfg.max_decode_batch:
             need = self._need(self.queue[0])
-            if pool is not None and need > self.cfg.max_batch_tokens:
+            if need > self.cfg.max_batch_tokens:
                 # larger than the whole ORCA budget: can never be
-                # admitted, so fail fast instead of stalling the queue
+                # admitted, so fail fast instead of stalling the queue.
+                # Deliberately NOT gated on ``pool`` — the storeless /
+                # legacy path hits the same ``budget + need`` break
+                # below and would otherwise livelock on an oversized
+                # head forever
                 req = self.queue.popleft()
                 req.state = State.FAILED
                 self.on_terminal(req)
@@ -137,13 +233,14 @@ class Scheduler:
                     continue
                 res = pool.reserve(blocks)
                 if res is None:
-                    if not out and decode_batch_size == 0:
-                        # nothing in flight will ever free blocks, yet
-                        # the request fits the pool in principle: burn a
-                        # bounded retry so persistent shortage (e.g.
-                        # leaked blocks) converges to FAILED, not a
-                        # livelock
-                        self.requeue(self.queue.popleft())
+                    # the head stays queued; whether the shortage is
+                    # recoverable (decode completions, cold-run
+                    # reclaim, preemption) or terminal (leaked blocks
+                    # -> the engine's shortage valve burns a bounded
+                    # retry) is the engine's call — this loop cannot
+                    # tell a reclaimable pinned run from a leak, and
+                    # burning retries here while the engine was still
+                    # recovering blocks used to FAIL servable requests
                     break
                 req = self.queue.popleft()
                 req.reservation = res
@@ -165,5 +262,10 @@ class Scheduler:
         return got[0] if got else None
 
     def expired(self, req: Request, clock: float) -> bool:
+        """Straggler guard: a queued request whose total wait exceeded
+        ``deadline_s``. ``Engine.step`` polls this every iteration and
+        FAILs expired queued requests through the teardown path (the
+        guard was dead code before that wiring — a documented deadline
+        that never fired)."""
         return (self.cfg.deadline_s > 0 and req.t_enqueued is not None
                 and clock - req.t_enqueued > self.cfg.deadline_s)

@@ -8,7 +8,11 @@ Tier-1 gates for the reservation + incremental-decode tentpole:
   full rebuilds (asserted via the rebuild counter);
 * under pool pressure with reservations on, no request may ever enter
   the packed compute pass and then fail ``write_prefill``
-  (``burn_requeues == 0``).
+  (``burn_requeues == 0``);
+* a churny pool-starved schedule stepped with reservation-aware
+  preemption must produce, for every request — the preempted ones
+  included — final decode logits and final pool KV bit-identical to an
+  unpressured (large-pool) run of the same workload.
 """
 import jax
 import numpy as np
@@ -127,6 +131,82 @@ def test_zero_burn_requeues_under_pool_pressure(world):
         + c.reservations_cancelled
     assert eng.pool.reserved_blocks == 0 and eng.pool.live_blocks == 0
     assert eng.pool.free_blocks == eng.pool.num_blocks
+
+
+def _preempt_churn_requests(kb):
+    """Two long decodes hog the pool, four short requests churn the
+    decode batch behind them — every short admission follows a
+    preemption or a completion, so joins/leaves interleave with
+    preemption teardowns."""
+    wl = WorkloadConfig(num_requests=6, qpm=1e9, seed=17, k_chunks=3,
+                        max_new_tokens=4)
+    reqs = generate(kb, wl)
+    for r, n in zip(reqs, (18, 18, 3, 5, 4, 6)):
+        r.max_new_tokens = n
+    return reqs
+
+
+def _run_preempt(cfg, params, kb, pool_blocks, preempt_after):
+    eng = Engine(cfg, params, None,
+                 sched=SchedulerConfig(max_batch_tokens=100_000,
+                                       max_decode_batch=4,
+                                       max_prefill_batch=2,
+                                       preempt_after_iters=preempt_after),
+                 pool_blocks=pool_blocks, decode_bucket_b=4,
+                 seq_bucket=512,
+                 executor_kwargs=dict(strategy="all", use_focus=False),
+                 trace_decode=True)
+    reqs = _preempt_churn_requests(kb)
+    stats = eng.run(reqs)
+    last = {}
+    for step_logits in eng.decode_trace:
+        last.update(step_logits)
+    return eng, stats, reqs, last
+
+
+def test_preempted_requests_bit_identical_to_unpressured(world):
+    """A preempted request re-prefills from scratch and re-decodes; its
+    final logits, output tokens, and final pool KV must be bit-identical
+    to an unpressured run where it was never preempted."""
+    cfg, params, kb = world
+    eng_u, stats_u, reqs_u, last_u = _run_preempt(
+        cfg, params, kb, pool_blocks=512, preempt_after=0)
+    eng_p, stats_p, reqs_p, last_p = _run_preempt(
+        cfg, params, kb, pool_blocks=20, preempt_after=4)
+
+    assert eng_u.counters.preemptions == 0
+    assert eng_p.counters.preemptions > 0      # pressure preempted
+    assert stats_u.failed == 0 and stats_p.failed == 0
+    assert stats_u.completed == 6 and stats_p.completed == 6
+    assert all(r.state == State.DONE for r in reqs_p)
+
+    # outputs and final decode logits bit-identical per request
+    for ru, rp in zip(reqs_u, reqs_p):
+        assert ru.output_tokens == rp.output_tokens, \
+            f"rid {ru.rid}: outputs diverged under preemption"
+    assert set(last_u) == set(last_p)
+    for rid in last_u:
+        np.testing.assert_array_equal(
+            last_u[rid], last_p[rid],
+            err_msg=f"rid {rid}: final decode logits differ")
+
+    # final pool KV (gathered before free_table) bit-identical
+    assert set(eng_u.final_kv) == set(eng_p.final_kv)
+    for rid in eng_u.final_kv:
+        ku, vu, pu = eng_u.final_kv[rid]
+        kp, vp, pp = eng_p.final_kv[rid]
+        np.testing.assert_array_equal(pu, pp)
+        np.testing.assert_array_equal(ku, kp)
+        np.testing.assert_array_equal(vu, vp)
+
+    # preemption churned the decode batch in place where it could
+    cp = eng_p.counters
+    assert cp.decode_leaves > 0
+    assert cp.burn_requeues == 0
+    # pool fully settled after the pressured run
+    assert eng_p.pool.reserved_blocks == 0
+    assert eng_p.pool.live_blocks == 0
+    assert eng_p.pool.free_blocks == eng_p.pool.num_blocks
 
 
 def test_decode_batch_shape_growth_triggers_rebuild(world):

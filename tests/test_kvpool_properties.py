@@ -4,8 +4,10 @@ zero-copy shared segments).
 Random interleavings of ``reserve``/``commit``/``cancel``/``alloc``/
 ``share``/``release``/``write_prefill``/``append_token`` plus the
 shared-segment ops (``pin`` a canonical run, ``share_ref`` it into a
-table, ``cow`` a row write over shared blocks, ``unpin``) must
-preserve:
+table, ``cow`` a row write over shared blocks, ``unpin``) and the
+preemption teardown (``preempt``: ``reclaim_request`` — release a
+table that may reference shared runs AND cancel its possibly
+partially-drawn reservation in one compound op) must preserve:
 
 * refcounts >= 0 everywhere;
 * no block is simultaneously free and live (or free and reserved);
@@ -29,7 +31,7 @@ L, HKV, DH, BS, NB = 2, 2, 4, 4, 12
 
 OPS = ["alloc", "release", "share", "reserve", "commit", "cancel",
        "write", "append", "free_table", "pin", "share_ref", "cow",
-       "unpin"]
+       "unpin", "preempt"]
 
 
 def _pool():
@@ -197,6 +199,18 @@ def test_random_interleavings_preserve_invariants(ops):
         elif op == "unpin" and runs:
             run = runs.pop(n % len(runs))
             pool.release(run["blocks"])      # drop the owner reference
+        elif op == "preempt" and tables:
+            # preemption/expiry teardown: drop a table (its blocks may
+            # reference canonical runs mid-share) and cancel its
+            # reservation — possibly partially drawn, possibly shared
+            # with other tables (they fall back to the free list) — in
+            # one compound op; cancel-with-shared-refs-in-flight must
+            # keep free + live + reserved == num_blocks
+            table, res, _k, _v, _pos = tables.pop(n % len(tables))
+            freed = pool.reclaim_request(table, res)
+            assert freed >= 0
+            assert table.blocks == [] and table.length == 0
+            assert res is None or res.closed
         _check_invariants(pool, reservations, tables, runs)
 
     # drain everything: the pool must return to fully free

@@ -1,0 +1,480 @@
+"""Reservation-aware decode preemption + the satellite bugfixes.
+
+Tentpole gates:
+
+* on a pool-starved workload the engine preempts the newest decode
+  request for the starved queue head — the head admits from the freed
+  blocks in the *same* iteration, the victim requeues at the queue
+  front, and every preempted request still reaches DONE (preemption is
+  not a retry: ``retry_limit`` is untouched);
+* the head-of-line stall is bounded near ``preempt_after_iters``
+  (count-based via ``head_stall_iters_max``) where pure deferral lets
+  it run to a full decode drain;
+* pool accounting settles exactly (reservations closed, pool drained).
+
+Satellite regressions (one dedicated test each):
+
+* the ``SchedulerConfig.deadline_s`` straggler guard actually fires
+  from ``Engine.step`` (it was dead code — no caller anywhere);
+* storeless/legacy admission fail-fasts an oversized head instead of
+  livelocking the queue behind it;
+* ``Engine._requeue`` clears every per-attempt field (stale
+  TTFT/hit metrics from a burned attempt) while preserving arrival
+  identity.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_tiny
+from repro.models import model as M
+from repro.serving.engine import Engine
+from repro.serving.rag import KnowledgeBase
+from repro.serving.request import Request, State
+from repro.serving.scheduler import Scheduler, SchedulerConfig
+from repro.serving.workload import WorkloadConfig, generate
+
+
+@pytest.fixture(scope="module")
+def world():
+    cfg = get_tiny("llama3-8b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    kb = KnowledgeBase(num_chunks=10, vocab_size=cfg.vocab_size, seed=0)
+    return cfg, params, kb
+
+
+def _starved_requests(kb, n_long=2, n_short=3, long_new=20, short_new=4):
+    """Long decodes fill the pool first; shorts stall behind them."""
+    wl = WorkloadConfig(num_requests=n_long + n_short, qpm=1e9, seed=13,
+                        k_chunks=3, max_new_tokens=short_new)
+    reqs = generate(kb, wl)
+    for r in reqs[:n_long]:
+        r.max_new_tokens = long_new
+    return reqs
+
+
+def _engine(cfg, params, pool_blocks, preempt_after, **kw):
+    return Engine(cfg, params, None,
+                  sched=SchedulerConfig(max_batch_tokens=100_000,
+                                        max_decode_batch=4,
+                                        max_prefill_batch=2,
+                                        preempt_after_iters=preempt_after),
+                  pool_blocks=pool_blocks, decode_bucket_b=4,
+                  seq_bucket=512,
+                  executor_kwargs=dict(strategy="all", use_focus=False),
+                  **kw)
+
+
+# ---- tentpole: preemption bounds the head-of-line stall --------------------
+
+def test_preemption_bounds_head_stall_and_settles_pool(world):
+    cfg, params, kb = world
+    eng = _engine(cfg, params, pool_blocks=20, preempt_after=4)
+    reqs = _starved_requests(kb)
+    stats = eng.run(reqs)
+    c = eng.counters
+
+    assert c.preemptions > 0               # pressure actually preempted
+    assert c.preempt_block_recovered > 0
+    assert stats.failed == 0 and stats.completed == len(reqs)
+    assert all(r.state == State.DONE for r in reqs)
+    assert all(len(r.output_tokens) == r.max_new_tokens for r in reqs)
+    # the stall is bounded near the threshold: a preemption fires at
+    # stall == preempt_after_iters and frees the victim's blocks, so
+    # the head cannot stall much past it (small slack for the
+    # iteration in which the retried admission itself lands)
+    assert c.head_stall_iters_max <= 4 + 2
+    # preemption is not a retry; nothing burned the packed pass
+    assert c.burn_requeues == 0
+    # accounting settles exactly: every reservation closed, every
+    # block back on the free list
+    assert c.reservations_made == c.reservations_committed \
+        + c.reservations_cancelled
+    assert eng.pool.reserved_blocks == 0 and eng.pool.live_blocks == 0
+    assert eng.pool.free_blocks == eng.pool.num_blocks
+    assert eng.scheduler.retries == {} and eng.scheduler.preemptions == {}
+
+
+def test_deferral_only_lets_head_stall_run_long(world):
+    """Control for the bound above: the identical workload without
+    preemption stalls the head for a full decode drain."""
+    cfg, params, kb = world
+    eng = _engine(cfg, params, pool_blocks=20, preempt_after=0)
+    reqs = _starved_requests(kb)
+    stats = eng.run(reqs)
+    assert eng.counters.preemptions == 0
+    assert stats.failed == 0 and stats.completed == len(reqs)
+    assert eng.counters.head_stall_iters_max > 4 + 2
+
+
+def test_preempted_request_reuses_shared_runs(world, tmp_path):
+    """Zero-copy engines: a preempted request's shared runs stay
+    pool-resident at zero readers, so its re-entry prefill re-attaches
+    them instead of re-materializing."""
+    from repro.core.chunkstore import ChunkStore
+    from repro.core.tiers import TieredStore
+    cfg, params, kb = world
+    store = ChunkStore(TieredStore(1 << 28, 1 << 28,
+                                   str(tmp_path / "s"),
+                                   start_worker=False), 50, 4)
+    eng = Engine(cfg, params, store,
+                 sched=SchedulerConfig(max_batch_tokens=100_000,
+                                       max_decode_batch=4,
+                                       max_prefill_batch=2,
+                                       preempt_after_iters=4),
+                 pool_blocks=26, decode_bucket_b=4, seq_bucket=512,
+                 executor_kwargs=dict(strategy="cachecraft",
+                                      use_focus=False,
+                                      force_recompute_fraction=0.25,
+                                      store_fixed_variants=False))
+    # warm the store so the measured pass hits chunk caches
+    eng.run(_starved_requests(kb, n_long=0, n_short=3))
+    reqs = _starved_requests(kb)
+    stats = eng.run(reqs)
+    c = eng.counters
+    # stats accumulate over the warm-up run too: assert on states
+    assert stats.failed == 0
+    assert all(r.state == State.DONE for r in reqs)
+    assert c.preemptions > 0               # pressure actually preempted
+    assert c.shared_seg_hits > 0           # re-entry re-attached runs
+    assert eng.pool.reserved_blocks == 0
+    assert c.reservations_made == c.reservations_committed \
+        + c.reservations_cancelled
+
+
+def test_multi_victim_preemption_accumulates_for_large_head(world):
+    """A head whose need exceeds any single victim's holdings must be
+    served by preempting victims newest-first WITHIN one stall event,
+    with the victims requeued only after the head admits. (With
+    one-victim-per-event + immediate front requeue, the victim would
+    re-reserve its own freed blocks next iteration — a burned prefill
+    per cycle and no progress for the head until victim caps exhaust.)"""
+    cfg, params, _kb = world
+    rng = np.random.default_rng(0)
+
+    def mk(rid, sys_len, q_len, new):
+        return Request(rid=rid,
+                       system_tokens=rng.integers(
+                           0, cfg.vocab_size, sys_len).astype(np.int32),
+                       chunk_tokens=[],
+                       question_tokens=rng.integers(
+                           0, cfg.vocab_size, q_len).astype(np.int32),
+                       max_new_tokens=new, arrival_time=0.0)
+
+    # smalls: need 56 tokens -> 4 blocks each; big: 132 -> 9 blocks.
+    # pool = 9 blocks: both smalls fit (8), the big fits only the
+    # empty pool — one preempted small frees 4 (free 5 < 9), so a
+    # single-victim event can never admit it
+    reqs = [mk(0, 32, 16, 8), mk(1, 32, 16, 8), mk(2, 96, 32, 4)]
+    eng = Engine(cfg, params, None,
+                 sched=SchedulerConfig(max_batch_tokens=100_000,
+                                       max_decode_batch=4,
+                                       max_prefill_batch=2,
+                                       preempt_after_iters=4),
+                 pool_blocks=9, decode_bucket_b=4, seq_bucket=512,
+                 executor_kwargs=dict(strategy="all", use_focus=False))
+    stats = eng.run(reqs)
+    assert stats.failed == 0 and stats.completed == 3
+    assert all(r.state == State.DONE for r in reqs)
+    assert all(len(r.output_tokens) == r.max_new_tokens for r in reqs)
+    # exactly one stall event, both smalls preempted in it; afterwards
+    # the big finishes fast enough that nothing else hits the threshold
+    assert eng.counters.preemptions == 2
+    assert eng.pool.free_blocks == eng.pool.num_blocks
+
+
+# ---- scheduler policy units ------------------------------------------------
+
+def _req(rid, need=16, max_new=4):
+    return Request(rid=rid, system_tokens=np.zeros(need, np.int32),
+                   chunk_tokens=[], question_tokens=np.zeros(1, np.int32),
+                   max_new_tokens=max_new)
+
+
+def test_scheduler_stall_tracking_and_policy():
+    sched = Scheduler(SchedulerConfig(preempt_after_iters=3))
+    assert not sched.should_preempt()
+    assert sched.note_head_stall(1) == 1
+    assert sched.note_head_stall(1) == 2
+    assert not sched.should_preempt()
+    # a new head resets the consecutive count
+    assert sched.note_head_stall(2) == 1
+    assert sched.note_head_stall(2) == 2
+    assert sched.note_head_stall(2) == 3
+    assert sched.should_preempt()
+    sched.note_head_progress()
+    assert not sched.should_preempt()
+    # preempt_after_iters=0 disables preemption outright
+    off = Scheduler(SchedulerConfig(preempt_after_iters=0))
+    for _ in range(10):
+        off.note_head_stall(1)
+    assert not off.should_preempt()
+
+
+def test_scheduler_victim_selection_newest_first_with_limit():
+    sched = Scheduler(SchedulerConfig(preempt_after_iters=1,
+                                      preempt_limit=2))
+    a, b, c = _req(1), _req(2), _req(3)
+    decoding = [a, b, c]                   # admission order: c newest
+    assert sched.select_victim(decoding) is c
+    sched.preemptions[c.rid] = 2           # c exhausted its victim budget
+    assert sched.select_victim(decoding) is b
+    sched.preemptions[b.rid] = 2
+    assert sched.select_victim(decoding) is a
+    sched.preemptions[a.rid] = 2
+    assert sched.select_victim(decoding) is None   # liveness: plain FIFO
+    assert sched.select_victim([]) is None
+
+
+def test_preempt_requeue_is_front_and_not_a_retry():
+    sched = Scheduler(SchedulerConfig(retry_limit=1))
+    victim, waiting = _req(1), _req(2)
+    sched.enqueue(waiting, 0.0)
+    victim.state = State.DECODING
+    for _ in range(5):                     # far past retry_limit
+        sched.preempt_requeue(victim)
+        assert sched.queue[0] is victim    # front: FCFS priority kept
+        assert victim.state == State.QUEUED
+        sched.queue.popleft()
+    assert sched.retries == {}             # retries untouched
+    assert sched.preemptions[victim.rid] == 5
+    # a genuine failure afterwards still has its full retry budget
+    assert sched.requeue(victim)
+    sched.queue.popleft()
+    assert not sched.requeue(victim)       # retry_limit=1 -> FAILED
+    assert victim.state == State.FAILED
+    assert sched.preemptions == {}         # on_terminal cleans both dicts
+
+
+# ---- shortage valve: burn retries only when shortage is terminal -----------
+
+def test_reclaimable_shortage_never_fails_requests(world, tmp_path):
+    """Regression (found driving the engine end-to-end): the bounded
+    'nothing in flight will free blocks' retry used to live inside
+    ``Scheduler.next_prefills`` and fired while the engine's cold-run
+    reclaim was still actively recovering pinned zero-reader runs —
+    three such iterations FAILed requests the pool could serve. The
+    valve now lives in ``Engine.step`` and only burns a retry when
+    shortage is terminal (no decodes, no reclaimable runs)."""
+    from repro.core.chunkstore import ChunkStore
+    from repro.core.tiers import TieredStore
+    cfg, params, kb = world
+    store = ChunkStore(TieredStore(1 << 28, 1 << 28,
+                                   str(tmp_path / "s"),
+                                   start_worker=False), 50, 4)
+    eng = Engine(cfg, params, store,
+                 sched=SchedulerConfig(max_batch_tokens=100_000,
+                                       max_decode_batch=4,
+                                       max_prefill_batch=2,
+                                       preempt_after_iters=4),
+                 pool_blocks=28,
+                 executor_kwargs=dict(strategy="cachecraft",
+                                      use_focus=False,
+                                      force_recompute_fraction=0.25,
+                                      store_fixed_variants=False))
+    wl = WorkloadConfig(num_requests=8, qpm=1e9, seed=11,
+                        max_new_tokens=6)
+    reqs = generate(kb, wl)
+    for r in reqs[:2]:
+        r.max_new_tokens = 20
+    stats = eng.run(reqs)
+    assert stats.failed == 0
+    assert all(r.state == State.DONE for r in reqs)
+    assert all(len(r.output_tokens) == r.max_new_tokens for r in reqs)
+    assert eng.counters.preemptions > 0
+    # nothing leaked beyond the store's pinned (reader-free) runs
+    run_blocks = sum(len(r.blocks)
+                     for r in store.residency.runs.values())
+    assert all(r.readers == 0 for r in store.residency.runs.values())
+    assert eng.pool.reserved_blocks == 0
+    assert eng.pool.live_blocks == run_blocks
+    assert eng.pool.free_blocks + run_blocks == eng.pool.num_blocks
+
+
+def test_terminal_shortage_still_converges_to_failed(world):
+    """The valve's original job survives the move into the engine:
+    genuinely unrecoverable shortage (here: blocks leaked into a
+    reservation nobody will ever close, nothing decoding, nothing
+    reclaimable) burns bounded retries and FAILs the head instead of
+    livelocking the run loop."""
+    cfg, params, kb = world
+    eng = Engine(cfg, params, None,
+                 sched=SchedulerConfig(max_batch_tokens=100_000,
+                                       max_decode_batch=4,
+                                       max_prefill_batch=1,
+                                       retry_limit=1),
+                 pool_blocks=16,
+                 executor_kwargs=dict(strategy="all", use_focus=False))
+    leak = eng.pool.reserve(10)            # simulated leak: never closed
+    assert leak is not None
+    reqs = generate(kb, WorkloadConfig(num_requests=1, qpm=1e9, seed=3,
+                                       max_new_tokens=4))
+    # fits the pool in principle (13 <= 16 blocks), so the can-never-fit
+    # fail-fast does not apply; only the valve can end the stall
+    stats = eng.run(reqs, max_iters=50)
+    assert reqs[0].state == State.FAILED
+    assert stats.failed == 1
+
+
+# ---- pool teardown: cancel with shared refcounts in flight -----------------
+
+def test_reclaim_request_conserves_with_shared_refs_in_flight():
+    """Deterministic twin of the hypothesis ``preempt`` interleaving op
+    (the property suite skips without the dev-dep): tearing down a
+    request whose table references a shared canonical run, with a
+    partially-drawn reservation open, must keep the conservation law,
+    leave the run's bytes and refcounts intact, and return only the
+    request's private share to the free list."""
+    from repro.serving.kvpool import BlockTable, KVPool
+    pool = KVPool(num_layers=2, kv_heads=2, head_dim=4, num_blocks=12,
+                  block_size=4)
+    # canonical run: 2 blocks, owner ref held (as a pinned run would)
+    run_blocks = pool.alloc(2)
+    k_run = np.arange(2 * 8 * 2 * 4, dtype=np.float32).reshape(2, 8, 2, 4)
+    pool.write_run(run_blocks, k_run, k_run + 0.5,
+                   np.arange(8, dtype=np.int32))
+    run_bytes = pool.k[:, run_blocks].copy()
+    # the request: shares the run, then appends private tokens drawing
+    # from a reservation (partially drawn: 1 of 3 blocks)
+    table = BlockTable()
+    res = pool.reserve(3)
+    base = pool.append_shared(table, run_blocks)
+    assert base == 0
+    tok = np.ones((2, 2, 4), np.float32)
+    assert pool.append_token(table, tok, tok, 8, reservation=res)
+    assert res.drawn >= 1 and res.remaining <= 2
+    assert pool.free_blocks + pool.live_blocks + pool.reserved_blocks \
+        == pool.num_blocks
+    before_free = pool.free_blocks
+
+    freed = pool.reclaim_request(table, res)
+    # private share: the drawn append block(s) + the undrawn remainder;
+    # the shared run's 2 blocks stay live under the owner ref
+    assert freed == pool.free_blocks - before_free
+    assert pool.free_blocks + pool.live_blocks + pool.reserved_blocks \
+        == pool.num_blocks
+    assert pool.reserved_blocks == 0 and res.closed
+    assert table.blocks == [] and table.length == 0
+    assert all(pool.refs[b] == 1 for b in run_blocks)   # owner ref only
+    np.testing.assert_array_equal(pool.k[:, run_blocks], run_bytes)
+    # dropping the owner ref drains the pool completely
+    pool.release(run_blocks)
+    assert pool.free_blocks == pool.num_blocks
+    assert pool.live_blocks == 0
+
+
+# ---- satellite: deadline straggler guard actually fires --------------------
+
+def test_deadline_expires_starved_queued_request(world):
+    """Regression: ``deadline_s``/``Scheduler.expired`` was dead code —
+    no caller in src/ — so the documented straggler guard never fired.
+    Wired into ``Engine.step``, an expired queued request FAILs through
+    the teardown path with clean pool accounting."""
+    cfg, params, kb = world
+    eng = Engine(cfg, params, None,
+                 sched=SchedulerConfig(max_batch_tokens=100_000,
+                                       max_decode_batch=4,
+                                       max_prefill_batch=4,
+                                       deadline_s=1e-6),
+                 pool_blocks=14,            # fits req0 (13 blocks), so
+                 #   req1 (14 blocks) fits the pool in principle but
+                 #   must wait — the expiry, not the fail-fast, path
+                 executor_kwargs=dict(strategy="all", use_focus=False))
+    reqs = generate(kb, WorkloadConfig(num_requests=2, qpm=1e9, seed=3,
+                                       max_new_tokens=4))
+    for r in reqs:
+        r.arrival_time = 0.0               # both queued at clock 0
+    stats = eng.run(reqs)
+    # the first request is admitted before any clock advances and
+    # occupies the whole pool; the starved second request ages past the
+    # (tiny) deadline during the first decode step and must FAIL
+    # instead of waiting out the drain
+    assert reqs[0].state == State.DONE
+    assert reqs[1].state == State.FAILED
+    assert stats.completed == 1 and stats.failed == 1
+    assert eng.counters.deadline_expired == 1
+    assert eng.pool.reserved_blocks == 0 and eng.pool.live_blocks == 0
+    assert eng.pool.free_blocks == eng.pool.num_blocks
+    assert eng.scheduler.retries == {}
+
+
+def test_no_deadline_means_no_expiry(world):
+    cfg, params, kb = world
+    eng = Engine(cfg, params, None,
+                 sched=SchedulerConfig(max_batch_tokens=100_000,
+                                       max_decode_batch=4,
+                                       max_prefill_batch=1),
+                 pool_blocks=512,
+                 executor_kwargs=dict(strategy="all", use_focus=False))
+    reqs = generate(kb, WorkloadConfig(num_requests=2, qpm=1e9, seed=3,
+                                       max_new_tokens=4))
+    stats = eng.run(reqs)
+    assert stats.completed == 2 and stats.failed == 0
+    assert eng.counters.deadline_expired == 0
+
+
+# ---- satellite: storeless oversized head must fail fast --------------------
+
+def test_storeless_oversized_head_fails_fast_queue_moves():
+    """Regression: with ``pool=None`` the ``need > max_batch_tokens``
+    fail-fast was skipped (scheduler.py gated it on the pool), so an
+    oversized head broke the admission loop forever and the queue
+    stalled behind it — a livelock, since nothing in flight could ever
+    shrink the head."""
+    sched = Scheduler(SchedulerConfig(max_batch_tokens=100,
+                                      max_decode_batch=8,
+                                      max_prefill_batch=4))
+    big = Request(rid=1, system_tokens=np.zeros(200, np.int32),
+                  chunk_tokens=[], question_tokens=np.zeros(1, np.int32),
+                  max_new_tokens=4)        # need = 205 > 100, forever
+    small = _req(2)
+    sched.enqueue(big, 0.0)
+    sched.enqueue(small, 0.0)
+    got = sched.next_prefills(0, 0)        # legacy path: no pool
+    assert big.state == State.FAILED       # fail fast, not livelock
+    assert got == [small]                  # the queue kept moving
+    assert not sched.queue
+
+
+# ---- satellite: per-attempt state fully reset on requeue -------------------
+
+def test_requeue_resets_stale_attempt_metrics(world):
+    """Regression: ``Engine._requeue`` reset ``output_tokens`` /
+    ``total_len`` but left ``t_first_token``, ``t_prefill_start``,
+    ``prefill_tokens_*`` and ``cache_hits`` from the burned attempt, so
+    a requeued request reported TTFT/hit metrics from a discarded
+    pass."""
+    cfg, params, _kb = world
+    eng = Engine(cfg, params, None, pool_blocks=64,
+                 executor_kwargs=dict(strategy="all", use_focus=False))
+    req = _req(1)
+    eng.scheduler.enqueue(req, clock=1.5)
+    eng.scheduler.queue.popleft()
+    # simulate a fully-burned attempt
+    req.reservation = eng.pool.reserve(2)
+    req.output_tokens = [7, 8]
+    req.total_len = 30
+    req.t_first_service = 2.0
+    req.t_prefill_start = 2.0
+    req.t_first_token = 3.0
+    req.prefill_tokens_total = 30
+    req.prefill_tokens_computed = 20
+    req.cache_hits = 2
+    req.load_seconds_modeled = 0.5
+    req.delta_blocks_saved = 1
+    eng._requeue(req)
+    assert req.state == State.QUEUED
+    # attempt-scoped state gone ...
+    assert req.output_tokens == [] and req.total_len == 0
+    assert req.t_prefill_start is None and req.t_first_token is None
+    assert req.prefill_tokens_total == 0
+    assert req.prefill_tokens_computed == 0
+    assert req.cache_hits == 0 and req.load_seconds_modeled == 0.0
+    assert req.delta_blocks_saved == 0
+    assert req.reservation is None
+    # ... arrival identity (and first-service time) preserved
+    assert req.t_enqueued == 1.5
+    assert req.t_first_service == 2.0
+    assert req.queue_wait == 0.5
+    assert eng.pool.reserved_blocks == 0
+    assert eng.pool.free_blocks == eng.pool.num_blocks
