@@ -29,8 +29,11 @@ Also emitted:
 
 ``--ci-smoke`` runs the perf gates (admission throughput, decode-churn
 rebuild *counts*, copy-vs-zerocopy reserved *blocks*, preemption
-*counts* + logits bit-equality — all but the first count-based, immune
-to shared-runner timing noise) and writes the gate numbers to
+*counts* + logits bit-equality, eviction tier-miss *counts* (LRU vs
+reuse-aware, from ``benchmarks.preloading.eviction_compare``), and the
+eager-vs-layerwise preload comparison (hidden/blocked layer counts +
+measured exposed load) — all but the first count-based, immune to
+shared-runner timing noise) and writes the gate numbers to
 ``results/fig22_ci_smoke.json`` for the CI artifact upload.
 """
 from __future__ import annotations
@@ -389,6 +392,24 @@ def ci_smoke() -> int:
         and pre["on"]["head_stall_iters_max"]
         < pre["off"]["head_stall_iters_max"])
 
+    from benchmarks.preloading import eviction_compare, preload_compare
+    ev = eviction_compare(quick=True)
+    # fully deterministic (seeded access sequence, count-based): the
+    # reuse-aware policy must take strictly fewer tier misses than LRU
+    # on the skewed chunk workload
+    ok_evict = ev["reuse"]["tier_misses"] < ev["lru"]["tier_misses"]
+
+    pl = preload_compare(quick=True)
+    # count-based primary gate (hidden layers exist + strictly fewer
+    # blocking awaits); the measured exposed-time comparison rides
+    # along — the fixed per-load latency keeps its margin wide
+    ok_preload = (
+        pl["layerwise"]["hidden_layers"] > 0
+        and pl["layerwise"]["blocked_layers"]
+        < pl["eager"]["blocked_layers"]
+        and pl["layerwise"]["load_exposed_s"]
+        < pl["eager"]["load_exposed_s"])
+
     gates = {
         "admission": dict(ok=ok_adm, tolerance=tol, **{
             f"throughput_rps_{k}": v for k, v in thr.items()}),
@@ -398,6 +419,9 @@ def ci_smoke() -> int:
                               zerocopy=shb["zerocopy"]),
         "preemption": dict(ok=ok_pre, off=pre["off"], on=pre["on"],
                            p99_wait_lower=pre["p99_wait_lower"]),
+        "eviction": dict(ok=ok_evict, lru=ev["lru"], reuse=ev["reuse"]),
+        "preload": dict(ok=ok_preload, eager=pl["eager"],
+                        layerwise=pl["layerwise"]),
     }
     out_dir = os.path.join(os.path.dirname(__file__), "..", "results")
     os.makedirs(out_dir, exist_ok=True)

@@ -25,6 +25,13 @@
 #     FAILED), final logits bit-identical to an unpressured run, and a
 #     strictly lower max head-stall iteration count than preemption-off
 #     (count-based, immune to runner timing noise),
+#   * unified eviction policy: the reuse-aware (GDSF) policy takes
+#     strictly fewer tier misses than LRU on the skewed chunk workload
+#     (fully deterministic, count-based),
+#   * layer-granular streamed tier loads: layerwise preloading hides a
+#     nonzero number of layer loads behind window compute, blocks on
+#     strictly fewer layer awaits than eager whole-variant loading, and
+#     measures strictly less exposed load time at real await points,
 # and writes results/fig22_ci_smoke.json for the CI artifact upload
 # (plus the preemption trajectory in results/BENCH_preemption.json).
 # --smoke-only skips the pytest suite for fast local iteration on the
@@ -75,7 +82,8 @@ fi
 
 if [[ "$status" == "0" && "$perf_smoke" == "1" ]]; then
     echo "CI: perf smoke (admission throughput + decode-churn counts" \
-         "+ copy-vs-zerocopy shared-block gate + preemption gate)"
+         "+ copy-vs-zerocopy shared-block gate + preemption gate" \
+         "+ eviction tier-miss gate + layerwise-preload gate)"
     python -m benchmarks.throughput_latency --ci-smoke || status=$?
     echo "CI perf smoke exit status: $status"
 fi

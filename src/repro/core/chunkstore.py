@@ -6,9 +6,26 @@ different past prefixes, each with the metadata needed to score
 reusability at lookup time (CCI, per-prefix inter weights, per-token
 external attention for Eq. 14). Variant selection minimizes
 CFO = CCI * (1 - beta'); every access bumps the variant's
-reuse-frequency f_r += 1/CFO, and the globally-lowest-f_r variants are
+reuse-frequency f_r += 1/CFO, and the lowest-scored variants are
 evicted once the store exceeds N*M instances — the paper's argument for
 why plain LRU/LFU/FIFO is insufficient.
+
+Eviction-policy contract (cache-manager architecture): every eviction
+site in the store shares one pluggable ``core.eviction.EvictionPolicy``
+— variant capping (``_evict_if_needed``), pool-run reclaim ordering
+(``reclaim_pool_runs``), and, through ``TieredStore.attach_stats``, the
+tier demotion of this store's entries. The default
+``ReuseAwarePolicy`` scores ``f_r x tokens / bytes``, which reduces
+exactly to the historical lowest-``f_r`` capping rule (cost/size is a
+constant ratio for chunk KV), while making tier demotion
+reuse-frequency-aware instead of recency-only.
+
+Layer-sliced tier storage (§3.4.2 / Eq. 16): variants are stored as one
+tier entry per layer (``<vid>@L<nn>``), so the layer-wise preload
+schedule can stream exactly the layers the executor is about to
+compute (``core.preload.LayerStream``) instead of blocking on the whole
+variant. ``get_kv`` reassembles the full [L, ...] view; tier pins on
+the bare variant id cover every layer slice (group-aware pinning).
 
 Pool residency (zero-copy chunk sharing): ``attach_pool`` wires the
 store to the serving ``KVPool``. The ``PoolResidency`` registry then
@@ -29,8 +46,11 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.eviction import Candidate, EvictionPolicy, \
+    ReuseAwarePolicy, get_policy
 from repro.core.scoring import ChunkScores, beta_prime, cfo as cfo_fn
-from repro.core.tiers import TieredStore, tree_nbytes
+from repro.core.tiers import LoadInfo, PrefetchTicket, TieredStore, \
+    merge_load_infos, tree_nbytes
 
 
 def chunk_hash(tokens: np.ndarray) -> str:
@@ -58,6 +78,8 @@ class Variant:
     nbytes: int
     f_r: float = 0.0
     uses: int = 0
+    num_layers: int = 0          # > 0: stored as per-layer tier slices
+    last_access: float = 0.0     # store-access sequence (LRU candidates)
 
 
 @dataclass
@@ -76,6 +98,7 @@ class SharedRun:
     n_tokens: int
     readers: int = 0
     evict_pending: bool = False
+    last_used: float = 0.0       # residency-clock sequence (LRU cands)
 
 
 class PoolResidency:
@@ -85,6 +108,7 @@ class PoolResidency:
     def __init__(self, pool):
         self.pool = pool
         self.runs: Dict[Tuple[str, int], SharedRun] = {}
+        self._clock = itertools.count(1)
 
     def resident(self, variant_id: str, start: int) -> bool:
         return (variant_id, start) in self.runs
@@ -115,6 +139,7 @@ class PoolResidency:
             self.runs[key] = run
             self.pool.counters.shared_runs_materialized += 1
         run.readers += 1
+        run.last_used = float(next(self._clock))
         return run
 
     def release(self, run: SharedRun):
@@ -124,24 +149,29 @@ class PoolResidency:
         if run.readers <= 0 and run.evict_pending:
             self._unpin(run)
 
-    def reclaim(self, n_blocks: int) -> int:
-        """Pool-pressure backpressure: unpin zero-reader runs (oldest
-        materialization first — dict order) until roughly ``n_blocks``
-        pool blocks were freed. Returns the number actually freed; the
+    def reclaim(self, n_blocks: int, order=None) -> int:
+        """Pool-pressure backpressure: unpin zero-reader runs until
+        roughly ``n_blocks`` pool blocks were freed. Victim order comes
+        from ``order`` (the chunk store passes its eviction policy's
+        ranking — least valuable first); without one, materialization
+        (dict) order applies. Returns the number actually freed; the
         variants stay in the store, so a later hit simply
         re-materializes. Without this, accumulated cold runs could pin
         the whole pool and starve admissions forever."""
+        cands = [r for r in self.runs.values()
+                 if r.readers <= 0 and not r.evict_pending]
+        if order is not None:
+            cands = order(cands)
         freed = 0
-        for run in list(self.runs.values()):
+        for run in cands:
             if freed >= n_blocks:
                 break
-            if run.readers <= 0 and not run.evict_pending:
-                # only the owner ref frees a block; readers-gone means
-                # every block drops to refcount 0 here
-                freed += sum(1 for b in run.blocks
-                             if self.pool.refs[b] == 1)
-                self._unpin(run)
-                self.pool.counters.run_reclaims += 1
+            # only the owner ref frees a block; readers-gone means
+            # every block drops to refcount 0 here
+            freed += sum(1 for b in run.blocks
+                         if self.pool.refs[b] == 1)
+            self._unpin(run)
+            self.pool.counters.run_reclaims += 1
         return freed
 
     def evict(self, variant_id: str):
@@ -164,7 +194,8 @@ class PoolResidency:
 class ChunkStore:
     def __init__(self, tiers: TieredStore, n_chunks: int = 100,
                  m_variants: int = 5, alpha: float = 1.0,
-                 use_beta: bool = True, quantize_kv: bool = False):
+                 use_beta: bool = True, quantize_kv: bool = False,
+                 policy=None, layered_kv: bool = True):
         self.tiers = tiers
         self.n_chunks = n_chunks
         self.m_variants = m_variants
@@ -173,10 +204,43 @@ class ChunkStore:
         # beyond-paper: int8 chunk-caches (per-token scales) — 4x more
         # chunks per tier; composes with the paper's §7 quantization note
         self.quantize_kv = quantize_kv
+        # shared victim-selection source (see module docstring); the
+        # reuse-aware default reproduces the historical f_r capping rule
+        self.policy: EvictionPolicy = get_policy(policy) \
+            if policy is not None else ReuseAwarePolicy()
+        self.layered_kv = layered_kv
         self.table: Dict[str, List[Variant]] = {}
+        self._by_vid: Dict[str, Variant] = {}
         self._counter = itertools.count()
+        self._access_clock = itertools.count(1)
         self.evictions = 0
         self.residency: Optional[PoolResidency] = None
+        # feed per-variant reuse stats (and layer-key -> variant-id pin
+        # grouping) into the tier store's eviction candidates
+        tiers.attach_stats(self._tier_stats, self._tier_group)
+
+    # ---- tier-key plumbing (layer-sliced storage) -------------------------
+    @staticmethod
+    def _lkey(vid: str, layer: int) -> str:
+        return f"{vid}@L{layer:02d}"
+
+    @staticmethod
+    def _tier_group(key: str) -> str:
+        """Pin-group + stats alias: a layer-slice key belongs to its
+        variant id."""
+        return key.split("@L", 1)[0]
+
+    def _tier_stats(self, key: str) -> tuple:
+        var = self._by_vid.get(self._tier_group(key))
+        if var is None:
+            return 0.0, 1.0
+        return var.f_r, float(max(1, var.num_tokens))
+
+    def _tier_keys(self, var: Variant) -> List[str]:
+        if var.num_layers:
+            return [self._lkey(var.variant_id, l)
+                    for l in range(var.num_layers)]
+        return [var.variant_id]
 
     # ---- pool residency (zero-copy chunk sharing) ------------------------
     def attach_pool(self, pool) -> PoolResidency:
@@ -200,13 +264,31 @@ class ChunkStore:
             self.residency = PoolResidency(pool)
         return self.residency
 
+    def _run_order(self, runs: List[SharedRun]) -> List[SharedRun]:
+        """Rank reclaim victims with the shared eviction policy:
+        candidates carry the owning variant's reuse stats, so the
+        reuse-aware policy unpins the least-likely-to-be-reshared run
+        first instead of blind materialization order."""
+        bnb = getattr(self.residency.pool, "block_nbytes", 1)
+        cands = []
+        for run in runs:
+            var = self._by_vid.get(run.variant_id)
+            cands.append(Candidate(
+                key=run, nbytes=len(run.blocks) * bnb,
+                last_access=run.last_used,
+                reuse_freq=var.f_r if var else 0.0,
+                recompute_cost=float(max(1, var.num_tokens)) if var
+                else 1.0))
+        return [c.key for c in self.policy.order(cands)]
+
     def reclaim_pool_runs(self, n_blocks: int) -> int:
         """Free ~``n_blocks`` pool blocks by unpinning zero-reader runs
-        (tier pins released alongside). Admission-side backpressure."""
+        (tier pins released alongside), policy-ordered. Admission-side
+        backpressure."""
         if self.residency is None:
             return 0
         before = dict(self.residency.runs)
-        freed = self.residency.reclaim(n_blocks)
+        freed = self.residency.reclaim(n_blocks, order=self._run_order)
         for key, run in before.items():
             if key not in self.residency.runs:
                 self.tiers.unpin(run.variant_id)
@@ -249,30 +331,49 @@ class ChunkStore:
         if self.quantize_kv:
             kv = _quantize_kv(kv)
         nb = tree_nbytes(kv)
+        L = 0
+        if self.layered_kv:
+            lead = kv.get("k", kv.get("k_q"))
+            L = int(np.asarray(lead).shape[0])
         var = Variant(variant_id=vid, chunk_hash=chash, scores=scores,
-                      num_tokens=scores.length, nbytes=nb)
-        self.tiers.put(vid, kv)
+                      num_tokens=scores.length, nbytes=nb, num_layers=L,
+                      last_access=float(next(self._access_clock)))
+        self._by_vid[vid] = var
+        if L:
+            # one tier entry per layer slice: the unit of demotion,
+            # prefetch and streamed loading (Eq. 16)
+            for l in range(L):
+                self.tiers.put(self._lkey(vid, l),
+                               {name: np.asarray(arr)[l]
+                                for name, arr in kv.items()})
+        else:
+            self.tiers.put(vid, kv)
         self.table.setdefault(chash, []).append(var)
         self._evict_if_needed()
         return var
 
+    def _variant_candidates(self) -> List[Candidate]:
+        return [Candidate(key=v, nbytes=v.nbytes,
+                          last_access=v.last_access, reuse_freq=v.f_r,
+                          recompute_cost=float(max(1, v.num_tokens)))
+                for variants in self.table.values() for v in variants]
+
     def _evict_if_needed(self):
         while self.num_variants() > self.capacity:
-            worst: Optional[Variant] = None
-            for variants in self.table.values():
-                for v in variants:
-                    if worst is None or v.f_r < worst.f_r:
-                        worst = v
+            worst = self.policy.select(self._variant_candidates())
             if worst is None:
                 return
-            self.remove(worst)
+            self.remove(worst.key)
             self.evictions += 1
 
     def remove(self, var: Variant):
         self.table[var.chunk_hash].remove(var)
         if not self.table[var.chunk_hash]:
             del self.table[var.chunk_hash]
-        self.tiers.delete(var.variant_id)
+        for key in self._tier_keys(var):
+            self.tiers.delete(key)
+        self.tiers.pins.pop(var.variant_id, None)
+        self._by_vid.pop(var.variant_id, None)
         if self.residency is not None:
             # pool-resident runs unpin now, or on the last reader's
             # release when the eviction races live requests
@@ -300,14 +401,40 @@ class ChunkStore:
     def record_use(self, var: Variant, cfo_value: float):
         var.f_r += 1.0 / max(cfo_value, 1e-3)
         var.uses += 1
+        var.last_access = float(next(self._access_clock))
 
-    def prefetch(self, chash: str, new_prefix_hashes: Sequence[str] = ()):
+    def prefetch(self, chash: str, new_prefix_hashes: Sequence[str] = (),
+                 ticket: Optional[PrefetchTicket] = None):
         hit = self.best_variant(chash, new_prefix_hashes)
         if hit is not None:
-            self.tiers.prefetch(hit[0].variant_id)
+            for key in self._tier_keys(hit[0]):
+                self.tiers.prefetch(key, ticket)
 
     def get_kv(self, var: Variant):
-        kv, info = self.tiers.get(var.variant_id)
+        if var.num_layers:
+            slices, infos = [], []
+            for l in range(var.num_layers):
+                kv_l, info = self.tiers.get(self._lkey(var.variant_id, l))
+                if kv_l is None:
+                    return None, None
+                slices.append(kv_l)
+                infos.append(info)
+            kv = {name: np.stack([s[name] for s in slices])
+                  for name in slices[0]}
+            info = merge_load_infos(infos)
+        else:
+            kv, info = self.tiers.get(var.variant_id)
+        if kv is not None and "k_q" in kv:
+            kv = _dequantize_kv(kv)
+        return kv, info
+
+    def get_kv_layer(self, var: Variant, layer: int):
+        """One layer slice of a layered variant's stored (de-roped) KV,
+        dequantized: ({'k': [S,H,D], 'v': [S,H,D]}, LoadInfo). The unit
+        the layer-wise streamed loads (``core.preload.LayerStream``)
+        await on."""
+        assert var.num_layers, "variant is not layer-sliced"
+        kv, info = self.tiers.get(self._lkey(var.variant_id, layer))
         if kv is not None and "k_q" in kv:
             kv = _dequantize_kv(kv)
         return kv, info

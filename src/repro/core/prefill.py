@@ -25,6 +25,8 @@ from repro.core import scoring
 from repro.core.chunkstore import ChunkStore
 from repro.core.focus import FocusTracker
 from repro.core.planner import InferencePlan, build_plan
+from repro.core.preload import LayerStream, layerwise_schedule
+from repro.core.tiers import CPU_TO_HBM_GBPS, SSD_GBPS, merge_load_infos
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.models.layers import apply_rope
@@ -150,6 +152,17 @@ def unpack_cache(cfg: ModelConfig, cache) -> Tuple[np.ndarray, np.ndarray,
 
 # ---------------------------------------------------------------------------
 @dataclass
+class StreamJob:
+    """One hit decision whose KV is streamed layer by layer instead of
+    being injected eagerly (``CacheCraftExecutor(layerwise_load=True)``)."""
+    r: int                              # request index in the packed pass
+    stream: LayerStream
+    off: int                            # request's layout offset
+    seg: object                         # the hit segment
+    rope_pos: np.ndarray                # target RoPE positions
+
+
+@dataclass
 class PrefillResult:
     plan: InferencePlan
     logits_last: np.ndarray             # [V] logits of the final token
@@ -164,6 +177,16 @@ class PrefillResult:
     load_seconds_measured: float = 0.0
     tier_hits: Dict[str, int] = field(default_factory=dict)
     wall_seconds: float = 0.0
+    # --- layer-granular streamed loads (layerwise_load=True) ---
+    streamed: bool = False              # loads were streamed, not eager
+    load_exposed_measured: float = 0.0  # wall time blocked at await points
+    load_span_measured: float = 0.0     # wall span first request->last load
+    load_blocked_layers: int = 0        # layer awaits that actually waited
+    load_hidden_layers: int = 0         # layer loads fully hidden by compute
+    preload_depth_used: int = 0         # Eq. 16 depth the pass ran with
+    # trace for overlap assertions: {"windows": [(l0, l1, t_start)],
+    #  "streams": [per-stream (event, layer, t) lists]}
+    load_trace: Optional[dict] = None
 
     @property
     def compute_fraction(self) -> float:
@@ -183,6 +206,7 @@ class CacheCraftExecutor:
                  store_fixed_variants: bool = True,
                  store_new_chunks: bool = True,
                  force_recompute_fraction: Optional[float] = None,
+                 layerwise_load: bool = False,
                  rng: Optional[np.random.Generator] = None):
         if not cfg.supports_chunk_cache and store is not None:
             raise ValueError(
@@ -199,6 +223,13 @@ class CacheCraftExecutor:
         self.store_fixed_variants = store_fixed_variants
         self.store_new_chunks = store_new_chunks
         self.force_recompute_fraction = force_recompute_fraction
+        # layer-granular streamed tier loads (Eq. 16 / Algorithm 2 made
+        # real): hit-chunk KV arrives per layer right before the window
+        # that computes it, with the remainder loading in the
+        # background. Needs a store with layer-sliced variants.
+        self.layerwise_load = layerwise_load and store is not None
+        # EMA of measured per-layer window compute (feeds Eq. 16)
+        self._t_layer_s = 0.0
         self.rng = rng or np.random.default_rng(0)
         # jit caches are shared across ALL executor instances of the same
         # config (benches spin up many executors; fresh jit caches per
@@ -260,35 +291,63 @@ class CacheCraftExecutor:
         layout_sid = np.full(S, cfg.stats_chunks - 1, np.int32)
 
         # --- inject cached chunk KV (RoPE re-applied at local positions) ---
+        # Eager mode loads each hit variant whole, synchronously, here.
+        # Layerwise mode defers the KV bytes: a StreamJob per hit starts
+        # background per-layer loads, and the bytes land right before
+        # the window that computes each layer (see the window loop).
         load_modeled = np.zeros(R)
         load_measured = np.zeros(R)
         tier_hits: List[Dict[str, int]] = [
             {"hbm": 0, "cpu": 0, "ssd": 0} for _ in range(R)]
+        stream_jobs: List[StreamJob] = []
         for r, plan in enumerate(plans):
             off = int(offs[r])
             for d in plan.decisions:
                 if not d.is_hit:
+                    continue
+                span = np.arange(d.seg.start, d.seg.end, dtype=np.int32)
+                rope_pos = span if self.fix_rpe else \
+                    (np.arange(d.seg.length) + d.variant.scores.orig_start)
+                pos_layout[off + d.seg.start:off + d.seg.end] = \
+                    span if self.fix_causality \
+                    else (np.arange(d.seg.length) +
+                          d.variant.scores.orig_start)
+                self.store.record_use(d.variant, max(d.cfo, 1e-3))
+                if self.layerwise_load and d.variant.num_layers == L:
+                    stream_jobs.append(StreamJob(
+                        r=r, stream=LayerStream(self.store, d.variant),
+                        off=off, seg=d.seg, rope_pos=rope_pos))
                     continue
                 kv, info = self.store.get_kv(d.variant)
                 if info is not None:
                     load_modeled[r] += info.seconds_modeled
                     load_measured[r] += info.seconds_measured
                     tier_hits[r][info.tier] += 1
-                span = np.arange(d.seg.start, d.seg.end, dtype=np.int32)
-                rope_pos = span if self.fix_rpe else \
-                    (np.arange(d.seg.length) + d.variant.scores.orig_start)
                 kc, vc = inject_chunk_kv(cfg, kv, rope_pos)
                 k_np[:, off + d.seg.start:off + d.seg.end] = kc
                 v_np[:, off + d.seg.start:off + d.seg.end] = vc
-                pos_layout[off + d.seg.start:off + d.seg.end] = \
-                    span if self.fix_causality \
-                    else (np.arange(d.seg.length) +
-                          d.variant.scores.orig_start)
-                self.store.record_use(d.variant, max(d.cfo, 1e-3))
             # key-side (layout) stat ids for the model's mass statistic
             for seg in plan.segments:
                 layout_sid[off + seg.start:off + seg.end] = seg.stat_id
             seg_layout[off:off + plan.total_len] = r
+
+        # Eq. 16 / Algorithm 2: size the preload depth from measured
+        # per-layer compute (EMA over past passes) vs estimated
+        # per-layer load cost summed over streams (one worker serves
+        # them in series), then kick off the first lp layers in the
+        # background while the pass finishes setting up.
+        schedule = None
+        trace_windows: List[tuple] = []
+        if stream_jobs:
+            t_load_layer = sum(self._layer_load_estimate(j.stream.var)
+                               for j in stream_jobs)
+            schedule = layerwise_schedule(L, self._t_layer_s, t_load_layer)
+            # the first lp layers preload before execution starts —
+            # layer-major across streams, so the worker (FIFO) serves
+            # every stream's layer 0 before anyone's layer 1
+            for l in range(min(L, schedule.depth)):
+                for job in stream_jobs:
+                    job.stream.request([l])
         layout_sid_j = jnp.asarray(layout_sid)[None]
         kv_seg_j = jnp.asarray(seg_layout)[None]
 
@@ -321,6 +380,12 @@ class CacheCraftExecutor:
         P, G = len(cfg.pattern), cfg.n_groups
         w_groups = max(1, -(-self.focus_w // P)) \
             if any(t is not None for t in trackers) else max(1, G)
+        if stream_jobs:
+            # layer-granular streaming needs narrow windows: every
+            # window boundary is an await point, so computing one layer
+            # group at a time lets layers > i + lp keep loading on the
+            # worker while group i computes (Algorithm 2's step loop)
+            w_groups = 1
 
         h = self._embed(self.params, jnp.asarray(act_tok)[None])
         positions = jnp.asarray(act_pos)[None]
@@ -364,15 +429,22 @@ class CacheCraftExecutor:
         # window starts: groups in steps of w_groups, then the tail
         starts = list(range(0, G, w_groups)) or [0]
         layer_idx = 0
+        t_compute = 0.0
         for wi, g0 in enumerate(starts):
             g1 = min(G, g0 + w_groups)
             is_last = wi == len(starts) - 1
+            nl = (g1 - g0) * P + (cfg.n_tail if is_last else 0)
+            if stream_jobs:
+                self._stage_window_layers(
+                    stream_jobs, schedule, cache, k_np, v_np,
+                    range(layer_idx, layer_idx + nl), trace_windows)
+            t_w0 = time.perf_counter()
             h, new_cache, stats, kstats, _ = self._window(
                 self.params, h, positions, layout_sid_j, cache,
                 slots, seg_ids, kv_seg_j, pack_qidx, pack_kidx,
                 g0=g0, g1=g1, tail=is_last and cfg.n_tail > 0,
                 collect=collect_stats)
-            nl = (g1 - g0) * P + (cfg.n_tail if is_last else 0)
+            t_compute += time.perf_counter() - t_w0
             live_pos = np.asarray(positions[0]) >= 0
             for r in range(R):
                 rows_layers[r] += int((live_pos & (seg_np == r)).sum()) * nl
@@ -419,7 +491,30 @@ class CacheCraftExecutor:
                             drop |= np.isin(sid_np, list(unfocused)) & \
                                 (seg_np == r) & (pos_np >= 0) & \
                                 (sid_np != plans[r].question.stat_id)
-                    if drop.any():
+                    if drop.any() and R > 1:
+                        # packed batch: mask dropped rows IN PLACE (the
+                        # decode-row-masking template) — pos/slot -> -1
+                        # makes them attention-inert padding with their
+                        # KV writes dropped, while every array keeps its
+                        # shape, so heavy packing cannot mint a new jit
+                        # shape per newly-converged window. seg ids and
+                        # the block-diagonal qidx map stay as-is: masked
+                        # rows are skipped by the same pos >= 0 guards
+                        # that already skip bucket padding.
+                        pos2 = pos_np.copy()
+                        slot2 = np.asarray(slots[0]).copy()
+                        pos2[drop] = -1
+                        slot2[drop] = -1
+                        sid_np = sid_np.copy()
+                        sid_np[drop] = cfg.stats_chunks - 1
+                        row_map = row_map.copy()
+                        row_map[drop] = -1
+                        positions = jnp.asarray(pos2)[None]
+                        slots = jnp.asarray(slot2)[None]
+                    elif drop.any():
+                        # single request: re-bucket to a smaller active
+                        # set — the shrink saves real window compute and
+                        # the extra jit shape is bounded (R == 1)
                         keep_idx = np.where(~drop & (row_map >= 0))[0]
                         A2 = _bucket(len(keep_idx), tot_bucket)
                         gather = np.zeros(A2, np.int64)
@@ -445,6 +540,40 @@ class CacheCraftExecutor:
                         pack_qidx = _qidx_map()
             layer_idx += nl
 
+        # measured per-layer compute feeds the next pass's Eq. 16 depth
+        if L:
+            t_layer = t_compute / L
+            self._t_layer_s = t_layer if self._t_layer_s == 0.0 else \
+                0.5 * self._t_layer_s + 0.5 * t_layer
+
+        # streamed-load accounting: per-request modeled/measured totals
+        # (variant-level, deepest tier touched) plus the real overlap
+        # split — blocked seconds were measured at the await points
+        exposed_measured = np.zeros(R)
+        blocked_layers = np.zeros(R, np.int64)
+        hidden_layers = np.zeros(R, np.int64)
+        span_measured = np.zeros(R)
+        stream_traces: List[List[list]] = [[] for _ in range(R)]
+        for job in stream_jobs:
+            s = job.stream
+            info = merge_load_infos(s._infos)
+            if info is not None:
+                load_modeled[job.r] += info.seconds_modeled
+                load_measured[job.r] += info.seconds_measured
+                tier_hits[job.r][info.tier] += 1
+            exposed_measured[job.r] += s.blocked_seconds
+            blocked_layers[job.r] += s.blocked_layers
+            hidden_layers[job.r] += s.hidden_layers
+            stream_traces[job.r].append(list(s.trace))
+        for r in range(R):
+            # wall-clock span of the request's loads (first request ->
+            # last completion): with parallel tier workers the summed
+            # per-load times overstate elapsed time, so overlap
+            # accounting clamps to this span
+            ts_all = [t for tr in stream_traces[r] for _ev, _l, t in tr]
+            if ts_all:
+                span_measured[r] = max(ts_all) - min(ts_all)
+
         # --- head: logits of each request's final question token -----------
         last_rows = [int(np.where(row_map == int(act_offs[r + 1]) - 1)[0][0])
                      for r in range(R)]
@@ -463,6 +592,7 @@ class CacheCraftExecutor:
                 st_r = stats_all[:, int(act_offs[r]):int(act_offs[r + 1])]
                 ks_r = None if kstats_all is None else kstats_all[:, off:end]
                 self._capture(plan, st_r, ks_r, k_r, v_r)
+            streamed = any(j.r == r for j in stream_jobs)
             results.append(PrefillResult(
                 plan=plan, logits_last=logits_np[r], k_layers=k_r,
                 v_layers=v_r, pos_layout=p_r, total_len=plan.total_len,
@@ -470,8 +600,83 @@ class CacheCraftExecutor:
                 focus_cutoff=focus_cutoff[r], focused=focused[r],
                 load_seconds_modeled=float(load_modeled[r]),
                 load_seconds_measured=float(load_measured[r]),
-                tier_hits=tier_hits[r], wall_seconds=wall))
+                tier_hits=tier_hits[r], wall_seconds=wall,
+                streamed=streamed,
+                load_exposed_measured=float(exposed_measured[r]),
+                load_span_measured=float(span_measured[r]),
+                load_blocked_layers=int(blocked_layers[r]),
+                load_hidden_layers=int(hidden_layers[r]),
+                preload_depth_used=schedule.depth if schedule else 0,
+                load_trace={"windows": list(trace_windows),
+                            "streams": stream_traces[r]}
+                if streamed else None))
         return results
+
+    # ---- layer-granular streamed loads (Eq. 16 / Algorithm 2) -------------
+    def _layer_load_estimate(self, var) -> float:
+        """Modeled per-layer load cost for one streamed variant: bytes
+        per layer over the bandwidth of the tier its first layer slice
+        currently sits in (HBM-resident slices cost ~nothing), plus any
+        injected test/bench latency."""
+        tiers = self.store.tiers
+        where = tiers.where(ChunkStore._lkey(var.variant_id, 0))
+        if where in (None, "hbm"):
+            return 0.0
+        bw = CPU_TO_HBM_GBPS if where == "cpu" else SSD_GBPS
+        per_layer = var.nbytes / max(1, var.num_layers)
+        return per_layer / (bw * 1e9) + tiers.load_delay_s
+
+    def _stage_window_layers(self, stream_jobs, schedule, cache,
+                             k_np, v_np, win_layers, trace_windows):
+        """Make the window's layers resident before it computes: issue
+        the schedule's look-ahead requests (Algorithm 2 fetches up to
+        ``i + lp`` while computing layer ``i``), then await + inject
+        exactly the window's layer slices into the packed KV and the
+        cache entries the window will read. Await points are where load
+        time becomes *exposed*; everything the background worker
+        finished in time stays hidden behind earlier windows' compute."""
+        cfg = self.cfg
+        P, G = len(cfg.pattern), cfg.n_groups
+        win_layers = list(win_layers)
+        L = self.cfg.num_layers
+        # Algorithm 2's pipeline step: while layers [l0, l1) compute,
+        # layers up to l1 - 1 + lp load in the background — issue their
+        # requests (layer-major, matching the worker's FIFO service
+        # order) before blocking on this window's awaits (idempotent)
+        for l in range(min(L, win_layers[-1] + 1 + schedule.depth)):
+            for job in stream_jobs:
+                job.stream.request([l])
+        trace_windows.append((win_layers[0], win_layers[-1] + 1,
+                              time.monotonic()))
+        for job in stream_jobs:
+            s0 = job.off + job.seg.start
+            s1 = job.off + job.seg.end
+            for l in win_layers:
+                kv_l, _info = job.stream.await_layer(l)
+                if kv_l is None:
+                    raise RuntimeError(
+                        f"{job.stream.var.variant_id}: layer {l} KV "
+                        "vanished from every tier mid-stream")
+                # the SAME transform as the eager path / canonical pool
+                # runs (bit-equality contract) applied to one layer:
+                # RoPE is layer-independent, so slicing commutes
+                kc, vc = inject_chunk_kv(
+                    cfg, {"k": kv_l["k"][None], "v": kv_l["v"][None]},
+                    job.rope_pos)
+                k_np[l, s0:s1] = kc[0]
+                v_np[l, s0:s1] = vc[0]
+        # refresh the cache slices the window reads
+        for l in win_layers:
+            if l < G * P:
+                g, p = divmod(l, P)
+                cache["groups"][p]["k"] = cache["groups"][p]["k"] \
+                    .at[g].set(jnp.asarray(k_np[l])[None])
+                cache["groups"][p]["v"] = cache["groups"][p]["v"] \
+                    .at[g].set(jnp.asarray(v_np[l])[None])
+            else:
+                ti = l - G * P
+                cache["tail"][ti]["k"] = jnp.asarray(k_np[l])[None]
+                cache["tail"][ti]["v"] = jnp.asarray(v_np[l])[None]
 
     # ---- metadata + store update -------------------------------------------
     def _capture(self, plan: InferencePlan, stats, kstats, k_fin, v_fin):

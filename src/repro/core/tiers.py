@@ -5,23 +5,71 @@ On this CPU-only box the "HBM" tier is the in-process working set, the
 the SSD tier is *real files* (np.savez to disk), so SSD load costs in the
 preloading benchmark are measured, not simulated. An asynchronous
 preloader thread promotes caches toward HBM while requests wait in the
-queue (§3.5), and the layer-wise schedule (Eq. 16) consumes per-layer
-slices during execution.
+queue (§3.5), and the layer-wise schedule (Eq. 16) streams per-layer
+slices during execution (``core.preload.LayerStream``).
+
+Cache-manager architecture (eviction-policy contract)
+-----------------------------------------------------
+Victim selection is delegated to one pluggable ``EvictionPolicy``
+(``core.eviction``) shared with the chunk store's variant capping and
+the pool-run reclaim: ``_make_room`` builds a ``Candidate`` per
+unpinned resident key — ``nbytes`` from the size ledger,
+``last_access`` from the LRU clock, reuse stats from ``stats_fn`` (the
+chunk store wires its per-variant ``f_r``/token-count feed here via
+``attach_stats``) — and demotes whatever the policy scores lowest.
+The default ``LRUPolicy`` reproduces the historical recency-only
+demotion bit-for-bit; ``ReuseAwarePolicy`` keeps frequently-reused
+variants resident (fewer tier misses on skewed workloads — gated by
+``fig22_eviction_{lru,reuse}``).
+
+Pinning is group-aware: the chunk store pins a *variant id* while its
+canonical run is pool-resident, and every per-layer tier key of that
+variant (``<vid>@L<nn>``) is excluded from demotion through
+``group_fn`` (identity by default).
+
+SSD accounting and restart persistence
+--------------------------------------
+``used["ssd"]`` tracks exactly the keys with a resident ``.npz`` file
+(``ssd_keys`` ledger): rewrites are idempotent, promotion to HBM
+removes the stale SSD copy (file and count), and ``delete`` reconciles
+by ledger, not by guess. Each ``.npz`` embeds its pytree structure and
+byte size (``__struct__``/``__nbytes__`` members), so a fresh
+``TieredStore`` over an existing ``ssd_dir`` re-registers old entries
+at construction and can ``get`` them without any in-memory sidecar
+(the historical ``_structs`` dict is now just a read cache).
+
+Background worker
+-----------------
+The preload worker consumes a task queue of (key, ticket) promotions
+and arbitrary callables (``submit`` — used by ``LayerStream`` for
+layer-granular loads). Completion is tracked with
+``queue.task_done``/``unfinished_tasks``, so ``drain`` cannot return
+while the worker still holds an in-flight item (the historical
+empty-queue race); worker exceptions are counted in
+``stats["preload_errors"]`` instead of being silently swallowed.
+Prefetches carry an optional ``PrefetchTicket``; cancelling the ticket
+(request preempted/expired/plan changed) retracts every pending
+promotion it covers (``stats["prefetch_cancelled"]``).
 """
 from __future__ import annotations
 
+import json
 import os
 import queue
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import numpy as np
+
+from repro.core.eviction import Candidate, EvictionPolicy, LRUPolicy
 
 # modeled bandwidths for load-time accounting (A100-class host, paper §5.1.1)
 CPU_TO_HBM_GBPS = 64.0     # PCIe 4.0 x16
 SSD_GBPS = 16.0            # NVMe read
+
+TIER_RANK = {"hbm": 0, "cpu": 1, "ssd": 2}
 
 
 def tree_nbytes(tree) -> int:
@@ -50,12 +98,40 @@ class LoadInfo:
     nbytes: int
 
 
+def merge_load_infos(infos) -> Optional[LoadInfo]:
+    """Aggregate per-layer LoadInfos into one variant-level record:
+    deepest tier touched, seconds and bytes summed."""
+    infos = [i for i in infos if i is not None]
+    if not infos:
+        return None
+    tier = max((i.tier for i in infos), key=TIER_RANK.__getitem__)
+    return LoadInfo(tier,
+                    sum(i.seconds_measured for i in infos),
+                    sum(i.seconds_modeled for i in infos),
+                    sum(i.nbytes for i in infos))
+
+
+@dataclass
+class PrefetchTicket:
+    """Cancellation handle covering a request's pending promotions.
+
+    The worker checks ``cancelled`` right before serving each queued
+    promotion, so a cancel retracts every entry that has not started
+    loading yet (entries already served stay promoted — harmless)."""
+    cancelled: bool = False
+
+    def cancel(self):
+        self.cancelled = True
+
+
 class TieredStore:
-    """Capacity-bounded three-tier KV store with LRU demotion and an
-    asynchronous promotion (preload) worker."""
+    """Capacity-bounded three-tier KV store with policy-driven demotion
+    and an asynchronous promotion (preload) worker."""
 
     def __init__(self, hbm_bytes: int, cpu_bytes: int, ssd_dir: str,
-                 start_worker: bool = True):
+                 start_worker: bool = True,
+                 policy: Optional[EvictionPolicy] = None,
+                 workers: int = 1):
         self.caps = {"hbm": hbm_bytes, "cpu": cpu_bytes}
         self.used = {"hbm": 0, "cpu": 0, "ssd": 0}
         self.hbm: Dict[str, Any] = {}
@@ -66,22 +142,71 @@ class TieredStore:
         self.lru: Dict[str, float] = {}
         # pin counts: pool-resident chunk caches are read by every
         # hitting prefill's compute pass, so demotion skips them (one
-        # count per pool-resident run referencing the key)
+        # count per pool-resident run referencing the key). Pins are
+        # group-aware: a pin on ``group_fn(key)`` covers ``key`` (the
+        # chunk store pins a variant id, covering its layer slices).
         self.pins: Dict[str, int] = {}
+        self.policy: EvictionPolicy = policy or LRUPolicy()
+        # stats_fn(key) -> (reuse_freq, recompute_cost): the chunk
+        # store's per-variant feed for reuse-aware candidates
+        self.stats_fn: Optional[Callable[[str], tuple]] = None
+        self.group_fn: Callable[[str], str] = lambda k: k
+        # per-load artificial latency (seconds) for non-HBM tiers:
+        # bench/test hook that makes load-vs-compute overlap observable
+        # and deterministic on fast local disks
+        self.load_delay_s = 0.0
         self.lock = threading.RLock()
         self.stats = {"hits": {"hbm": 0, "cpu": 0, "ssd": 0},
-                      "demotions": 0, "promotions": 0}
-        self._q: "queue.Queue[Optional[str]]" = queue.Queue()
-        self._worker = None
+                      "demotions": 0, "promotions": 0,
+                      "preload_errors": 0, "prefetch_cancelled": 0}
+        # ssd residency ledger: key -> bytes accounted in used["ssd"]
+        self.ssd_keys: Dict[str, int] = {}
+        self._structs: Dict[str, Any] = {}
+        self._scan_ssd_dir()
+        self._q: "queue.Queue[Any]" = queue.Queue()
+        # one consumer by default; tier loads are IO/latency-bound, so
+        # a small pool (``workers > 1``) deepens streamed-load overlap
+        # under a busy main thread
+        self._pool: list = []
         if start_worker:
-            self._worker = threading.Thread(target=self._preload_loop,
-                                            daemon=True)
-            self._worker.start()
+            for _ in range(max(1, workers)):
+                t = threading.Thread(target=self._preload_loop,
+                                     daemon=True)
+                t.start()
+                self._pool.append(t)
+        self._worker = self._pool[0] if self._pool else None
+
+    def attach_stats(self, stats_fn: Callable[[str], tuple],
+                     group_fn: Optional[Callable[[str], str]] = None):
+        """Wire the chunk store's per-key reuse stats (and pin-group
+        aliasing) into candidate construction."""
+        self.stats_fn = stats_fn
+        if group_fn is not None:
+            self.group_fn = group_fn
+
+    def _unplace(self, key: str):
+        """Remove ``key``'s current residency (any tier) from the
+        accounting — the re-``put`` reconciliation that keeps
+        ``used[tier] == sum(sizes of resident keys)`` exact when a key
+        is overwritten, possibly with a different size."""
+        nb_old = self.sizes.get(key, 0)
+        if key in self.hbm:
+            self.hbm.pop(key)
+            self.used["hbm"] -= nb_old
+        if key in self.cpu:
+            self.cpu.pop(key)
+            self.used["cpu"] -= nb_old
+        if key in self.ssd_keys:
+            self.used["ssd"] -= self.ssd_keys.pop(key)
+            p = self._ssd_path(key)
+            if os.path.exists(p):
+                os.remove(p)
 
     # ---- placement -------------------------------------------------------
     def put(self, key: str, value, prefer: str = "hbm") -> str:
         nb = tree_nbytes(value)
         with self.lock:
+            self._unplace(key)
             self.sizes[key] = nb
             self.lru[key] = time.monotonic()
             if prefer == "hbm" and self._make_room("hbm", nb):
@@ -92,12 +217,13 @@ class TieredStore:
                 self.cpu[key] = value
                 self.used["cpu"] += nb
                 return "cpu"
-        self._write_ssd(key, value)
+            self._write_ssd(key, value)
         return "ssd"
 
     def pin(self, key: str):
-        """Exclude ``key`` from tier demotion (counted; one count per
-        pool-resident run referencing it)."""
+        """Exclude ``key`` (and every key whose ``group_fn`` maps to it)
+        from tier demotion (counted; one count per pool-resident run
+        referencing it)."""
         with self.lock:
             self.pins[key] = self.pins.get(key, 0) + 1
 
@@ -109,16 +235,27 @@ class TieredStore:
             else:
                 self.pins[key] = n
 
+    def _pinned(self, key: str) -> bool:
+        return key in self.pins or self.group_fn(key) in self.pins
+
+    def _candidate(self, key: str) -> Candidate:
+        freq, cost = (0.0, 1.0)
+        if self.stats_fn is not None:
+            freq, cost = self.stats_fn(key)
+        return Candidate(key=key, nbytes=self.sizes.get(key, 1),
+                         last_access=self.lru.get(key, 0.0),
+                         reuse_freq=freq, recompute_cost=cost)
+
     def _make_room(self, tier: str, nb: int) -> bool:
         if nb > self.caps[tier]:
             return False
         store = self.hbm if tier == "hbm" else self.cpu
         while self.used[tier] + nb > self.caps[tier]:
-            victims = [k for k in store if k not in self.pins]
-            if not victims:
+            victim = self.policy.select(
+                self._candidate(k) for k in store if not self._pinned(k))
+            if victim is None:
                 return False
-            victim = min(victims, key=lambda k: self.lru.get(k, 0.0))
-            self._demote(victim, tier)
+            self._demote(victim.key, tier)
         return True
 
     def _demote(self, key: str, tier: str):
@@ -137,23 +274,78 @@ class TieredStore:
             self.used["cpu"] -= nb
             self._write_ssd(key, val)
 
+    def flush(self):
+        """Demote everything demotable to SSD (bench/test helper: stage
+        a cold-start state with all unpinned entries disk-resident)."""
+        with self.lock:
+            for key in [k for k in self.hbm if not self._pinned(k)]:
+                if key in self.hbm:          # may cascade-demote earlier
+                    self._demote(key, "hbm")
+            for key in [k for k in self.cpu if not self._pinned(k)]:
+                if key in self.cpu:
+                    self._demote(key, "cpu")
+
+    # ---- SSD persistence -------------------------------------------------
     def _ssd_path(self, key: str) -> str:
         return os.path.join(self.ssd_dir, key + ".npz")
 
     def _write_ssd(self, key: str, value):
+        """Idempotent in the accounting: rewriting an existing key
+        replaces its ``used["ssd"]`` contribution instead of inflating
+        it. The pytree structure and byte size are embedded in the file
+        so a fresh store over this ``ssd_dir`` can reload the entry."""
         flat = {}
         for i, leaf in enumerate(_leaves(value)):
             flat[f"a{i}"] = np.asarray(leaf)
+        struct = _structure_of(value)
+        nb = self.sizes.get(key, tree_nbytes(value))
+        flat["__struct__"] = np.frombuffer(
+            json.dumps(struct).encode(), np.uint8)
+        flat["__nbytes__"] = np.int64(nb)
         np.savez(self._ssd_path(key), **flat)
-        self.used["ssd"] += self.sizes.get(key, tree_nbytes(value))
-        # remember the tree structure for reload
-        self._structs = getattr(self, "_structs", {})
-        self._structs[key] = _structure_of(value)
+        with self.lock:
+            self.used["ssd"] += nb - self.ssd_keys.get(key, 0)
+            self.ssd_keys[key] = nb
+            self._structs[key] = struct
 
     def _read_ssd(self, key: str):
         with np.load(self._ssd_path(key)) as z:
-            leaves = [z[f"a{i}"] for i in range(len(z.files))]
-        return _unflatten(self._structs[key], leaves)
+            struct = self._structs.get(key)
+            if struct is None:
+                if "__struct__" not in z.files:
+                    # pre-persistence file from a dead process: the
+                    # pytree structure is unrecoverable — miss, not a
+                    # KeyError crash (the scan never registers these)
+                    return None
+                struct = json.loads(bytes(z["__struct__"]).decode())
+                self._structs[key] = struct
+            leaves = [z[f"a{i}"]
+                      for i in range(sum(1 for f in z.files
+                                         if not f.startswith("__")))]
+        return _unflatten(struct, leaves)
+
+    def _scan_ssd_dir(self):
+        """Restart recovery: register every self-describing ``.npz``
+        already in ``ssd_dir`` (size from the embedded ``__nbytes__``;
+        structure loaded lazily on first read) so old entries survive a
+        process restart. Files without the embedded metadata (written
+        before persistence existed) are unreadable in a fresh process
+        and stay unregistered — a miss, not a poisoned entry."""
+        for fname in sorted(os.listdir(self.ssd_dir)):
+            if not fname.endswith(".npz"):
+                continue
+            key = fname[:-4]
+            try:
+                with np.load(os.path.join(self.ssd_dir, fname)) as z:
+                    if "__nbytes__" not in z.files:
+                        continue
+                    nb = int(z["__nbytes__"])
+            except (OSError, ValueError):
+                continue
+            self.sizes[key] = nb
+            self.ssd_keys[key] = nb
+            self.used["ssd"] += nb
+            self.lru.setdefault(key, 0.0)
 
     # ---- retrieval -------------------------------------------------------
     def where(self, key: str) -> Optional[str]:
@@ -162,8 +354,11 @@ class TieredStore:
                 return "hbm"
             if key in self.cpu:
                 return "cpu"
-        if os.path.exists(self._ssd_path(key)):
-            return "ssd"
+            if key in self.ssd_keys:
+                # the ledger is authoritative (every write registers;
+                # the restart scan registers every readable file) — a
+                # bare on-disk file without metadata is not servable
+                return "ssd"
         return None
 
     def get(self, key: str, promote: bool = True
@@ -177,6 +372,8 @@ class TieredStore:
                                                self.sizes[key])
             val = self.cpu.get(key)
         if val is not None:
+            if self.load_delay_s:
+                time.sleep(self.load_delay_s)
             nb = self.sizes[key]
             info = LoadInfo("cpu", time.perf_counter() - t0,
                             nb / (CPU_TO_HBM_GBPS * 1e9), nb)
@@ -184,8 +381,12 @@ class TieredStore:
             if promote:
                 self._promote(key, val)
             return val, info
-        if os.path.exists(self._ssd_path(key)):
+        if key in self.ssd_keys and os.path.exists(self._ssd_path(key)):
             val = self._read_ssd(key)
+            if val is None:                    # unreadable legacy file
+                return None, None
+            if self.load_delay_s:
+                time.sleep(self.load_delay_s)
             nb = self.sizes.get(key, tree_nbytes(val))
             info = LoadInfo("ssd", time.perf_counter() - t0,
                             nb / (SSD_GBPS * 1e9), nb)
@@ -202,6 +403,13 @@ class TieredStore:
                 if key in self.cpu:
                     self.cpu.pop(key)
                     self.used["cpu"] -= nb
+                if key in self.ssd_keys:
+                    # reconcile: the HBM copy supersedes the SSD one —
+                    # without this the stale file stayed counted forever
+                    self.used["ssd"] -= self.ssd_keys.pop(key)
+                    p = self._ssd_path(key)
+                    if os.path.exists(p):
+                        os.remove(p)
                 self.hbm[key] = val
                 self.used["hbm"] += nb
                 self.stats["promotions"] += 1
@@ -209,45 +417,84 @@ class TieredStore:
 
     def delete(self, key: str):
         with self.lock:
-            nb = self.sizes.pop(key, 0)
-            if key in self.hbm:
-                self.hbm.pop(key)
-                self.used["hbm"] -= nb
-            if key in self.cpu:
-                self.cpu.pop(key)
-                self.used["cpu"] -= nb
-        p = self._ssd_path(key)
-        if os.path.exists(p):
-            os.remove(p)
-            self.used["ssd"] = max(0, self.used["ssd"] - nb)
-        self.lru.pop(key, None)
-        self.pins.pop(key, None)
+            self._unplace(key)
+            self.sizes.pop(key, None)
+            self.lru.pop(key, None)
+            self.pins.pop(key, None)
+            self._structs.pop(key, None)
+            p = self._ssd_path(key)        # unregistered legacy file
+            if os.path.exists(p):
+                os.remove(p)
 
     # ---- async preloading (§3.5) ------------------------------------------
-    def prefetch(self, key: str):
-        """Schedule promotion toward HBM while the request queues."""
-        self._q.put(key)
+    def prefetch(self, key: str, ticket: Optional[PrefetchTicket] = None):
+        """Schedule promotion toward HBM while the request queues.
+        ``ticket`` lets the caller retract the promotion later
+        (request preempted/expired before serving)."""
+        self._q.put((key, ticket))
+
+    def submit(self, job: Callable[[], Any]):
+        """Run an arbitrary job on the preload worker (layer-granular
+        stream loads share the worker with queue-time promotions)."""
+        self._q.put(job)
+
+    def _serve(self, item):
+        if callable(item):
+            item()
+            return
+        key, ticket = item
+        if ticket is not None and ticket.cancelled:
+            self.stats["prefetch_cancelled"] += 1
+            return
+        self.get(key, promote=True)
 
     def _preload_loop(self):
         while True:
-            key = self._q.get()
-            if key is None:
-                return
+            item = self._q.get()
             try:
-                val, _ = self.get(key, promote=True)
+                if item is None:
+                    return
+                self._serve(item)
             except Exception:
-                pass
+                self.stats["preload_errors"] += 1
+            finally:
+                self._q.task_done()
 
     def drain(self, timeout: float = 5.0):
-        """Wait for outstanding prefetches (test/bench hook)."""
+        """Wait for outstanding prefetches (test/bench hook).
+
+        Uses ``unfinished_tasks`` (not queue emptiness), so an item the
+        worker already popped but is still serving keeps ``drain``
+        blocked until its ``task_done``. Without a worker thread the
+        queue is served inline — deterministic for property tests."""
+        if self._worker is None:
+            while True:
+                try:
+                    item = self._q.get_nowait()
+                except queue.Empty:
+                    return
+                try:
+                    if item is not None:
+                        self._serve(item)
+                except Exception:
+                    self.stats["preload_errors"] += 1
+                finally:
+                    self._q.task_done()
         deadline = time.monotonic() + timeout
-        while not self._q.empty() and time.monotonic() < deadline:
-            time.sleep(0.001)
+        with self._q.all_tasks_done:
+            while self._q.unfinished_tasks:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return
+                self._q.all_tasks_done.wait(remaining)
 
     def close(self):
-        if self._worker is not None:
-            self._q.put(None)
-            self._worker.join(timeout=2.0)
+        for _ in self._pool:
+            self._q.put(None)           # one sentinel per worker
+        for t in self._pool:
+            t.join(timeout=2.0)
+        self._pool = []
+        self._worker = None
 
 
 def _structure_of(tree):

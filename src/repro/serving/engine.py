@@ -61,6 +61,20 @@ per-request victimhood for liveness. The same teardown
 (``_teardown``) also serves the straggler guard: queued requests whose
 wait exceeds ``SchedulerConfig.deadline_s`` FAIL at the top of
 ``step`` instead of deadlocking the queue.
+
+Cache-manager integration (§3.5 tentpole): tier prefetch is
+queue-driven — every iteration, ``_prefetch_lookahead`` issues
+promotions for the first ``SchedulerConfig.prefetch_lookahead`` queued
+requests under a cancellable ``PrefetchTicket`` (teardown retracts
+pending promotions; counters ``prefetch_issued``/``prefetch_cancels``).
+With ``executor_kwargs=dict(layerwise_load=True)`` the prefill
+executor streams hit-chunk KV layer by layer (Eq. 16 /
+``core.preload.LayerStream``): the pass starts once the first
+``preload_depth`` layers are resident and the engine's
+``load_exposed_s``/``load_hidden_s`` become *measured* await-point
+overlap instead of the modeled formula (the eager path keeps the
+formula). Victim selection everywhere (tier demotion, variant capping,
+pool-run reclaim) goes through one ``core.eviction.EvictionPolicy``.
 """
 from __future__ import annotations
 
@@ -77,6 +91,7 @@ from repro.core.chunkstore import ChunkStore, prompt_hashes
 from repro.core.prefill import CacheCraftExecutor, inject_chunk_kv, \
     pack_cache
 from repro.core.preload import preload_depth
+from repro.core.tiers import PrefetchTicket
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.serving.kvpool import KVPool
@@ -218,20 +233,34 @@ class Engine:
     def submit(self, req: Request):
         self.clock = max(self.clock, req.arrival_time)
         self.scheduler.enqueue(req, self.clock)
-        # async preload (§3.5): schedule tier promotion while queued.
-        # Storeless engines never consult prompt hashes — skip the SHA
-        # work entirely (the delta estimator computes lazily if needed).
-        if self.store is not None:
+        # async preload (§3.5) is queue-driven now: ``step`` issues tier
+        # promotions for the scheduler's look-ahead window each
+        # iteration (``_prefetch_lookahead``) instead of for every
+        # request at enqueue time — deep-queue requests no longer flush
+        # the HBM tier hours before they could possibly run.
+
+    def _prefetch_lookahead(self):
+        """Issue tier promotions for queued requests entering the
+        scheduler's look-ahead window, each under a cancellable ticket
+        so teardown (expiry/preemption/requeue) can retract promotions
+        that have not been served yet."""
+        if self.store is None:
+            return
+        for req in self.scheduler.prefetch_targets():
             if req.prompt_hashes is None:
                 req.prompt_hashes = prompt_hashes(req.system_tokens,
                                                   req.chunk_tokens)
+            req.prefetch_ticket = PrefetchTicket()
             for i, h in enumerate(req.prompt_hashes):
-                self.store.prefetch(h, req.prompt_hashes[:i])
+                self.store.prefetch(h, req.prompt_hashes[:i],
+                                    ticket=req.prefetch_ticket)
+            self.counters.prefetch_issued += 1
 
     # ---- one ORCA iteration -------------------------------------------------
     def step(self) -> bool:
         """Returns True if any work was done."""
         worked = self._expire_queued()
+        self._prefetch_lookahead()
         fails_before = self.counters.reserve_failures
         reqs = self._admit()
         if not reqs and self.scheduler.queue \
@@ -357,13 +386,36 @@ class Engine:
             [(r.system_tokens, r.chunk_tokens, r.question_tokens)
              for r in reqs])
         compute_s = (time.perf_counter() - t0) * self.time_scale
-        # tier loads: queue wait hides loading (async preload), layer-wise
-        # preload (Eq. 16) hides the remainder behind layer compute.
-        # Requests packed into one pass load their tiers concurrently, so
-        # the pass is delayed by the worst per-request exposure, not the
-        # sum; hidden/exposed totals still account every request.
+        # tier loads. Streamed passes (layerwise_load executors) measure
+        # the overlap for real: the pass's wall time already contains
+        # exactly the *exposed* load seconds (per-layer await points
+        # that actually blocked), while hidden layers loaded on the
+        # background worker under earlier windows' compute — so the
+        # clock advances by compute_s alone and the hidden/exposed
+        # split is the executor's measurement, not a formula. Eager
+        # passes keep the modeled account: queue wait hides loading
+        # (async preload), layer-wise preload (Eq. 16) hides the
+        # remainder behind layer compute. Requests packed into one pass
+        # load their tiers concurrently, so the pass is delayed by the
+        # worst per-request exposure, not the sum; hidden/exposed
+        # totals still account every request.
         exposed_max = 0.0
         for req, res in zip(reqs, results):
+            if res.streamed:
+                exposed = res.load_exposed_measured * self.time_scale
+                self.stats.load_exposed_s += exposed
+                # hidden time is bounded by the loads' wall-clock span:
+                # with parallel tier workers the per-load sum
+                # (load_seconds_measured) overstates elapsed time
+                self.stats.load_hidden_s += max(
+                    0.0, min(res.load_seconds_measured,
+                             res.load_span_measured) * self.time_scale
+                    - exposed)
+                self.counters.preload_layers_blocked += \
+                    res.load_blocked_layers
+                self.counters.preload_layers_hidden += \
+                    res.load_hidden_layers
+                continue
             t_enq = req.t_enqueued if req.t_enqueued is not None \
                 else self.clock
             queue_wait = self.clock - t_enq
@@ -551,6 +603,12 @@ class Engine:
         last reader's release triggered included, which is why the
         count is measured around the whole teardown rather than taken
         from ``reclaim_request`` alone."""
+        if req.prefetch_ticket is not None:
+            # retract tier promotions still queued for this request —
+            # a torn-down attempt must not keep flushing the HBM tier
+            req.prefetch_ticket.cancel()
+            req.prefetch_ticket = None
+            self.counters.prefetch_cancels += 1
         before = self.pool.free_blocks
         self._release_runs(req)
         self.pool.reclaim_request(req.table, req.reservation)

@@ -134,6 +134,14 @@ class KVPool:
         return len(self.free)
 
     @property
+    def block_nbytes(self) -> int:
+        """KV bytes held by one block (k + v arenas) — the size feed
+        for eviction-policy candidates over pool-resident runs (the
+        shared ``core.eviction`` contract: score = reuse x cost /
+        size)."""
+        return int(self.k[:, 0].nbytes + self.v[:, 0].nbytes)
+
+    @property
     def free_tokens(self) -> int:
         """Token capacity of the free list (admission-control headroom:
         tokens, not blocks, is the scheduler's currency). Reserved

@@ -57,6 +57,14 @@ class ServingCounters:
     #     near preempt_after_iters, deferral lets it run to decode drain)
     deadline_expired: int = 0            # queued requests FAILed by the
     #     straggler guard (SchedulerConfig.deadline_s)
+    # --- queue-driven look-ahead prefetch + layer-granular streaming ---
+    prefetch_issued: int = 0             # requests whose tier promotions
+    #     were issued by the scheduler's look-ahead window
+    prefetch_cancels: int = 0            # tickets retracted at teardown
+    #     (expiry/preemption/requeue before the promotions were served)
+    preload_layers_blocked: int = 0      # per-layer awaits that waited
+    preload_layers_hidden: int = 0       # per-layer loads fully hidden
+    #     behind earlier windows' compute (streamed prefill)
     # --- incremental decode batch ---
     decode_rebuilds: int = 0             # full (B, S) gather rebuilds
     decode_joins: int = 0                # requests written into a free row

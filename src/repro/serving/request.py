@@ -44,6 +44,12 @@ class Request:
     # delta estimate that under-budgeted CoW clones cannot FAIL a
     # request the copy path would serve
     reserve_full: bool = False
+    # queue-driven look-ahead prefetch: set when the scheduler window
+    # reached this request and the engine issued its tier promotions;
+    # the ticket retracts promotions still pending when the request is
+    # torn down (expiry/preemption/requeue) before they were served
+    prefetch_issued: bool = False
+    prefetch_ticket: Optional[object] = None
     output_tokens: List[int] = field(default_factory=list)
     total_len: int = 0
     # --- timings ---
@@ -83,6 +89,8 @@ class Request:
         resets it on preemption, sets it on write-back burns)."""
         self.output_tokens = []
         self.total_len = 0
+        self.prefetch_issued = False     # a fresh attempt re-prefetches
+        self.prefetch_ticket = None
         self.t_prefill_start = None
         self.t_first_token = None
         self.prefill_tokens_computed = 0

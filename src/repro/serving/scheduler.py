@@ -36,6 +36,7 @@ one-request pool must eventually fall back to plain FIFO).
 """
 from __future__ import annotations
 
+import itertools
 from collections import deque
 from dataclasses import dataclass
 from typing import Deque, List, Optional
@@ -58,6 +59,13 @@ class SchedulerConfig:
     # caps how often one request may be chosen as victim (liveness).
     preempt_after_iters: int = 0
     preempt_limit: int = 2
+    # queue-driven look-ahead prefetch: each engine iteration, tier
+    # promotions are (re)issued for the first N queued requests —
+    # requests deep in the queue do not pollute the HBM tier, and a
+    # request that advances toward the head gets its chunk caches
+    # promoted while it still has queue wait left to hide the load
+    # (§3.5; replaces the old enqueue-time-only prefetch)
+    prefetch_lookahead: int = 4
 
 
 class Scheduler:
@@ -98,6 +106,12 @@ class Scheduler:
         that was ever requeued."""
         self.retries.pop(req.rid, None)
         self.preemptions.pop(req.rid, None)
+        if req.prefetch_ticket is not None:
+            # a terminal request's pending tier promotions are garbage:
+            # retract them (the fail-fast admission paths end here
+            # without passing through the engine's teardown)
+            req.prefetch_ticket.cancel()
+            req.prefetch_ticket = None
         if self._stall_rid == req.rid:
             self.note_head_progress()
 
@@ -159,6 +173,21 @@ class Scheduler:
         req.state = State.QUEUED
         self.queue.appendleft(req)
         self.note_head_progress()
+
+    # ---- queue-driven look-ahead prefetch -----------------------------------
+    def prefetch_targets(self) -> List[Request]:
+        """Queued requests within the look-ahead window whose tier
+        prefetches have not been issued yet (each is marked issued so
+        one request prefetches once per attempt; ``reset_attempt``
+        re-arms). The engine issues the actual store prefetches —
+        scheduling stays storage-agnostic."""
+        out: List[Request] = []
+        for req in itertools.islice(self.queue,
+                                    self.cfg.prefetch_lookahead):
+            if not req.prefetch_issued:
+                req.prefetch_issued = True
+                out.append(req)
+        return out
 
     @staticmethod
     def _need(req: Request) -> int:

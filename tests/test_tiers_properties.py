@@ -1,0 +1,134 @@
+"""Property-based TieredStore invariants (cache-manager tentpole).
+
+Random interleavings of ``put``/``get``/``pin``/``unpin``/``delete``/
+``prefetch`` (with and without tickets, including cancellations) and
+``drain``/``flush`` must preserve:
+
+* conservation per tier: ``used[tier]`` equals the summed sizes of the
+  keys resident in that tier (SSD by the ``ssd_keys`` ledger, which
+  must match the files on disk);
+* exclusive residency: a key lives in at most one tier at a time;
+* pinned keys are never demoted (their tier rank can only improve
+  while the pin is held);
+* prefetch is a no-op for deleted keys (no resurrection, no stats
+  corruption);
+* cancelled tickets retract their pending promotions.
+
+Runs the store workerless: ``drain`` serves the preload queue inline,
+so every interleaving is fully deterministic. Uses the compat
+``hypothesis`` shim (skips cleanly when the dev-dep is absent)."""
+import os
+import tempfile
+
+import numpy as np
+
+from repro.compat import given, st
+
+from repro.core.tiers import PrefetchTicket, TieredStore, tree_nbytes
+
+KEYS = [f"k{i}" for i in range(6)]
+TIER_RANK = {"hbm": 0, "cpu": 1, "ssd": 2, None: 3}
+
+OPS = ["put", "get", "get_nopromote", "pin", "unpin", "delete",
+       "prefetch", "prefetch_ticket", "cancel", "drain", "flush"]
+
+
+def _val(i, units):
+    return {"k": np.full((units, 4), float(i), np.float32)}   # 16 B/unit
+
+
+def _check_invariants(ts, alive):
+    # exclusive residency
+    hbm, cpu, ssd = set(ts.hbm), set(ts.cpu), set(ts.ssd_keys)
+    assert not (hbm & cpu) and not (hbm & ssd) and not (cpu & ssd)
+    # conservation per tier
+    assert ts.used["hbm"] == sum(ts.sizes[k] for k in hbm)
+    assert ts.used["cpu"] == sum(ts.sizes[k] for k in cpu)
+    assert ts.used["ssd"] == sum(ts.ssd_keys.values())
+    # the SSD ledger matches the files on disk
+    on_disk = {f[:-4] for f in os.listdir(ts.ssd_dir)
+               if f.endswith(".npz")}
+    assert ssd == on_disk
+    # no dead key occupies a tier
+    for k in hbm | cpu | ssd:
+        assert k in alive
+    # a deleted key is gone from everywhere
+    for k in set(KEYS) - set(alive):
+        assert ts.where(k) is None
+
+
+@given(st.lists(st.tuples(st.sampled_from(OPS), st.integers(0, 5),
+                          st.integers(1, 6)),
+                max_size=50))
+def test_random_interleavings_preserve_tier_invariants(ops):
+    ts = TieredStore(8 * 16, 8 * 16, tempfile.mkdtemp(prefix="cc-prop-"),
+                     start_worker=False)
+    alive = {}                 # key -> value (the expected bytes)
+    pinned_rank = {}           # key -> best (lowest) rank since pin
+    tickets = []
+    for op, a, units in ops:
+        key = KEYS[a % len(KEYS)]
+        if op == "put":
+            val = _val(a, units)
+            alive[key] = val
+            ts.put(key, val)
+        elif op in ("get", "get_nopromote"):
+            val, info = ts.get(key, promote=op == "get")
+            if key in alive:
+                np.testing.assert_array_equal(val["k"], alive[key]["k"])
+            else:
+                assert val is None and info is None
+        elif op == "pin":
+            ts.pin(key)
+            pinned_rank.setdefault(key, TIER_RANK[ts.where(key)])
+        elif op == "unpin":
+            ts.unpin(key)
+            if key not in ts.pins:
+                pinned_rank.pop(key, None)
+        elif op == "delete":
+            ts.delete(key)
+            alive.pop(key, None)
+            pinned_rank.pop(key, None)
+        elif op == "prefetch":
+            ts.prefetch(key)
+        elif op == "prefetch_ticket":
+            t = PrefetchTicket()
+            tickets.append(t)
+            ts.prefetch(key, ticket=t)
+        elif op == "cancel" and tickets:
+            tickets[a % len(tickets)].cancel()
+        elif op == "drain":
+            ts.drain()
+        elif op == "flush":
+            ts.flush()
+        # pinned keys never demoted: rank can only improve (promotion)
+        for k, best in list(pinned_rank.items()):
+            now = TIER_RANK[ts.where(k)]
+            if k in alive:
+                assert now <= best, f"pinned {k} demoted {best}->{now}"
+                pinned_rank[k] = min(best, now)
+        _check_invariants(ts, alive)
+
+    # settle everything and re-check; deleted keys must stay gone even
+    # if promotions for them are still queued (prefetch no-op)
+    ts.drain()
+    _check_invariants(ts, alive)
+    for t in tickets:
+        t.cancel()
+    ts.drain()
+    _check_invariants(ts, alive)
+
+
+@given(st.lists(st.integers(0, 5), min_size=1, max_size=12))
+def test_prefetch_never_resurrects_deleted_keys(ids):
+    ts = TieredStore(4 * 16, 4 * 16, tempfile.mkdtemp(prefix="cc-res-"),
+                     start_worker=False)
+    for i in ids:
+        key = KEYS[i % len(KEYS)]
+        ts.put(key, _val(i, 2))
+        ts.prefetch(key)
+        ts.delete(key)
+    ts.drain()
+    for key in KEYS:
+        assert ts.where(key) is None
+    assert ts.used == {"hbm": 0, "cpu": 0, "ssd": 0}
