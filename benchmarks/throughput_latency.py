@@ -26,15 +26,23 @@ Also emitted:
   runners. Each run appends its numbers to
   ``results/BENCH_preemption.json`` so the bench trajectory records
   across sessions.
+* ``fig22_sharded_{1dev,4dev}`` — the same workload served unsharded
+  and head-sharded over 4 forced host devices (subprocess; the sharded
+  attention-backend tentpole): per-device KV bytes and analytic
+  attention FLOPs, with output tokens identical and traced decode
+  logits bit-identical across the two runs. Trajectory appends to
+  ``results/BENCH_sharded.json``.
 
 ``--ci-smoke`` runs the perf gates (admission throughput, decode-churn
 rebuild *counts*, copy-vs-zerocopy reserved *blocks*, preemption
 *counts* + logits bit-equality, eviction tier-miss *counts* (LRU vs
-reuse-aware, from ``benchmarks.preloading.eviction_compare``), and the
+reuse-aware, from ``benchmarks.preloading.eviction_compare``), the
 eager-vs-layerwise preload comparison (hidden/blocked layer counts +
-measured exposed load) — all but the first count-based, immune to
-shared-runner timing noise) and writes the gate numbers to
-``results/fig22_ci_smoke.json`` for the CI artifact upload.
+measured exposed load), and the sharded lane (bit-equality + strictly
+fewer per-device KV bytes/attention FLOPs) — all but the first
+count-based, immune to shared-runner timing noise) and writes the gate
+numbers to ``results/fig22_ci_smoke.json`` for the CI artifact
+upload.
 """
 from __future__ import annotations
 
@@ -241,12 +249,12 @@ def _run_preemption_engine(cfg, params, kb, n_req, pool_blocks,
     return eng, stats, reqs, last
 
 
-def _record_preemption_trajectory(entry):
-    """Append one run's numbers to results/BENCH_preemption.json (the
-    preemption bench trajectory: one JSON list entry per invocation,
-    so regressions show as a trend, not just a point)."""
+def _record_trajectory(fname, entry):
+    """Append one run's numbers to ``results/<fname>`` (a bench
+    trajectory: one JSON list entry per invocation, so regressions show
+    as a trend, not just a point)."""
     path = os.path.join(os.path.dirname(__file__), "..", "results",
-                        "BENCH_preemption.json")
+                        fname)
     history = []
     if os.path.exists(path):
         try:
@@ -301,11 +309,104 @@ def _preemption_compare(cfg, params, kb, n_req, starved_blocks=20):
             completed=stats.completed, failed=stats.failed,
             logits_match_unpressured=bool(logits_ok),
             outputs_match_unpressured=bool(outputs_ok))
-    _record_preemption_trajectory(
+    _record_trajectory(
+        "BENCH_preemption.json",
         dict(n_req=n_req, pool_blocks=starved_blocks, **{
             f"{k}_{label}": v for label, d in out.items()
             for k, v in d.items()}))
     return out
+
+
+# ---- tensor-parallel sharded serving (PR 6 tentpole) ------------------------
+# The parent process has already initialized jax on one device, so the
+# 4-device comparison runs in a child with XLA_FLAGS set before the
+# first jax import. The child runs the SAME workload unsharded and
+# head-sharded and reports the gate numbers as one JSON line.
+_SHARDED_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import sys; sys.path.insert(0, "src")
+import json
+import jax, numpy as np
+from repro.configs import get_tiny
+from repro.models import model as M
+from repro.models import backend as AB
+from repro.launch.mesh import make_serving_mesh
+from repro.serving.engine import Engine
+from repro.serving.rag import KnowledgeBase
+from repro.serving.scheduler import SchedulerConfig
+from repro.serving.workload import WorkloadConfig, generate
+
+cfg = get_tiny("llama3-8b").replace(num_heads=4, num_kv_heads=4)
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+kb = KnowledgeBase(num_chunks=8, vocab_size=cfg.vocab_size, seed=0)
+wl = WorkloadConfig(num_requests=4, qpm=1e9, seed=3, max_new_tokens=4)
+
+def run(mesh):
+    AB.set_serving_mesh(None)
+    eng = Engine(cfg, params, None,
+                 sched=SchedulerConfig(max_batch_tokens=100_000,
+                                       max_decode_batch=8,
+                                       max_prefill_batch=4),
+                 pool_blocks=1024,
+                 executor_kwargs=dict(strategy="all", use_focus=False),
+                 trace_decode=True, mesh=mesh)
+    reqs = generate(kb, wl)
+    stats = eng.run(reqs)
+    return eng, reqs, stats
+
+e1, r1, s1 = run(None)
+e2, r2, s2 = run(make_serving_mesh(4))
+tokens_equal = all(a.output_tokens == b.output_tokens
+                   for a, b in zip(r1, r2))
+logits_equal = len(e1.decode_trace) == len(e2.decode_trace) > 0 and all(
+    set(da) == set(db) and all(np.array_equal(da[k], db[k]) for k in da)
+    for da, db in zip(e1.decode_trace, e2.decode_trace))
+
+def side(eng, stats):
+    return dict(kv_shards=eng.kv_shards,
+                completed=stats.completed, failed=stats.failed,
+                kv_bytes_device=int(eng.pool.peak_kv_bytes_per_device()),
+                attn_flops_device=int(eng.counters.attn_flops_device),
+                attn_flops_total=int(eng.counters.attn_flops_total))
+
+print(json.dumps(dict(tokens_equal=bool(tokens_equal),
+                      logits_equal=bool(logits_equal),
+                      onedev=side(e1, s1), fourdev=side(e2, s2))))
+"""
+
+
+def _sharded_compare():
+    """Unsharded vs head-sharded serving on a forced 4-device host mesh
+    (subprocess, see ``_SHARDED_CHILD``). Emits
+    ``fig22_sharded_{1dev,4dev}`` (per-device KV bytes + attention
+    FLOPs), appends the trajectory to ``results/BENCH_sharded.json``,
+    and returns the child's gate numbers."""
+    import subprocess
+    r = subprocess.run(
+        [sys.executable, "-c", _SHARDED_CHILD],
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        capture_output=True, text=True, timeout=900)
+    if r.returncode != 0:
+        print(r.stderr[-3000:], file=sys.stderr)
+        raise RuntimeError("sharded bench subprocess failed")
+    res = json.loads(r.stdout.strip().splitlines()[-1])
+    for label, s in (("1dev", res["onedev"]), ("4dev", res["fourdev"])):
+        emit(f"fig22_sharded_{label}", float(s["attn_flops_device"]),
+             f"kv_shards={s['kv_shards']};"
+             f"kv_bytes_device={s['kv_bytes_device']};"
+             f"attn_flops_device={s['attn_flops_device']};"
+             f"attn_flops_total={s['attn_flops_total']};"
+             f"completed={s['completed']};failed={s['failed']};"
+             f"logits_equal={res['logits_equal']}")
+    _record_trajectory(
+        "BENCH_sharded.json",
+        dict(tokens_equal=res["tokens_equal"],
+             logits_equal=res["logits_equal"],
+             **{f"{k}_1dev": v for k, v in res["onedev"].items()},
+             **{f"{k}_4dev": v for k, v in res["fourdev"].items()}))
+    return res
 
 
 def run(quick: bool = False):
@@ -331,12 +432,13 @@ def run(quick: bool = False):
     _churn_compare(cfg, params, kb, n_req)
     _shared_blocks_compare(cfg, params, kb, n_req)
     _preemption_compare(cfg, params, kb, n_req=6 if quick else 10)
+    _sharded_compare()
 
 
 def ci_smoke() -> int:
     """CI perf gate matrix (ROADMAP). Returns a process exit code.
 
-    Three gates:
+    The gates:
 
     * admission — packed admission throughput must not fall below
       ``CI_SMOKE_TOLERANCE * serial`` (wall-clock-derived, so shared CI
@@ -356,6 +458,11 @@ def ci_smoke() -> int:
       lower max consecutive head-stall iteration count than
       preemption-off — the count-based stand-in for the p99 wait,
       which is emitted but not gated because it is wall-clock-derived).
+    * sharded — the head-sharded engine on a forced 4-device host mesh
+      must produce identical output tokens and bit-identical traced
+      decode logits vs the single-device run, with strictly fewer
+      per-device KV bytes and attention FLOPs and an unchanged total
+      FLOP count (pure repartitioning; all count-based).
 
     Gate numbers land in ``results/fig22_ci_smoke.json`` so CI can
     upload them as a workflow artifact."""
@@ -410,6 +517,19 @@ def ci_smoke() -> int:
         and pl["layerwise"]["load_exposed_s"]
         < pl["eager"]["load_exposed_s"])
 
+    sh = _sharded_compare()
+    # bit-equality + strictly-fewer-per-device-work, all count-based:
+    # the sharded engine must be a pure repartitioning of the same math
+    ok_sharded = (
+        sh["tokens_equal"] and sh["logits_equal"]
+        and sh["onedev"]["failed"] == 0 and sh["fourdev"]["failed"] == 0
+        and sh["fourdev"]["kv_bytes_device"]
+        < sh["onedev"]["kv_bytes_device"]
+        and sh["fourdev"]["attn_flops_device"]
+        < sh["onedev"]["attn_flops_device"]
+        and sh["fourdev"]["attn_flops_total"]
+        == sh["onedev"]["attn_flops_total"])
+
     gates = {
         "admission": dict(ok=ok_adm, tolerance=tol, **{
             f"throughput_rps_{k}": v for k, v in thr.items()}),
@@ -422,6 +542,9 @@ def ci_smoke() -> int:
         "eviction": dict(ok=ok_evict, lru=ev["lru"], reuse=ev["reuse"]),
         "preload": dict(ok=ok_preload, eager=pl["eager"],
                         layerwise=pl["layerwise"]),
+        "sharded": dict(ok=ok_sharded, tokens_equal=sh["tokens_equal"],
+                        logits_equal=sh["logits_equal"],
+                        onedev=sh["onedev"], fourdev=sh["fourdev"]),
     }
     out_dir = os.path.join(os.path.dirname(__file__), "..", "results")
     os.makedirs(out_dir, exist_ok=True)
@@ -443,7 +566,9 @@ if __name__ == "__main__":
                     help="run the CI perf gates (admission throughput, "
                          "decode-churn rebuild counts, copy-vs-zerocopy "
                          "reserved blocks, preemption counts + logits "
-                         "bit-equality); writes "
+                         "bit-equality, eviction tier misses, preload "
+                         "overlap, sharded bit-equality + per-device "
+                         "FLOPs/bytes); writes "
                          "results/fig22_ci_smoke.json; exit 1 on any "
                          "gate failure")
     args = ap.parse_args()

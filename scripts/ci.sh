@@ -32,8 +32,14 @@
 #     nonzero number of layer loads behind window compute, blocks on
 #     strictly fewer layer awaits than eager whole-variant loading, and
 #     measures strictly less exposed load time at real await points,
+#   * tensor-parallel sharded serving: a subprocess with 4 forced host
+#     devices runs the same workload unsharded and head-sharded —
+#     output tokens identical, traced decode logits bit-identical, and
+#     per-device KV bytes + attention FLOPs strictly lower (count-based,
+#     immune to runner timing noise),
 # and writes results/fig22_ci_smoke.json for the CI artifact upload
-# (plus the preemption trajectory in results/BENCH_preemption.json).
+# (plus the preemption trajectory in results/BENCH_preemption.json and
+# the sharded trajectory in results/BENCH_sharded.json).
 # --smoke-only skips the pytest suite for fast local iteration on the
 # perf gates.
 set -euo pipefail
@@ -83,7 +89,8 @@ fi
 if [[ "$status" == "0" && "$perf_smoke" == "1" ]]; then
     echo "CI: perf smoke (admission throughput + decode-churn counts" \
          "+ copy-vs-zerocopy shared-block gate + preemption gate" \
-         "+ eviction tier-miss gate + layerwise-preload gate)"
+         "+ eviction tier-miss gate + layerwise-preload gate" \
+         "+ sharded bit-equality/FLOPs gate)"
     python -m benchmarks.throughput_latency --ci-smoke || status=$?
     echo "CI perf smoke exit status: $status"
 fi

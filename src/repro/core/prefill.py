@@ -78,7 +78,7 @@ def _window_fn(cfg):
 
 
 @functools.lru_cache(maxsize=None)
-def decode_fn(cfg):
+def decode_fn(cfg, attn_impl="auto"):
     """Shared jitted one-token decode (engine + benches). ``slots`` (the
     cache write index) is separate from ``positions`` (the RoPE/causality
     position): paged storage appends at the next free slot while the
@@ -93,7 +93,7 @@ def decode_fn(cfg):
     @jax.jit
     def fn(params, tokens, positions, cache, slots=None):
         out = M.decode_step(cfg, params, tokens, positions, cache,
-                            decode_slot=slots)
+                            decode_slot=slots, attn_impl=attn_impl)
         return out.logits, out.cache
     return fn
 
@@ -207,6 +207,7 @@ class CacheCraftExecutor:
                  store_new_chunks: bool = True,
                  force_recompute_fraction: Optional[float] = None,
                  layerwise_load: bool = False,
+                 attn_impl: str = "dense",
                  rng: Optional[np.random.Generator] = None):
         if not cfg.supports_chunk_cache and store is not None:
             raise ValueError(
@@ -228,6 +229,9 @@ class CacheCraftExecutor:
         # that computes it, with the remainder loading in the
         # background. Needs a store with layer-sliced variants.
         self.layerwise_load = layerwise_load and store is not None
+        # which attention backend the windowed partial prefill runs on
+        # (a name in models.backend.BACKENDS; "dense" is the oracle)
+        self.attn_impl = attn_impl
         # EMA of measured per-layer window compute (feeds Eq. 16)
         self._t_layer_s = 0.0
         self.rng = rng or np.random.default_rng(0)
@@ -443,7 +447,7 @@ class CacheCraftExecutor:
                 self.params, h, positions, layout_sid_j, cache,
                 slots, seg_ids, kv_seg_j, pack_qidx, pack_kidx,
                 g0=g0, g1=g1, tail=is_last and cfg.n_tail > 0,
-                collect=collect_stats)
+                collect=collect_stats, attn_impl=self.attn_impl)
             t_compute += time.perf_counter() - t_w0
             live_pos = np.asarray(positions[0]) >= 0
             for r in range(R):

@@ -38,13 +38,17 @@ byte size (``__struct__``/``__nbytes__`` members), so a fresh
 at construction and can ``get`` them without any in-memory sidecar
 (the historical ``_structs`` dict is now just a read cache).
 
-Background worker
------------------
-The preload worker consumes a task queue of (key, ticket) promotions
-and arbitrary callables (``submit`` — used by ``LayerStream`` for
-layer-granular loads). Completion is tracked with
+Background workers (per-tier lanes)
+-----------------------------------
+Preload work runs on a small per-tier thread pool: one task queue per
+lane ("cpu", "ssd", "misc"), each with ``workers`` consumer threads,
+so a slow SSD read never serializes CPU->HBM promotions queued behind
+it. ``prefetch`` routes (key, ticket) promotions by the key's current
+tier at enqueue time; arbitrary callables (``submit`` — used by
+``LayerStream`` for layer-granular loads) land on the "misc" lane
+unless a tier hint is given. Completion is tracked per lane with
 ``queue.task_done``/``unfinished_tasks``, so ``drain`` cannot return
-while the worker still holds an in-flight item (the historical
+while any worker still holds an in-flight item (the historical
 empty-queue race); worker exceptions are counted in
 ``stats["preload_errors"]`` instead of being silently swallowed.
 Prefetches carry an optional ``PrefetchTicket``; cancelling the ticket
@@ -163,17 +167,23 @@ class TieredStore:
         self.ssd_keys: Dict[str, int] = {}
         self._structs: Dict[str, Any] = {}
         self._scan_ssd_dir()
-        self._q: "queue.Queue[Any]" = queue.Queue()
-        # one consumer by default; tier loads are IO/latency-bound, so
-        # a small pool (``workers > 1``) deepens streamed-load overlap
-        # under a busy main thread
+        # Per-tier task queues: a slow SSD read no longer serializes
+        # behind-it CPU->HBM promotions (and vice versa). ``prefetch``
+        # routes by the key's current tier at enqueue time; ``submit``
+        # jobs land on the "misc" lane unless the caller hints a tier.
+        # ``workers`` is the pool size PER TIER — tier loads are
+        # IO/latency-bound, so even 1 thread per lane deepens
+        # streamed-load overlap under a busy main thread.
+        self._qs: Dict[str, "queue.Queue[Any]"] = {
+            lane: queue.Queue() for lane in ("cpu", "ssd", "misc")}
         self._pool: list = []
         if start_worker:
-            for _ in range(max(1, workers)):
-                t = threading.Thread(target=self._preload_loop,
-                                     daemon=True)
-                t.start()
-                self._pool.append(t)
+            for lane_q in self._qs.values():
+                for _ in range(max(1, workers)):
+                    t = threading.Thread(target=self._preload_loop,
+                                         args=(lane_q,), daemon=True)
+                    t.start()
+                    self._pool.append(t)
         self._worker = self._pool[0] if self._pool else None
 
     def attach_stats(self, stats_fn: Callable[[str], tuple],
@@ -427,16 +437,23 @@ class TieredStore:
                 os.remove(p)
 
     # ---- async preloading (§3.5) ------------------------------------------
+    def _lane(self, tier: Optional[str]) -> "queue.Queue[Any]":
+        return self._qs.get(tier, self._qs["misc"])
+
     def prefetch(self, key: str, ticket: Optional[PrefetchTicket] = None):
         """Schedule promotion toward HBM while the request queues.
         ``ticket`` lets the caller retract the promotion later
-        (request preempted/expired before serving)."""
-        self._q.put((key, ticket))
+        (request preempted/expired before serving). The promotion is
+        routed to the queue of the key's *current* tier, so SSD reads
+        and CPU->HBM promotions proceed in parallel."""
+        self._lane(self.where(key)).put((key, ticket))
 
-    def submit(self, job: Callable[[], Any]):
-        """Run an arbitrary job on the preload worker (layer-granular
-        stream loads share the worker with queue-time promotions)."""
-        self._q.put(job)
+    def submit(self, job: Callable[[], Any],
+               tier: Optional[str] = None):
+        """Run an arbitrary job on a preload worker (layer-granular
+        stream loads share the workers with queue-time promotions).
+        ``tier`` optionally routes the job onto that tier's lane."""
+        self._lane(tier).put(job)
 
     def _serve(self, item):
         if callable(item):
@@ -448,9 +465,9 @@ class TieredStore:
             return
         self.get(key, promote=True)
 
-    def _preload_loop(self):
+    def _preload_loop(self, lane_q: "queue.Queue[Any]"):
         while True:
-            item = self._q.get()
+            item = lane_q.get()
             try:
                 if item is None:
                     return
@@ -458,39 +475,45 @@ class TieredStore:
             except Exception:
                 self.stats["preload_errors"] += 1
             finally:
-                self._q.task_done()
+                lane_q.task_done()
 
     def drain(self, timeout: float = 5.0):
-        """Wait for outstanding prefetches (test/bench hook).
+        """Wait for outstanding prefetches on every lane (test/bench
+        hook).
 
-        Uses ``unfinished_tasks`` (not queue emptiness), so an item the
+        Uses ``unfinished_tasks`` (not queue emptiness), so an item a
         worker already popped but is still serving keeps ``drain``
-        blocked until its ``task_done``. Without a worker thread the
-        queue is served inline — deterministic for property tests."""
+        blocked until its ``task_done``. Without worker threads the
+        queues are served inline — deterministic for property tests."""
         if self._worker is None:
-            while True:
-                try:
-                    item = self._q.get_nowait()
-                except queue.Empty:
-                    return
-                try:
-                    if item is not None:
-                        self._serve(item)
-                except Exception:
-                    self.stats["preload_errors"] += 1
-                finally:
-                    self._q.task_done()
+            for lane_q in self._qs.values():
+                while True:
+                    try:
+                        item = lane_q.get_nowait()
+                    except queue.Empty:
+                        break
+                    try:
+                        if item is not None:
+                            self._serve(item)
+                    except Exception:
+                        self.stats["preload_errors"] += 1
+                    finally:
+                        lane_q.task_done()
+            return
         deadline = time.monotonic() + timeout
-        with self._q.all_tasks_done:
-            while self._q.unfinished_tasks:
-                remaining = deadline - time.monotonic()
-                if remaining <= 0:
-                    return
-                self._q.all_tasks_done.wait(remaining)
+        for lane_q in self._qs.values():
+            with lane_q.all_tasks_done:
+                while lane_q.unfinished_tasks:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        return
+                    lane_q.all_tasks_done.wait(remaining)
 
     def close(self):
-        for _ in self._pool:
-            self._q.put(None)           # one sentinel per worker
+        per_lane = len(self._pool) // len(self._qs) if self._pool else 0
+        for lane_q in self._qs.values():
+            for _ in range(per_lane):
+                lane_q.put(None)        # one sentinel per lane worker
         for t in self._pool:
             t.join(timeout=2.0)
         self._pool = []

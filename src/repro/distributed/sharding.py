@@ -180,6 +180,33 @@ def make_rules(mesh: jax.sharding.Mesh, cfg=None, *,
     return rules
 
 
+def serving_rules(mesh: jax.sharding.Mesh, cfg, axis: str = "heads") -> dict:
+    """Rules for the 1-D tensor-parallel serving mesh (see
+    ``launch.mesh.make_serving_mesh`` and the ``sharded`` attention
+    backend): q/kv heads over the single mesh axis when divisible.
+
+    Activation rules are deliberately absent — the sharded backend
+    places q/k/v itself through explicit ``shard_map`` specs, and a
+    global activation constraint around the ``wo`` einsum would turn
+    the head contraction into a partial-sum all-reduce, breaking the
+    sharded == single-device bit-equality gate."""
+    n = mesh.shape.get(axis, 1)
+    if cfg.num_heads % n or cfg.num_kv_heads % n:
+        raise ValueError(
+            f"{cfg.name}: head counts ({cfg.num_heads}/{cfg.num_kv_heads}) "
+            f"must divide the serving mesh axis '{axis}' ({n})")
+    return {"heads": axis, "kv_heads": axis,
+            "q_head_dim": None, "kv_head_dim": None}
+
+
+def serving_kv_shards(mesh: jax.sharding.Mesh, cfg,
+                      axis: str = "heads") -> int:
+    """KVPool shard count matching the serving mesh's head split."""
+    n = mesh.shape.get(axis, 1)
+    serving_rules(mesh, cfg, axis)      # validates divisibility
+    return n
+
+
 def kv_cache_spec(mesh, cfg, batch_shard: bool = True,
                   seq_axis: str | None = None) -> dict:
     """PartitionSpecs for the decode/prefill cache leaves.

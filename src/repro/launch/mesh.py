@@ -30,6 +30,18 @@ def make_debug_mesh(shape=(2, 4), axes=("data", "model")) -> \
     return jax.sharding.Mesh(devs, axes)
 
 
+def make_serving_mesh(n: int = None, axis: str = "heads") -> \
+        jax.sharding.Mesh:
+    """1-D tensor-parallel mesh for the serving engine's ``sharded``
+    attention backend: every device holds a head-slice of q/k/v and of
+    the KVPool arenas. ``n`` defaults to all visible devices (tests
+    force several host devices via XLA_FLAGS)."""
+    if n is None:
+        n = len(jax.devices())
+    devs = np.array(jax.devices()[:n])
+    return jax.sharding.Mesh(devs, (axis,))
+
+
 def data_axes(mesh: jax.sharding.Mesh):
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 

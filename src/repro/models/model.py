@@ -27,8 +27,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.distributed.sharding import shd
+from repro.models import backend as AB
 from repro.models import layers as L
 from repro.models.config import ModelConfig
+
+# launch code historically installs the context-parallel mesh through
+# the model module; the state now lives in the backend layer
+set_cp_mesh = AB.set_cp_mesh
 
 PyTree = Any
 
@@ -253,7 +258,7 @@ class Ctx:
     media: Optional[jax.Array] = None
     chunk_ids: Optional[jax.Array] = None   # [B,T] per-token chunk id
     collect_stats: bool = False
-    attn_impl: str = "auto"        # dense | flash | auto | kernel
+    attn_impl: str = "auto"        # backend name, see backend.BACKENDS
     decode_slot: Optional[jax.Array] = None  # [B] write slot for decode
     # --- packed multi-request prefill (mode="partial") -------------------
     # Several requests share one sequence row: each token carries a
@@ -270,107 +275,6 @@ class Ctx:
     # cross-request quadratic attention waste.
     pack_qidx: Optional[jax.Array] = None    # [R, Amax] -> packed q rows
     pack_kidx: Optional[jax.Array] = None    # [R, Smax] -> packed kv slots
-
-
-_CP_MESH = None
-
-
-def set_cp_mesh(mesh):
-    """Install the mesh for context-parallel attention (attn_impl
-    "flash_cp"); call from launch code before lowering."""
-    global _CP_MESH
-    _CP_MESH = mesh
-
-
-def _attend_block_diagonal(ctx: Ctx, window: int, q, k_all, v_all, kv_pos):
-    """Packed-prefill attention without the cross-request quadratic
-    waste: gather each request's query rows [R, Amax] and KV slice
-    [R, Smax] (indices from the executor, -1 = padding), run batched
-    dense attention per request, and scatter results back to the packed
-    row order. Cost is R * Amax * Smax instead of (sum A)(sum S); the
-    segment mask is implied by the block structure."""
-    cfg = ctx.cfg
-    B, A = q.shape[:2]
-    S = k_all.shape[1]
-    qidx, kidx = ctx.pack_qidx, ctx.pack_kidx
-    R, Amax = qidx.shape
-    Smax = kidx.shape[1]
-    qsafe = jnp.clip(qidx, 0, A - 1)
-    ksafe = jnp.clip(kidx, 0, S - 1)
-    qr = q[0][qsafe]                                    # [R, Amax, H, D]
-    kr = k_all[0][ksafe]                                # [R, Smax, Hkv, D]
-    vr = v_all[0][ksafe]
-    qpos_r = jnp.where(qidx >= 0, ctx.positions[0][qsafe], -1)
-    kpos_r = jnp.where(kidx >= 0, kv_pos[0][ksafe], -1)
-    mask = L.position_mask(qpos_r, kpos_r, window)
-    k_chunk_r = None
-    if ctx.collect_stats and ctx.chunk_ids is not None:
-        k_chunk_r = jnp.where(kidx >= 0, ctx.chunk_ids[0][ksafe],
-                              cfg.stats_chunks - 1)
-    out_r, row_mass_r, key_mass_r = L.gqa_attend_dense(
-        qr, kr, vr, mask, k_chunk=k_chunk_r,
-        num_chunks=cfg.stats_chunks)
-    # scatter back (each live row/slot appears exactly once; padding
-    # lands in a dump slot that is sliced away)
-    qflat = jnp.where(qidx >= 0, qidx, A).reshape(-1)
-    H, D = out_r.shape[-2:]
-    out = jnp.zeros((A + 1, H, D), out_r.dtype) \
-        .at[qflat].set(out_r.reshape(-1, H, D))[:A][None]
-    row_mass = key_mass = None
-    if row_mass_r is not None:
-        C = row_mass_r.shape[-1]
-        row_mass = jnp.zeros((A + 1, C), row_mass_r.dtype) \
-            .at[qflat].set(row_mass_r.reshape(-1, C))[:A][None]
-    if key_mass_r is not None:
-        kflat = jnp.where(kidx >= 0, kidx, S).reshape(-1)
-        key_mass = jnp.zeros((S + 1,), key_mass_r.dtype) \
-            .at[kflat].set(key_mass_r.reshape(-1))[:S][None]
-    return out, row_mass, key_mass
-
-
-def _attend(ctx: Ctx, kind: str, q, k_all, v_all, kv_pos):
-    cfg = ctx.cfg
-    window = cfg.window if kind == "local" else 0
-    Tq, Tk = q.shape[1], k_all.shape[1]
-    packed = ctx.seg_ids is not None and ctx.kv_seg is not None
-    if ctx.attn_impl == "kernel":
-        # Pallas chunk-attention kernel path: fused mass statistic, with
-        # the per-request segment mask threaded into the kernel.
-        from repro.kernels.chunk_attention.ops import chunk_attention
-        out, row_mass = chunk_attention(
-            q, k_all, v_all, ctx.positions, kv_pos,
-            ctx.chunk_ids if ctx.chunk_ids is not None
-            else jnp.zeros(kv_pos.shape, jnp.int32),
-            q_seg=ctx.seg_ids, k_seg=ctx.kv_seg,
-            num_chunks=cfg.stats_chunks, window=window)
-        if not ctx.collect_stats:
-            row_mass = None
-        # the fused kernel does not expose key-side received mass; the
-        # executor's capture falls back to inter-only scoring
-        # (token_total=None) when kstats stays zero
-        return out, row_mass, None
-    if packed and ctx.pack_qidx is not None and ctx.pack_kidx is not None:
-        return _attend_block_diagonal(ctx, window, q, k_all, v_all, kv_pos)
-    use_dense = ctx.attn_impl == "dense" or ctx.collect_stats or packed or (
-        ctx.attn_impl == "auto" and Tq * Tk <= (1 << 21))
-    if use_dense:
-        mask = L.position_mask(ctx.positions, kv_pos, window,
-                               q_seg=ctx.seg_ids if packed else None,
-                               k_seg=ctx.kv_seg if packed else None)
-        out, row_mass, key_mass = L.gqa_attend_dense(
-            q, k_all, v_all, mask,
-            k_chunk=ctx.chunk_ids if ctx.collect_stats else None,
-            num_chunks=cfg.stats_chunks)
-    elif ctx.attn_impl == "flash_cp" and _CP_MESH is not None:
-        out = L.gqa_attend_flash_cp(q, k_all, v_all, ctx.positions, kv_pos,
-                                    _CP_MESH, window)
-        row_mass = key_mass = None
-    else:
-        out = L.gqa_attend_flash(q, k_all, v_all, ctx.positions, kv_pos,
-                                 window,
-                                 causal_skip=ctx.attn_impl == "flash_skip")
-        row_mass = key_mass = None
-    return out, row_mass, key_mass
 
 
 def _self_attention(ctx: Ctx, kind: str, p, x, state):
@@ -437,7 +341,7 @@ def _self_attention(ctx: Ctx, kind: str, p, x, state):
     else:
         raise ValueError(ctx.mode)
 
-    out, row_mass, key_mass = _attend(ctx, kind, q, k_all, v_all, kv_pos)
+    out, row_mass, key_mass = AB.attend(ctx, kind, q, k_all, v_all, kv_pos)
     # pin the attention interior: without this, a model-sharded wo
     # head_dim pulls D-sharding back INTO the flash loop and every score
     # tile becomes a partial-sum all-reduce
@@ -736,10 +640,12 @@ def partial_prefill(cfg, params, tokens, positions, cache, media=None,
                    attn_impl=attn_impl)
 
 
-def decode_step(cfg, params, tokens, positions, cache, decode_slot=None):
+def decode_step(cfg, params, tokens, positions, cache, decode_slot=None,
+                attn_impl="auto"):
     """tokens [B], positions [B] -> logits [B,1,V] + updated cache."""
     if decode_slot is None:
         decode_slot = positions
     return forward(cfg, params, tokens=tokens[:, None],
                    positions=positions[:, None], mode="decode", cache=cache,
-                   decode_slot=decode_slot, logits_slice="last")
+                   decode_slot=decode_slot, attn_impl=attn_impl,
+                   logits_slice="last")

@@ -187,16 +187,36 @@ class Engine:
                  time_scale: float = 1.0,
                  incremental_decode: bool = True,
                  share_chunk_kv: bool = True,
-                 trace_decode: bool = False):
+                 trace_decode: bool = False,
+                 attn_impl: Optional[str] = None,
+                 mesh=None):
         self.cfg = cfg
         self.params = params
         self.store = store
-        self.executor = CacheCraftExecutor(
-            cfg, params, store, **(executor_kwargs or {}))
+        # attention backend selection (models.backend.BACKENDS). None
+        # keeps the legacy split: "dense" prefill windows, "auto"
+        # decode. A serving mesh forces the "sharded" backend and a
+        # matching head-sharded pool layout; the mesh must be installed
+        # before the first trace of any jit root that runs under it.
+        self.mesh = mesh
+        kv_shards = 1
+        if mesh is not None:
+            from repro.distributed.sharding import serving_kv_shards
+            from repro.models import backend as AB
+            kv_shards = serving_kv_shards(mesh, cfg)
+            AB.set_serving_mesh(mesh)
+            attn_impl = "sharded"
+        self.attn_impl = attn_impl
+        self.kv_shards = kv_shards
+        ek = dict(executor_kwargs or {})
+        if attn_impl is not None:
+            ek.setdefault("attn_impl", attn_impl)
+        self.executor = CacheCraftExecutor(cfg, params, store, **ek)
         self.scheduler = Scheduler(sched or SchedulerConfig())
         self.counters = ServingCounters()
         self.pool = KVPool(cfg.num_layers, cfg.num_kv_heads, cfg.head_dim_,
-                           pool_blocks, block_size, counters=self.counters)
+                           pool_blocks, block_size, counters=self.counters,
+                           kv_shards=kv_shards)
         # zero-copy chunk sharing needs a store AND layout-local
         # positions (fix_rpe/fix_causality), otherwise the injected KV
         # is not a function of (variant, layout start) alone; a
@@ -227,7 +247,7 @@ class Engine:
         self.decode_trace: List[Dict[int, np.ndarray]] = []
         self.final_kv: Dict[int, tuple] = {}
         from repro.core.prefill import decode_fn
-        self._decode_fn = decode_fn(cfg)
+        self._decode_fn = decode_fn(cfg, self.attn_impl or "auto")
 
     # ---- submission ---------------------------------------------------------
     def submit(self, req: Request):
@@ -371,6 +391,17 @@ class Engine:
             sched.on_terminal(r)
         return bool(expired)
 
+    def _count_attn_flops(self, tq: int, tk: int):
+        """Analytic attention FLOPs for one jitted pass (score + PV
+        einsums over all layers, 4*Tq*Tk*H*D each): count-based so the
+        sharded CI gate is timing-immune. The head axis partitions the
+        einsums exactly, so the per-device share divides by the
+        head-shard count."""
+        f = 4 * tq * tk * self.cfg.num_heads * self.cfg.head_dim_ \
+            * self.cfg.num_layers
+        self.counters.attn_flops_total += f
+        self.counters.attn_flops_device += f // self.kv_shards
+
     def _run_prefills(self, reqs: Sequence[Request]):
         """Packed multi-request prefill: every admitted request's
         recompute tokens execute as one jitted windowed pass. Admission
@@ -448,6 +479,8 @@ class Engine:
                 self._requeue(req)
                 continue
             first = int(np.argmax(res.logits_last[:self.cfg.vocab_size]))
+            self._count_attn_flops(res.plan.num_active_tokens,
+                                   res.total_len)
             req.output_tokens.append(first)
             req.total_len = res.total_len
             req.t_first_token = self.clock
@@ -766,6 +799,7 @@ class Engine:
         logits = np.asarray(logits[:, 0])
         self.clock += (time.perf_counter() - t0) * self.time_scale
         self.stats.decode_steps += 1
+        self._count_attn_flops(B, S)
         if self.trace_decode:
             self.decode_trace.append(
                 {r.rid: logits[i].copy() for i, r in enumerate(self._rows)

@@ -73,6 +73,26 @@ new blocks (the owner already holds them), so
 strictly more requests per iteration under pool pressure while the
 conservation law keeps holding: a CoW clone that exceeds the delta
 estimate simply falls back from the reservation to the free list.
+
+Head-sharded block layout (``kv_shards``)
+-----------------------------------------
+Tensor-parallel serving (the ``sharded`` attention backend) splits the
+KV head axis over the mesh: shard ``s`` owns heads
+``[s*Hkv/n, (s+1)*Hkv/n)`` of *every* block. The arenas keep the head
+axis innermost-contiguous, so ``shard_view(s)`` returns zero-copy
+per-shard arenas ``[L, num_blocks, block, Hkv/n, D]`` — the bytes each
+device holds — while every IO method keeps writing through the full
+logical arena unchanged. The invariants:
+
+* block ids are **global**: a block exists on every shard or on none,
+  so the free list, refcounts, reservations and CoW run shard-agnostic
+  and the conservation law ``free + live + reserved == num_blocks``
+  holds per shard by construction;
+* chunkstore residency, zero-copy shared runs and preemption reclaim
+  therefore work unchanged — sharding only divides the *bytes per
+  device* (``block_nbytes / kv_shards``), never the block bookkeeping;
+* ``kv_heads % kv_shards == 0`` (contiguous head blocks keep the GQA
+  grouping shard-local; enforced at construction).
 """
 from __future__ import annotations
 
@@ -111,10 +131,17 @@ class KVPool:
     def __init__(self, num_layers: int, kv_heads: int, head_dim: int,
                  num_blocks: int, block_size: int = 16,
                  dtype=np.float32,
-                 counters: Optional[ServingCounters] = None):
+                 counters: Optional[ServingCounters] = None,
+                 kv_shards: int = 1):
+        if kv_shards < 1 or kv_heads % kv_shards:
+            raise ValueError(
+                f"kv_heads ({kv_heads}) must be divisible by kv_shards "
+                f"({kv_shards}) — contiguous head blocks per shard")
         self.L = num_layers
         self.block_size = block_size
         self.num_blocks = num_blocks
+        self.kv_shards = kv_shards
+        self.heads_per_shard = kv_heads // kv_shards
         self.k = np.zeros((num_layers, num_blocks, block_size, kv_heads,
                            head_dim), dtype)
         self.v = np.zeros_like(self.k)
@@ -140,6 +167,27 @@ class KVPool:
         shared ``core.eviction`` contract: score = reuse x cost /
         size)."""
         return int(self.k[:, 0].nbytes + self.v[:, 0].nbytes)
+
+    @property
+    def shard_block_nbytes(self) -> int:
+        """KV bytes ONE shard (device) holds per block — the
+        tensor-parallel per-device memory metric."""
+        return self.block_nbytes // self.kv_shards
+
+    def shard_view(self, shard: int):
+        """Zero-copy per-shard arenas ``(k, v) [L, num_blocks, block,
+        Hkv/n, D]``: the bytes device ``shard`` owns. Views write
+        through to the logical arena, so IO through either side stays
+        coherent — the single-host emulation of per-device HBM."""
+        if not 0 <= shard < self.kv_shards:
+            raise IndexError(shard)
+        h0 = shard * self.heads_per_shard
+        h1 = h0 + self.heads_per_shard
+        return self.k[..., h0:h1, :], self.v[..., h0:h1, :]
+
+    def peak_kv_bytes_per_device(self) -> int:
+        """Peak live KV bytes per device over the pool's lifetime."""
+        return self.counters.live_blocks_peak * self.shard_block_nbytes
 
     @property
     def free_tokens(self) -> int:

@@ -65,6 +65,12 @@ class ServingCounters:
     preload_layers_blocked: int = 0      # per-layer awaits that waited
     preload_layers_hidden: int = 0       # per-layer loads fully hidden
     #     behind earlier windows' compute (streamed prefill)
+    # --- tensor-parallel serving (sharded attention backend) ---
+    attn_flops_total: int = 0            # analytic attention FLOPs issued
+    #     (4*Tq*Tk*H*D per layer, padded shapes; count-based so the CI
+    #     sharded-smoke gate is timing-immune)
+    attn_flops_device: int = 0           # per-device share of the above
+    #     (total / kv_shards; strictly below total on a real mesh)
     # --- incremental decode batch ---
     decode_rebuilds: int = 0             # full (B, S) gather rebuilds
     decode_joins: int = 0                # requests written into a free row
