@@ -73,10 +73,14 @@ def make_world(cfg, n_chunks: int = 24, seed: int = 0):
 
 
 def fresh_store(tmp_suffix: str, n=100, m=5, alpha=1.0,
-                hbm=1 << 30, cpu=1 << 30) -> ChunkStore:
+                hbm=1 << 30, cpu=1 << 30,
+                tier_dtypes: Optional[Dict[str, str]] = None) -> ChunkStore:
+    """``tier_dtypes`` passes through to ``TieredStore`` (quantized
+    cpu/ssd tiers; ``None`` keeps the legacy fp32 pass-through)."""
     import tempfile
     d = tempfile.mkdtemp(prefix=f"cc-{tmp_suffix}-")
-    return ChunkStore(TieredStore(hbm, cpu, d, start_worker=False),
+    return ChunkStore(TieredStore(hbm, cpu, d, start_worker=False,
+                                  tier_dtypes=tier_dtypes),
                       n_chunks=n, m_variants=m, alpha=alpha)
 
 

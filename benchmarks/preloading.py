@@ -14,6 +14,13 @@
   (``LayerStream`` + per-layer executor await points). Exposed load
   time is measured at real await points; the hidden/blocked layer
   counts are the CI-stable gate.
+* ``eviction_quant_compare`` — ``fig22_eviction_quant_{fp32,int8}``:
+  the same skewed workload over fp32 vs int8-quantized cpu/ssd tiers
+  at an EQUAL byte budget. The quantized tier packs ~4x more variants
+  into the same DRAM cap, so strictly fewer accesses fall through to
+  the deep (SSD) tier — the capacity half of the quantized-tiers
+  trade (quality half: ``quality_vs_recompute.quant_quality_compare``).
+  Count-based (deep misses), CI-stable.
 """
 from __future__ import annotations
 
@@ -70,6 +77,7 @@ def run(quick: bool = False):
          f"depth={sched.depth};steps={len(sched.steps)}")
 
     eviction_compare(quick=quick)
+    eviction_quant_compare(quick=quick)
     preload_compare(quick=quick)
 
 
@@ -136,6 +144,66 @@ def eviction_compare(quick: bool = False, n_chunks: int = 16,
              f"hbm_hits={hits['hbm']};cpu_hits={hits['cpu']};"
              f"ssd_hits={hits['ssd']};"
              f"demotions={tiers.stats['demotions']}")
+    return out
+
+
+def eviction_quant_compare(quick: bool = False, n_chunks: int = 16,
+                           accesses: int = 320, seed: int = 7) -> dict:
+    """fp32 vs int8-quantized cpu/ssd tiers at an EQUAL byte budget.
+
+    Identical seeded workload, identical tier caps in BYTES, identical
+    (reuse-aware) policy; the only difference is ``tier_dtypes``. HBM
+    always holds raw fp32, so the shallow miss counts barely move — the
+    gate is DEEP misses (accesses served from SSD): the int8 DRAM tier
+    holds ~4x more variants at the same cap, so strictly fewer accesses
+    fall through. Fully count-based and deterministic."""
+    if quick:
+        accesses = max(120, accesses // 2)
+    L, T, H, D = 2, 24, 2, 4
+    out = {}
+    for label, dtypes in (("fp32", None),
+                          ("int8", {"cpu": "int8", "ssd": "int8"})):
+        rng = np.random.default_rng(seed)
+        kv0 = {"k": np.zeros((L, T, H, D), np.float32),
+               "v": np.zeros((L, T, H, D), np.float32)}
+        nb = tree_nbytes(kv0)
+        tiers = TieredStore(4 * nb, 4 * nb,
+                            tempfile.mkdtemp(prefix=f"cc-evq-{label}-"),
+                            start_worker=False,
+                            policy=get_policy("reuse"),
+                            tier_dtypes=dtypes)
+        store = ChunkStore(tiers, n_chunks=n_chunks, m_variants=1,
+                           policy=get_policy("reuse"))
+        variants = []
+        for i in range(n_chunks):
+            kv = {"k": np.full((L, T, H, D), float(i), np.float32),
+                  "v": np.full((L, T, H, D), float(i), np.float32)}
+            variants.append(store.add_variant(f"c{i:02d}", kv,
+                                              _synth_scores(T)))
+        w = 1.0 / np.arange(1, n_chunks + 1) ** 1.2
+        w /= w.sum()
+        seq = rng.choice(n_chunks, size=accesses, p=w)
+        scan = 0
+        misses = 0
+        for t, i in enumerate(seq):
+            if t % 4 == 3:                 # cold scan sweep
+                i = scan
+                scan = (scan + 1) % n_chunks
+            _kv, info = store.get_kv(variants[int(i)])
+            if info.tier != "hbm":
+                misses += 1
+            store.record_use(variants[int(i)], 0.3)
+        hits = tiers.stats["hits"]
+        out[label] = dict(deep_misses=hits["ssd"], tier_misses=misses,
+                          accesses=accesses, hbm_hits=hits["hbm"],
+                          cpu_hits=hits["cpu"], ssd_hits=hits["ssd"],
+                          quant_bytes_saved=tiers.stats["quant_bytes_saved"],
+                          byte_budget=int(4 * nb))
+        emit(f"fig22_eviction_quant_{label}", float(hits["ssd"]),
+             f"deep_misses={hits['ssd']};tier_misses={misses};"
+             f"accesses={accesses};hbm_hits={hits['hbm']};"
+             f"cpu_hits={hits['cpu']};byte_budget={4 * nb};"
+             f"quant_bytes_saved={tiers.stats['quant_bytes_saved']}")
     return out
 
 

@@ -1,7 +1,15 @@
 """Fig. 20 / Fig. 15 / Fig. 21: generation quality vs recompute budget,
 Cache-Craft token selection vs Random-Recomp / Prefill-H2O / Full-Cache,
 measured as ROUGE-L F1 of greedy continuations against the Full-Recomp
-oracle (score 1.0 == indistinguishable from full computation)."""
+oracle (score 1.0 == indistinguishable from full computation).
+
+``quant_quality_compare`` is the quality half of the quantized-tiers
+gate (``core.tiers`` "Quantized tiers"): the identical warm-store
+workload replayed with fp32 vs int8 cpu/ssd tiers, every chunk read
+forced through the deep tiers, at a MATCHED recompute ratio (tier
+quantization never changes plan decisions — they derive from chunk
+metadata). Gate: ROUGE delta vs the fp32 lane <= eps. The capacity
+half lives in ``preloading.eviction_quant_compare``."""
 from __future__ import annotations
 
 import numpy as np
@@ -59,6 +67,72 @@ def run(quick: bool = False):
                  wall / len(cases) * 1e6,
                  f"rouge={np.mean(rouges):.3f};dev={np.mean(devs):.3f};"
                  f"actual_recompute={np.mean(rfracs):.2f}")
+
+    quant_quality_compare(quick=quick)
+
+
+def quant_quality_compare(quick: bool = False, frac: float = 0.2,
+                          eps: float = 0.05, n_eval: int = 6) -> dict:
+    """fp32 vs int8-quantized tiers at a matched recompute ratio.
+
+    Both lanes warm an identical store on the eval cases, then HBM is
+    capped to 1 byte and flushed: every chunk-cache read during eval is
+    served (and dequantized) from the deep tiers, and promotion is
+    blocked so values stay encoded — the harshest read path for the
+    codec. Plans derive from chunk metadata, so the recompute ratio
+    matches EXACTLY between lanes and any score delta is attributable
+    to quantization alone. Gate: ROUGE-L delta <= ``eps``."""
+    cfg, params = get_trained_model()
+    kb, retr, sys_t, rng = make_world(cfg)
+    cases = build_cases(kb, retr, rng, 3 if quick else n_eval,
+                        seed_base=900)
+    oracle = CacheCraftExecutor(cfg, params, None, strategy="all",
+                                use_focus=False)
+    refs = [greedy_continue(cfg, params,
+                            oracle.process(sys_t, c.chunks, c.question),
+                            GEN)
+            for c in cases]
+    out: dict = {}
+    for label, dtypes in (("fp32", None),
+                          ("int8", {"cpu": "int8", "ssd": "int8"})):
+        store = fresh_store(f"qq-{label}", tier_dtypes=dtypes)
+        warm_ex = CacheCraftExecutor(cfg, params, store, use_focus=False,
+                                     store_fixed_variants=False)
+        for c in cases:
+            warm_ex.process(sys_t, c.chunks, c.question)
+        tiers = store.tiers
+        tiers.caps["hbm"] = 1      # block promotion: reads stay encoded
+        tiers.flush()              # serve every eval read from deep tiers
+        ex = CacheCraftExecutor(cfg, params, store, strategy="cachecraft",
+                                use_focus=False,
+                                force_recompute_fraction=frac,
+                                store_fixed_variants=False,
+                                store_new_chunks=False)
+        rouges, rfracs = [], []
+        for c, ref in zip(cases, refs):
+            res = ex.process(sys_t, c.chunks, c.question)
+            rouges.append(rouge_l_f1(
+                greedy_continue(cfg, params, res, GEN), ref))
+            rfracs.append(res.plan.recompute_fraction)
+        out[label] = dict(
+            rouge=float(np.mean(rouges)),
+            recompute=float(np.mean(rfracs)),
+            dequant_loads=int(tiers.stats["dequant_loads"]),
+            quant_bytes_saved=int(tiers.stats["quant_bytes_saved"]))
+        emit(f"fig20_quant_{label}", 0.0,
+             f"rouge={out[label]['rouge']:.3f};"
+             f"recompute={out[label]['recompute']:.2f};"
+             f"dequant_loads={out[label]['dequant_loads']};"
+             f"quant_bytes_saved={out[label]['quant_bytes_saved']}")
+    delta = out["fp32"]["rouge"] - out["int8"]["rouge"]
+    out["delta"] = float(delta)
+    out["eps"] = float(eps)
+    out["matched_recompute"] = bool(
+        abs(out["fp32"]["recompute"] - out["int8"]["recompute"]) < 1e-9)
+    emit("fig20_quant_delta", 0.0,
+         f"delta={delta:.4f};eps={eps};"
+         f"matched_recompute={out['matched_recompute']}")
+    return out
 
 
 if __name__ == "__main__":

@@ -38,11 +38,14 @@ rebuild *counts*, copy-vs-zerocopy reserved *blocks*, preemption
 *counts* + logits bit-equality, eviction tier-miss *counts* (LRU vs
 reuse-aware, from ``benchmarks.preloading.eviction_compare``), the
 eager-vs-layerwise preload comparison (hidden/blocked layer counts +
-measured exposed load), and the sharded lane (bit-equality + strictly
-fewer per-device KV bytes/attention FLOPs) — all but the first
-count-based, immune to shared-runner timing noise) and writes the gate
-numbers to ``results/fig22_ci_smoke.json`` for the CI artifact
-upload.
+measured exposed load), the sharded lane (bit-equality + strictly
+fewer per-device KV bytes/attention FLOPs), and the quant lane
+(quantized-tier deep-miss *counts* at an equal byte budget from
+``eviction_quant_compare`` + the ROUGE delta-vs-fp32 quality gate from
+``quant_quality_compare``, trajectory in ``results/BENCH_quant.json``)
+— all but the first count-based, immune to shared-runner timing noise)
+and writes the gate numbers to ``results/fig22_ci_smoke.json`` for the
+CI artifact upload.
 """
 from __future__ import annotations
 
@@ -463,6 +466,13 @@ def ci_smoke() -> int:
       decode logits vs the single-device run, with strictly fewer
       per-device KV bytes and attention FLOPs and an unchanged total
       FLOP count (pure repartitioning; all count-based).
+    * quant — quantized cpu/ssd tiers vs fp32 at an equal byte budget:
+      strictly fewer DEEP (SSD) tier misses on the identical seeded
+      workload (count-based capacity gate), plus the quality gate —
+      ROUGE-L delta vs the fp32 lane <= eps at an exactly matched
+      recompute ratio, with dequantized reads actually exercised
+      (``dequant_loads > 0``). Trajectory in
+      ``results/BENCH_quant.json``.
 
     Gate numbers land in ``results/fig22_ci_smoke.json`` so CI can
     upload them as a workflow artifact."""
@@ -517,6 +527,30 @@ def ci_smoke() -> int:
         and pl["layerwise"]["load_exposed_s"]
         < pl["eager"]["load_exposed_s"])
 
+    from benchmarks.preloading import eviction_quant_compare
+    from benchmarks.quality_vs_recompute import quant_quality_compare
+    evq = eviction_quant_compare(quick=True)
+    qq = quant_quality_compare(quick=True)
+    # capacity: strictly fewer deep misses at the same byte budget;
+    # quality: score delta vs fp32 within eps at matched recompute,
+    # with the dequant read path actually exercised
+    ok_quant = (
+        evq["int8"]["deep_misses"] < evq["fp32"]["deep_misses"]
+        and qq["matched_recompute"]
+        and abs(qq["delta"]) <= qq["eps"]
+        and qq["int8"]["dequant_loads"] > 0)
+    _record_trajectory(
+        "BENCH_quant.json",
+        dict(deep_misses_fp32=evq["fp32"]["deep_misses"],
+             deep_misses_int8=evq["int8"]["deep_misses"],
+             byte_budget=evq["int8"]["byte_budget"],
+             quant_bytes_saved=evq["int8"]["quant_bytes_saved"],
+             rouge_fp32=qq["fp32"]["rouge"],
+             rouge_int8=qq["int8"]["rouge"],
+             rouge_delta=qq["delta"], eps=qq["eps"],
+             recompute_ratio=qq["int8"]["recompute"],
+             dequant_loads=qq["int8"]["dequant_loads"]))
+
     sh = _sharded_compare()
     # bit-equality + strictly-fewer-per-device-work, all count-based:
     # the sharded engine must be a pure repartitioning of the same math
@@ -545,6 +579,13 @@ def ci_smoke() -> int:
         "sharded": dict(ok=ok_sharded, tokens_equal=sh["tokens_equal"],
                         logits_equal=sh["logits_equal"],
                         onedev=sh["onedev"], fourdev=sh["fourdev"]),
+        "quant": dict(ok=ok_quant, capacity_fp32=evq["fp32"],
+                      capacity_int8=evq["int8"],
+                      rouge_fp32=qq["fp32"]["rouge"],
+                      rouge_int8=qq["int8"]["rouge"],
+                      rouge_delta=qq["delta"], eps=qq["eps"],
+                      matched_recompute=qq["matched_recompute"],
+                      dequant_loads=qq["int8"]["dequant_loads"]),
     }
     out_dir = os.path.join(os.path.dirname(__file__), "..", "results")
     os.makedirs(out_dir, exist_ok=True)
@@ -568,7 +609,8 @@ if __name__ == "__main__":
                          "reserved blocks, preemption counts + logits "
                          "bit-equality, eviction tier misses, preload "
                          "overlap, sharded bit-equality + per-device "
-                         "FLOPs/bytes); writes "
+                         "FLOPs/bytes, quantized-tier capacity + "
+                         "quality delta); writes "
                          "results/fig22_ci_smoke.json; exit 1 on any "
                          "gate failure")
     args = ap.parse_args()

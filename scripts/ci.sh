@@ -37,9 +37,15 @@
 #     output tokens identical, traced decode logits bit-identical, and
 #     per-device KV bytes + attention FLOPs strictly lower (count-based,
 #     immune to runner timing noise),
+#   * quantized chunk-cache tiers: int8 cpu/ssd tiers take strictly
+#     fewer deep (SSD) tier misses than fp32 at an equal byte budget
+#     (count-based), AND the quantized lane's ROUGE-L score stays
+#     within eps of the fp32 lane at an exactly matched recompute
+#     ratio with the dequant read path exercised,
 # and writes results/fig22_ci_smoke.json for the CI artifact upload
-# (plus the preemption trajectory in results/BENCH_preemption.json and
-# the sharded trajectory in results/BENCH_sharded.json).
+# (plus the preemption trajectory in results/BENCH_preemption.json,
+# the sharded trajectory in results/BENCH_sharded.json, and the quant
+# trajectory in results/BENCH_quant.json).
 # --smoke-only skips the pytest suite for fast local iteration on the
 # perf gates.
 set -euo pipefail
@@ -90,7 +96,8 @@ if [[ "$status" == "0" && "$perf_smoke" == "1" ]]; then
     echo "CI: perf smoke (admission throughput + decode-churn counts" \
          "+ copy-vs-zerocopy shared-block gate + preemption gate" \
          "+ eviction tier-miss gate + layerwise-preload gate" \
-         "+ sharded bit-equality/FLOPs gate)"
+         "+ sharded bit-equality/FLOPs gate" \
+         "+ quantized-tier capacity/quality gate)"
     python -m benchmarks.throughput_latency --ci-smoke || status=$?
     echo "CI perf smoke exit status: $status"
 fi

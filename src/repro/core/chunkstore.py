@@ -26,6 +26,13 @@ schedule can stream exactly the layers the executor is about to
 compute (``core.preload.LayerStream``) instead of blocking on the whole
 variant. ``get_kv`` reassembles the full [L, ...] view; tier pins on
 the bare variant id cover every layer slice (group-aware pinning).
+Layer slices ride the tier store's quantized representations
+transparently (``core.tiers`` "Quantized tiers"): ``TieredStore.get``
+returns dequantized fp32, while demoted slices occupy (and are
+evicted by) their quantized STORED bytes. This is orthogonal to this
+module's own opt-in ``quantize_kv`` path, which quantizes at capture
+time into the variant payload itself (``k_q``/``k_s`` leaves — kept
+raw by the tier codec's small-leaf pass-through).
 
 Pool residency (zero-copy chunk sharing): ``attach_pool`` wires the
 store to the serving ``KVPool``. The ``PoolResidency`` registry then

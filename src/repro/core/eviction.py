@@ -54,10 +54,14 @@ class Candidate:
     """One evictable entry, as seen by a policy.
 
     ``key`` is opaque to the policy (a tier key string, a ``Variant``,
-    a ``SharedRun`` — whatever the site evicts). ``last_access`` is a
-    monotonic timestamp or sequence number; larger means more recent.
-    ``reuse_freq``/``recompute_cost`` come from the chunk store's
-    per-variant hit/CFO stats (zero/one for entries without stats)."""
+    a ``SharedRun`` — whatever the site evicts). ``nbytes`` is the
+    entry's STORED size — at the tier site that is the quantized
+    representation's bytes (``core.tiers`` "Quantized tiers"), so GDSF
+    prices an entry by the capacity it actually occupies, not its fp32
+    footprint. ``last_access`` is a monotonic timestamp or sequence
+    number; larger means more recent. ``reuse_freq``/``recompute_cost``
+    come from the chunk store's per-variant hit/CFO stats (zero/one for
+    entries without stats)."""
     key: Any
     nbytes: int
     last_access: float = 0.0

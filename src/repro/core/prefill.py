@@ -558,17 +558,27 @@ class CacheCraftExecutor:
         hidden_layers = np.zeros(R, np.int64)
         span_measured = np.zeros(R)
         stream_traces: List[List[list]] = [[] for _ in range(R)]
+        req_infos: List[list] = [[] for _ in range(R)]
         for job in stream_jobs:
             s = job.stream
             info = merge_load_infos(s._infos)
             if info is not None:
                 load_modeled[job.r] += info.seconds_modeled
-                load_measured[job.r] += info.seconds_measured
                 tier_hits[job.r][info.tier] += 1
+            req_infos[job.r].extend(s._infos)
             exposed_measured[job.r] += s.blocked_seconds
             blocked_layers[job.r] += s.blocked_layers
             hidden_layers[job.r] += s.hidden_layers
             stream_traces[job.r].append(list(s.trace))
+        for r, infos in enumerate(req_infos):
+            # measured time unions the [t0, t1) windows of EVERY layer
+            # load of the request across all its streams — per-layer
+            # loads run concurrently on the tier lanes, so summing
+            # per-stream merges would double-count overlapped wall time
+            # (and could report more measured load than elapsed time)
+            info = merge_load_infos(infos)
+            if info is not None:
+                load_measured[r] += info.seconds_measured
         for r in range(R):
             # wall-clock span of the request's loads (first request ->
             # last completion): with parallel tier workers the summed
@@ -621,13 +631,19 @@ class CacheCraftExecutor:
         """Modeled per-layer load cost for one streamed variant: bytes
         per layer over the bandwidth of the tier its first layer slice
         currently sits in (HBM-resident slices cost ~nothing), plus any
-        injected test/bench latency."""
+        injected test/bench latency. Bytes come from the tier store's
+        STORED-size ledger when the slice is registered — a quantized
+        tier moves ~4x fewer bytes per layer, and Eq. 16's preload
+        depth should reflect the bytes actually crossing the link —
+        falling back to the variant's fp32 footprint otherwise."""
         tiers = self.store.tiers
-        where = tiers.where(ChunkStore._lkey(var.variant_id, 0))
+        lkey = ChunkStore._lkey(var.variant_id, 0)
+        where = tiers.where(lkey)
         if where in (None, "hbm"):
             return 0.0
         bw = CPU_TO_HBM_GBPS if where == "cpu" else SSD_GBPS
-        per_layer = var.nbytes / max(1, var.num_layers)
+        per_layer = tiers.sizes.get(
+            lkey, var.nbytes / max(1, var.num_layers))
         return per_layer / (bw * 1e9) + tiers.load_delay_s
 
     def _stage_window_layers(self, stream_jobs, schedule, cache,

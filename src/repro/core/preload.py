@@ -10,7 +10,15 @@ layer-sliced variant (``ChunkStore.get_kv_layer``) through the tier
 store's preload worker, and the executor blocks on ``await_layer`` only
 when a layer has not finished loading by the time its compute window
 needs it — so ``load_exposed`` is measured at actual await points, not
-modeled (CacheBlend-style fetch/compute overlap)."""
+modeled (CacheBlend-style fetch/compute overlap).
+
+With quantized tiers (``core.tiers`` "Quantized tiers") the background
+load ALSO pays the per-layer dequantize inside ``TieredStore.get`` on
+the worker lane, so dequant cost hides behind the layerwise stream
+exactly like the IO does; ``await_layer`` always hands the executor a
+raw fp32 slice. Per-layer ``LoadInfo``s carry ``[t0, t1)`` interval
+stamps so ``merge_load_infos`` can union concurrent lane loads instead
+of double-counting overlapped wall time."""
 from __future__ import annotations
 
 import threading

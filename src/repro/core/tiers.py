@@ -54,16 +54,57 @@ empty-queue race); worker exceptions are counted in
 Prefetches carry an optional ``PrefetchTicket``; cancelling the ticket
 (request preempted/expired/plan changed) retracts every pending
 promotion it covers (``stats["prefetch_cancelled"]``).
+
+Quantized tiers (trade bits for capacity, §3.5 + paper §7 note)
+---------------------------------------------------------------
+Chunk KV tolerates aggressive compression (CacheClip, TurboRAG), so
+the non-HBM tiers can hold 4-10x more variants at the same byte budget
+by storing a quantized representation. ``tier_dtypes`` maps a tier to
+its storage scheme:
+
+* ``"fp32"`` (default for both tiers) — raw pass-through, the legacy
+  bit-exact behavior;
+* ``"int8"`` — per-tensor scale, the quantize/dequantize-with-scale
+  idiom lifted from ``distributed/compression.py`` (4x fewer bytes);
+* ``"fp8"`` — blockwise float8_e4m3fn, one fp32 scale per
+  ``FP8_BLOCK`` elements (~4x fewer bytes, better dynamic range for
+  outlier-heavy tensors; degrades to ``int8`` when ``ml_dtypes`` is
+  unavailable).
+
+Demotion *encodes* for the destination tier (HBM always holds the raw
+fp32 value the executor computes with); promotion and ``get``
+*dequantize* before returning — reads issued through the per-tier
+worker lanes (prefetch, ``LayerStream``) pay the dequant cost on the
+lane, hidden behind compute. An already-encoded value passes further
+demotions through unchanged, so a value is quantized at most ONCE (no
+error accumulation across cpu -> ssd -> cpu round trips). Non-float
+leaves and float leaves below ``QUANT_MIN_ELEMS`` elements (per-token
+scale sidecars, position vectors) are stored raw inside the encoded
+tree.
+
+The ledger counts STORED bytes: ``sizes[key]`` / ``used[tier]`` /
+``Candidate.nbytes`` all reflect the representation resident in the
+key's current tier, so the conservation invariant
+``used[t] == sum(sizes of keys resident in t)`` holds across a
+quantize-on-demote / dequantize-on-promote round trip and the eviction
+policy prices entries by the bytes they actually occupy. SSD files
+embed the scheme tag and per-leaf scales (``__scheme__``, ``s<i>``
+members) next to ``__struct__``/``__nbytes__``; legacy fp32 files load
+unchanged. Quality is gated by ``benchmarks/quality_vs_recompute.py``
+(quantized score delta vs fp32 <= eps at matched recompute ratio) and
+capacity by ``fig22_eviction_quant`` (strictly fewer deep tier misses
+at an equal byte budget).
 """
 from __future__ import annotations
 
+import itertools
 import json
 import os
 import queue
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -83,6 +124,121 @@ def tree_nbytes(tree) -> int:
     return total
 
 
+# ---- quantized stored representations (module docstring) -------------------
+
+QUANT_SCHEMES = ("fp32", "int8", "fp8")
+QUANT_MIN_ELEMS = 64       # float leaves smaller than this stay raw
+FP8_BLOCK = 128            # elements per fp8 scale block
+
+try:                       # ml_dtypes ships with jax; gate, never install
+    import ml_dtypes as _ml_dtypes
+    _FP8_DTYPE: Optional[np.dtype] = np.dtype(_ml_dtypes.float8_e4m3fn)
+    _FP8_MAX = float(_ml_dtypes.finfo(_ml_dtypes.float8_e4m3fn).max)
+except Exception:          # pragma: no cover - jax guarantees ml_dtypes
+    _FP8_DTYPE = None
+    _FP8_MAX = 0.0
+
+
+@dataclass
+class QuantizedTree:
+    """One pytree encoded for a quantized tier: original structure,
+    per-leaf payloads (int8 / fp8, or raw pass-through for non-float
+    and tiny leaves), per-leaf scales (``None`` marks a raw leaf), and
+    the STORED byte count (payloads + scales) the ledger accounts."""
+    scheme: str
+    struct: Any
+    leaves: List[np.ndarray]
+    scales: List[Optional[np.ndarray]]
+    nbytes: int
+
+
+def _quantize_leaf(x: np.ndarray, scheme: str):
+    """-> (payload, scale | None). Non-float leaves and float leaves
+    under ``QUANT_MIN_ELEMS`` pass through raw (scale sidecars and
+    position vectors are precision-critical and save ~nothing)."""
+    if x.dtype.kind != "f" or x.size < QUANT_MIN_ELEMS:
+        return x, None
+    xf = np.asarray(x, np.float32)
+    if scheme == "int8":
+        scale = np.float32(np.abs(xf).max() / 127.0 + 1e-12)
+        q = np.clip(np.rint(xf / scale), -127, 127).astype(np.int8)
+        return q, np.asarray([scale], np.float32)
+    # fp8: blockwise over the flattened leaf, one scale per FP8_BLOCK
+    flat = xf.reshape(-1)
+    pad = (-flat.size) % FP8_BLOCK
+    if pad:
+        flat = np.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, FP8_BLOCK)
+    scale = (np.abs(blocks).max(axis=1, keepdims=True) / _FP8_MAX
+             + 1e-12).astype(np.float32)
+    q = (blocks / scale).astype(_FP8_DTYPE)
+    payload = q.reshape(-1)[:xf.size].reshape(xf.shape)
+    return payload, scale.reshape(-1)
+
+
+def _dequantize_leaf(payload: np.ndarray, scale, scheme: str):
+    if scale is None:
+        return payload
+    if scheme == "int8":
+        return payload.astype(np.float32) * np.float32(scale[0])
+    flat = payload.astype(np.float32).reshape(-1)
+    pad = (-flat.size) % FP8_BLOCK
+    if pad:
+        flat = np.pad(flat, (0, pad))
+    out = (flat.reshape(-1, FP8_BLOCK)
+           * scale.reshape(-1, 1).astype(np.float32)).reshape(-1)
+    return out[:payload.size].reshape(payload.shape)
+
+
+def quantize_tree(tree, scheme: str):
+    """Encode ``tree`` for a quantized tier. ``"fp32"`` and an
+    already-encoded tree return the input unchanged — a value is
+    quantized at most once, so demotion chains never accumulate
+    error."""
+    if scheme == "fp32" or isinstance(tree, QuantizedTree):
+        return tree
+    if scheme == "fp8" and _FP8_DTYPE is None:
+        scheme = "int8"
+    if scheme not in QUANT_SCHEMES:
+        raise ValueError(f"unknown quantization scheme {scheme!r}")
+    payloads, scales = [], []
+    for leaf in _leaves(tree):
+        p, s = _quantize_leaf(np.asarray(leaf), scheme)
+        payloads.append(p)
+        scales.append(s)
+    nb = sum(p.nbytes for p in payloads) \
+        + sum(s.nbytes for s in scales if s is not None)
+    return QuantizedTree(scheme=scheme, struct=_structure_of(tree),
+                         leaves=payloads, scales=scales, nbytes=int(nb))
+
+
+def dequantize_tree(value):
+    """Stored representation -> the raw pytree ``get`` returns (fp32
+    within the scheme's error bound; raw trees pass through)."""
+    if not isinstance(value, QuantizedTree):
+        return value
+    leaves = [_dequantize_leaf(p, s, value.scheme)
+              for p, s in zip(value.leaves, value.scales)]
+    return _unflatten(value.struct, leaves)
+
+
+def stored_nbytes(value) -> int:
+    """Bytes the value occupies in its CURRENT representation — what
+    the tier ledger and eviction candidates must account."""
+    if isinstance(value, QuantizedTree):
+        return value.nbytes
+    return tree_nbytes(value)
+
+
+def quant_error_bound(x, scheme: str) -> float:
+    """Worst-case per-element abs error of one quantize/dequantize
+    round trip of ``x`` (test helper)."""
+    m = float(np.abs(np.asarray(x, np.float32)).max())
+    if scheme == "int8":
+        return m / 127.0 * 0.51 + 1e-9
+    return m * 0.08 + 1e-9      # e4m3: <= 2^-4 relative + scale margin
+
+
 def _leaves(tree):
     if isinstance(tree, dict):
         for _, v in sorted(tree.items()):
@@ -99,20 +255,40 @@ class LoadInfo:
     tier: str
     seconds_measured: float     # wall time actually spent in this process
     seconds_modeled: float      # bandwidth-model cost (GPU deployment)
-    nbytes: int
+    nbytes: int                 # STORED bytes moved (quantized if the
+                                # source tier quantizes)
+    t0: float = 0.0             # perf_counter window of the load, for
+    t1: float = 0.0             # overlap-aware merging (t1 > t0)
 
 
 def merge_load_infos(infos) -> Optional[LoadInfo]:
     """Aggregate per-layer LoadInfos into one variant-level record:
-    deepest tier touched, seconds and bytes summed."""
+    deepest tier touched, bytes and modeled seconds summed (the
+    bandwidth model is serial per link), measured seconds as the
+    INTERVAL UNION of the per-load ``[t0, t1)`` windows — per-layer
+    loads run concurrently on the per-tier lanes, so summing their
+    durations double-counts overlapped wall time and could report more
+    measured time than actually elapsed. Infos without interval stamps
+    (hand-built) fall back to summing their durations."""
     infos = [i for i in infos if i is not None]
     if not infos:
         return None
     tier = max((i.tier for i in infos), key=TIER_RANK.__getitem__)
+    spans = sorted((i.t0, i.t1) for i in infos if i.t1 > i.t0)
+    measured = sum(i.seconds_measured for i in infos if i.t1 <= i.t0)
+    end: Optional[float] = None
+    for lo, hi in spans:
+        if end is None or lo > end:
+            measured += hi - lo
+        elif hi > end:
+            measured += hi - end
+        end = hi if end is None else max(end, hi)
     return LoadInfo(tier,
-                    sum(i.seconds_measured for i in infos),
+                    measured,
                     sum(i.seconds_modeled for i in infos),
-                    sum(i.nbytes for i in infos))
+                    sum(i.nbytes for i in infos),
+                    t0=spans[0][0] if spans else 0.0,
+                    t1=end if end is not None else 0.0)
 
 
 @dataclass
@@ -135,15 +311,35 @@ class TieredStore:
     def __init__(self, hbm_bytes: int, cpu_bytes: int, ssd_dir: str,
                  start_worker: bool = True,
                  policy: Optional[EvictionPolicy] = None,
-                 workers: int = 1):
+                 workers: int = 1,
+                 tier_dtypes: Optional[Dict[str, str]] = None):
         self.caps = {"hbm": hbm_bytes, "cpu": cpu_bytes}
         self.used = {"hbm": 0, "cpu": 0, "ssd": 0}
         self.hbm: Dict[str, Any] = {}
         self.cpu: Dict[str, Any] = {}
         self.ssd_dir = ssd_dir
         os.makedirs(ssd_dir, exist_ok=True)
+        # per-tier storage schemes (module docstring "Quantized tiers"):
+        # HBM always holds raw fp32; cpu/ssd default to the legacy
+        # bit-exact pass-through unless configured to quantize
+        self.tier_dtypes = {"hbm": "fp32", "cpu": "fp32", "ssd": "fp32"}
+        for t, s in (tier_dtypes or {}).items():
+            if t not in ("cpu", "ssd"):
+                raise ValueError(f"tier_dtypes: unknown tier {t!r}")
+            if s not in QUANT_SCHEMES:
+                raise ValueError(f"tier_dtypes: unknown scheme {s!r}")
+            if s == "fp8" and _FP8_DTYPE is None:
+                s = "int8"           # ml_dtypes absent: degrade, never fail
+            self.tier_dtypes[t] = s
         self.sizes: Dict[str, int] = {}
         self.lru: Dict[str, float] = {}
+        # per-key write generation: ``get`` snapshots it at the hit and
+        # ``_promote`` refuses to install a value whose key was deleted
+        # or overwritten while the (lock-free) slow read was in flight —
+        # without it a concurrent ``put`` could be resurrected over by
+        # the stale value, and a concurrent ``delete`` undone
+        self._gen: Dict[str, int] = {}
+        self._gen_counter = itertools.count(1)
         # pin counts: pool-resident chunk caches are read by every
         # hitting prefill's compute pass, so demotion skips them (one
         # count per pool-resident run referencing the key). Pins are
@@ -162,7 +358,8 @@ class TieredStore:
         self.lock = threading.RLock()
         self.stats = {"hits": {"hbm": 0, "cpu": 0, "ssd": 0},
                       "demotions": 0, "promotions": 0,
-                      "preload_errors": 0, "prefetch_cancelled": 0}
+                      "preload_errors": 0, "prefetch_cancelled": 0,
+                      "quant_bytes_saved": 0, "dequant_loads": 0}
         # ssd residency ledger: key -> bytes accounted in used["ssd"]
         self.ssd_keys: Dict[str, int] = {}
         self._structs: Dict[str, Any] = {}
@@ -213,21 +410,37 @@ class TieredStore:
                 os.remove(p)
 
     # ---- placement -------------------------------------------------------
+    def _encode(self, tier: str, value):
+        """Encode ``value`` for ``tier``'s storage scheme and account
+        the bytes saved (already-encoded trees pass through — a value
+        is quantized at most once)."""
+        enc = quantize_tree(value, self.tier_dtypes.get(tier, "fp32"))
+        if isinstance(enc, QuantizedTree) \
+                and not isinstance(value, QuantizedTree):
+            self.stats["quant_bytes_saved"] += tree_nbytes(value) - enc.nbytes
+        return enc
+
     def put(self, key: str, value, prefer: str = "hbm") -> str:
-        nb = tree_nbytes(value)
         with self.lock:
             self._unplace(key)
-            self.sizes[key] = nb
+            self._gen[key] = next(self._gen_counter)
             self.lru[key] = time.monotonic()
-            if prefer == "hbm" and self._make_room("hbm", nb):
-                self.hbm[key] = value
-                self.used["hbm"] += nb
-                return "hbm"
-            if prefer in ("hbm", "cpu") and self._make_room("cpu", nb):
-                self.cpu[key] = value
-                self.used["cpu"] += nb
-                return "cpu"
-            self._write_ssd(key, value)
+            if prefer == "hbm":
+                nb = tree_nbytes(value)
+                if self._make_room("hbm", nb):
+                    self.hbm[key] = value
+                    self.sizes[key] = nb
+                    self.used["hbm"] += nb
+                    return "hbm"
+            if prefer in ("hbm", "cpu"):
+                enc = self._encode("cpu", value)
+                nb = stored_nbytes(enc)
+                if self._make_room("cpu", nb):
+                    self.cpu[key] = enc
+                    self.sizes[key] = nb
+                    self.used["cpu"] += nb
+                    return "cpu"
+            self._write_ssd(key, self._encode("ssd", value))
         return "ssd"
 
     def pin(self, key: str):
@@ -248,11 +461,18 @@ class TieredStore:
     def _pinned(self, key: str) -> bool:
         return key in self.pins or self.group_fn(key) in self.pins
 
-    def _candidate(self, key: str) -> Candidate:
+    def _candidate(self, key: str, value=None) -> Candidate:
         freq, cost = (0.0, 1.0)
         if self.stats_fn is not None:
             freq, cost = self.stats_fn(key)
-        return Candidate(key=key, nbytes=self.sizes.get(key, 1),
+        nb = self.sizes.get(key)
+        if nb is None:
+            # never default a missing size to 1 byte: GDSF prices
+            # candidates by cost/size, so a 1-byte default inflates the
+            # priority ~1e6x and makes the key effectively unevictable.
+            # Fall back to the value's real stored bytes instead.
+            nb = stored_nbytes(value) if value is not None else 0
+        return Candidate(key=key, nbytes=nb,
                          last_access=self.lru.get(key, 0.0),
                          reuse_freq=freq, recompute_cost=cost)
 
@@ -262,7 +482,8 @@ class TieredStore:
         store = self.hbm if tier == "hbm" else self.cpu
         while self.used[tier] + nb > self.caps[tier]:
             victim = self.policy.select(
-                self._candidate(k) for k in store if not self._pinned(k))
+                self._candidate(k, v) for k, v in store.items()
+                if not self._pinned(k))
             if victim is None:
                 return False
             self._demote(victim.key, tier)
@@ -270,19 +491,21 @@ class TieredStore:
 
     def _demote(self, key: str, tier: str):
         self.stats["demotions"] += 1
-        nb = self.sizes[key]
         if tier == "hbm":
             val = self.hbm.pop(key)
-            self.used["hbm"] -= nb
+            self.used["hbm"] -= self.sizes[key]
+            enc = self._encode("cpu", val)
+            nb = stored_nbytes(enc)
             if self._make_room("cpu", nb):
-                self.cpu[key] = val
+                self.cpu[key] = enc
+                self.sizes[key] = nb
                 self.used["cpu"] += nb
             else:
-                self._write_ssd(key, val)
+                self._write_ssd(key, self._encode("ssd", enc))
         else:
             val = self.cpu.pop(key)
-            self.used["cpu"] -= nb
-            self._write_ssd(key, val)
+            self.used["cpu"] -= self.sizes[key]
+            self._write_ssd(key, self._encode("ssd", val))
 
     def flush(self):
         """Demote everything demotable to SSD (bench/test helper: stage
@@ -302,37 +525,73 @@ class TieredStore:
     def _write_ssd(self, key: str, value):
         """Idempotent in the accounting: rewriting an existing key
         replaces its ``used["ssd"]`` contribution instead of inflating
-        it. The pytree structure and byte size are embedded in the file
-        so a fresh store over this ``ssd_dir`` can reload the entry."""
+        it. The pytree structure, STORED byte size, and quantization
+        scheme are embedded in the file (``__struct__``/``__nbytes__``/
+        ``__scheme__``; per-leaf scales as ``s<i>`` next to the ``a<i>``
+        payloads) so a fresh store over this ``ssd_dir`` can reload the
+        entry; legacy fp32 files simply lack the quant members."""
         flat = {}
-        for i, leaf in enumerate(_leaves(value)):
-            flat[f"a{i}"] = np.asarray(leaf)
-        struct = _structure_of(value)
-        nb = self.sizes.get(key, tree_nbytes(value))
+        scheme = "fp32"
+        if isinstance(value, QuantizedTree):
+            scheme = value.scheme
+            struct = value.struct
+            for i, (p, s) in enumerate(zip(value.leaves, value.scales)):
+                # fp8 payloads persist as uint8 views: npz headers only
+                # round-trip builtin numpy dtypes
+                flat[f"a{i}"] = p.view(np.uint8) \
+                    if s is not None and scheme == "fp8" else p
+                if s is not None:
+                    flat[f"s{i}"] = s
+        else:
+            for i, leaf in enumerate(_leaves(value)):
+                flat[f"a{i}"] = np.asarray(leaf)
+            struct = _structure_of(value)
+        nb = stored_nbytes(value)
         flat["__struct__"] = np.frombuffer(
             json.dumps(struct).encode(), np.uint8)
         flat["__nbytes__"] = np.int64(nb)
+        flat["__scheme__"] = np.frombuffer(scheme.encode(), np.uint8)
         np.savez(self._ssd_path(key), **flat)
         with self.lock:
+            self.sizes[key] = nb
             self.used["ssd"] += nb - self.ssd_keys.get(key, 0)
             self.ssd_keys[key] = nb
             self._structs[key] = struct
 
     def _read_ssd(self, key: str):
+        """-> stored representation (raw pytree for fp32/legacy files,
+        ``QuantizedTree`` for quantized ones) or ``None`` (miss)."""
         with np.load(self._ssd_path(key)) as z:
+            files = set(z.files)
             struct = self._structs.get(key)
             if struct is None:
-                if "__struct__" not in z.files:
+                if "__struct__" not in files:
                     # pre-persistence file from a dead process: the
                     # pytree structure is unrecoverable — miss, not a
                     # KeyError crash (the scan never registers these)
                     return None
                 struct = json.loads(bytes(z["__struct__"]).decode())
                 self._structs[key] = struct
-            leaves = [z[f"a{i}"]
-                      for i in range(sum(1 for f in z.files
-                                         if not f.startswith("__")))]
-        return _unflatten(struct, leaves)
+            scheme = bytes(z["__scheme__"]).decode() \
+                if "__scheme__" in files else "fp32"
+            if scheme == "fp8" and _FP8_DTYPE is None:
+                return None     # pragma: no cover - fp8 file, no ml_dtypes
+            n = sum(1 for f in files if f.startswith("a"))
+            leaves: List[np.ndarray] = []
+            scales: List[Optional[np.ndarray]] = []
+            for i in range(n):
+                p = z[f"a{i}"]
+                s = z[f"s{i}"] if f"s{i}" in files else None
+                if s is not None and scheme == "fp8":
+                    p = p.view(_FP8_DTYPE)
+                leaves.append(p)
+                scales.append(s)
+        if scheme == "fp32":
+            return _unflatten(struct, leaves)
+        nb = sum(p.nbytes for p in leaves) \
+            + sum(s.nbytes for s in scales if s is not None)
+        return QuantizedTree(scheme=scheme, struct=struct, leaves=leaves,
+                             scales=scales, nbytes=int(nb))
 
     def _scan_ssd_dir(self):
         """Restart recovery: register every self-describing ``.npz``
@@ -374,45 +633,67 @@ class TieredStore:
     def get(self, key: str, promote: bool = True
             ) -> Tuple[Any, Optional[LoadInfo]]:
         t0 = time.perf_counter()
+        src = None
         with self.lock:
             if key in self.hbm:
                 self.lru[key] = time.monotonic()
                 self.stats["hits"]["hbm"] += 1
                 return self.hbm[key], LoadInfo("hbm", 0.0, 0.0,
                                                self.sizes[key])
-            val = self.cpu.get(key)
-        if val is not None:
-            if self.load_delay_s:
-                time.sleep(self.load_delay_s)
-            nb = self.sizes[key]
-            info = LoadInfo("cpu", time.perf_counter() - t0,
-                            nb / (CPU_TO_HBM_GBPS * 1e9), nb)
-            self.stats["hits"]["cpu"] += 1
-            if promote:
-                self._promote(key, val)
-            return val, info
-        if key in self.ssd_keys and os.path.exists(self._ssd_path(key)):
-            val = self._read_ssd(key)
-            if val is None:                    # unreadable legacy file
+            # snapshot everything the slow path needs UNDER the lock
+            # (sizes read + generation token): a concurrent ``delete``
+            # can no longer KeyError us and a concurrent ``put`` can no
+            # longer be clobbered by a stale promote (gen check below)
+            gen = self._gen.get(key)
+            enc = self.cpu.get(key)
+            if enc is not None:
+                src, nb = "cpu", self.sizes[key]
+            elif key in self.ssd_keys:
+                src, nb = "ssd", self.sizes.get(key, self.ssd_keys[key])
+            if src is not None:
+                # EVERY hit advances the LRU clock, promoted or not —
+                # with the clock only in the hbm branch and ``_promote``
+                # layer-streamed (promote=False) reads looked idle to
+                # the eviction policy and hot variants demoted first
+                self.lru[key] = time.monotonic()
+        if src is None:
+            return None, None
+        if src == "ssd":
+            if not os.path.exists(self._ssd_path(key)):
                 return None, None
-            if self.load_delay_s:
-                time.sleep(self.load_delay_s)
-            nb = self.sizes.get(key, tree_nbytes(val))
-            info = LoadInfo("ssd", time.perf_counter() - t0,
-                            nb / (SSD_GBPS * 1e9), nb)
-            self.stats["hits"]["ssd"] += 1
-            if promote:
-                self._promote(key, val)
-            return val, info
-        return None, None
-
-    def _promote(self, key: str, val):
+            try:
+                enc = self._read_ssd(key)
+            except OSError:            # racing delete unlinked the file
+                enc = None
+            if enc is None:            # unreadable legacy file
+                return None, None
+        if self.load_delay_s:
+            time.sleep(self.load_delay_s)
+        if isinstance(enc, QuantizedTree):
+            self.stats["dequant_loads"] += 1
+        val = dequantize_tree(enc)
+        gbps = CPU_TO_HBM_GBPS if src == "cpu" else SSD_GBPS
         with self.lock:
-            nb = self.sizes.get(key, tree_nbytes(val))
+            self.stats["hits"][src] += 1
+        t1 = time.perf_counter()
+        info = LoadInfo(src, t1 - t0, nb / (gbps * 1e9), nb,
+                        t0=t0, t1=t1)
+        if promote:
+            self._promote(key, val, gen=gen)
+        return val, info
+
+    def _promote(self, key: str, val, gen: Optional[int] = None):
+        with self.lock:
+            if gen is not None and self._gen.get(key) != gen:
+                # key deleted or overwritten while the lock-free read
+                # was in flight: installing ``val`` would resurrect a
+                # stale value over the newer state — drop it
+                return
+            nb = tree_nbytes(val)      # HBM holds the raw fp32 value
             if key not in self.hbm and self._make_room("hbm", nb):
                 if key in self.cpu:
                     self.cpu.pop(key)
-                    self.used["cpu"] -= nb
+                    self.used["cpu"] -= self.sizes.get(key, 0)
                 if key in self.ssd_keys:
                     # reconcile: the HBM copy supersedes the SSD one —
                     # without this the stale file stayed counted forever
@@ -421,6 +702,7 @@ class TieredStore:
                     if os.path.exists(p):
                         os.remove(p)
                 self.hbm[key] = val
+                self.sizes[key] = nb
                 self.used["hbm"] += nb
                 self.stats["promotions"] += 1
                 self.lru[key] = time.monotonic()
@@ -428,6 +710,9 @@ class TieredStore:
     def delete(self, key: str):
         with self.lock:
             self._unplace(key)
+            # bump (never pop) the generation: an in-flight get/promote
+            # of this key must observe the change and drop its value
+            self._gen[key] = next(self._gen_counter)
             self.sizes.pop(key, None)
             self.lru.pop(key, None)
             self.pins.pop(key, None)

@@ -175,6 +175,11 @@ class EngineStats:
     clock: float = 0.0
     load_hidden_s: float = 0.0
     load_exposed_s: float = 0.0
+    # quantized-tier capacity effect (core.tiers "Quantized tiers"):
+    # raw-minus-stored bytes across every demotion encode, and how many
+    # tier reads paid a dequant on the worker lanes
+    tier_quant_bytes_saved: int = 0
+    tier_dequant_loads: int = 0
 
 
 class Engine:
@@ -886,4 +891,10 @@ class Engine:
         self.stats.clock = self.clock
         self.stats.failed = sum(1 for r in requests
                                 if r.state == State.FAILED)
+        if self.store is not None and self.store.tiers is not None:
+            tstats = self.store.tiers.stats
+            self.stats.tier_quant_bytes_saved = \
+                int(tstats.get("quant_bytes_saved", 0))
+            self.stats.tier_dequant_loads = \
+                int(tstats.get("dequant_loads", 0))
         return self.stats

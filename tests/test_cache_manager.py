@@ -410,8 +410,16 @@ def test_streamed_prefill_overlaps_load_with_compute(tiny_world,
     # per-layer compute >> per-layer load the schedule streams from
     # depth 1 (the deepest possible overlap)
     ex._t_layer_s = 1.0
+    import time as _time
+    _t0 = _time.perf_counter()
     rs = ex.process(sys_t, [kb[1], kb[0], kb[2]], q2)
+    _wall = _time.perf_counter() - _t0
     assert rs.streamed and rs.load_trace is not None
+    # interval-union merged measured load can never exceed the elapsed
+    # wall clock (summing concurrent per-layer lane loads used to
+    # double-count overlapped time)
+    assert rs.load_seconds_measured <= _wall + 1e-6, \
+        (rs.load_seconds_measured, _wall)
     windows = rs.load_trace["windows"]
     assert len(windows) == cfg.num_layers      # one await point per layer
     lp = rs.preload_depth_used

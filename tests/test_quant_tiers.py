@@ -1,0 +1,250 @@
+"""Quantized chunk-cache tiers (core.tiers "Quantized tiers").
+
+Deterministic coverage of the quantize-on-demote / dequantize-on-
+promote codec and its honest STORED-bytes ledger, plus the satellite
+bugfixes that a value-changing demotion path would have amplified:
+LRU-clock advance on every hit, the locked hit->promote snapshot, the
+real-size eviction-candidate fallback, and interval-union load-time
+merging. (The hypothesis round-trip property lives in
+test_tiers_properties.py and engages when the dev-dep is installed;
+these tests always run.)
+"""
+import json
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.eviction import LRUPolicy
+from repro.core.tiers import (FP8_BLOCK, QUANT_MIN_ELEMS, LoadInfo,
+                              QuantizedTree, TieredStore, dequantize_tree,
+                              merge_load_infos, quant_error_bound,
+                              quantize_tree, stored_nbytes, tree_nbytes)
+
+
+def _kv(seed=0, T=24, fill=None):
+    rng = np.random.default_rng(seed)
+    if fill is not None:
+        k = np.full((2, T, 2, 4), float(fill), np.float32)
+        return {"k": k, "v": k.copy()}
+    return {"k": rng.standard_normal((2, T, 2, 4)).astype(np.float32),
+            "v": rng.standard_normal((2, T, 2, 4)).astype(np.float32)}
+
+
+def _conserved(ts):
+    for tier, store in (("hbm", ts.hbm), ("cpu", ts.cpu),
+                        ("ssd", ts.ssd_keys)):
+        assert ts.used[tier] == sum(ts.sizes[k] for k in store), tier
+
+
+# ---- codec -----------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme", ["int8", "fp8"])
+def test_quantize_round_trip_within_error_bound(scheme):
+    tree = _kv(1)
+    q = quantize_tree(tree, scheme)
+    assert isinstance(q, QuantizedTree) and q.scheme in ("int8", "fp8")
+    assert q.nbytes < tree_nbytes(tree) / 3      # ~4x smaller + scales
+    out = dequantize_tree(q)
+    for name in ("k", "v"):
+        err = float(np.abs(out[name] - tree[name]).max())
+        assert err <= quant_error_bound(tree[name], scheme), (name, err)
+
+
+def test_quantize_is_at_most_once_and_fp32_is_identity():
+    tree = _kv(2)
+    assert quantize_tree(tree, "fp32") is tree
+    q = quantize_tree(tree, "int8")
+    # an already-encoded tree passes any further demotion unchanged, so
+    # cpu -> ssd -> cpu round trips never accumulate error
+    assert quantize_tree(q, "fp8") is q
+    assert quantize_tree(q, "int8") is q
+    with pytest.raises(ValueError):
+        quantize_tree(tree, "int4")
+
+
+def test_small_and_integer_leaves_pass_through_raw():
+    tree = {"kv": np.ones((4, QUANT_MIN_ELEMS), np.float32),
+            "scale_sidecar": np.full(QUANT_MIN_ELEMS - 1, 0.37,
+                                     np.float32),
+            "pos": np.arange(QUANT_MIN_ELEMS, dtype=np.int32)}
+    q = quantize_tree(tree, "int8")
+    out = dequantize_tree(q)
+    # precision-critical sidecars and int leaves are bit-exact
+    np.testing.assert_array_equal(out["scale_sidecar"],
+                                  tree["scale_sidecar"])
+    np.testing.assert_array_equal(out["pos"], tree["pos"])
+    assert out["kv"].dtype == np.float32
+    # the big float leaf WAS quantized
+    raw = sum(s is None for s in q.scales)
+    assert raw == 2 and len(q.scales) == 3
+
+
+def test_fp8_blockwise_scales_shape():
+    x = {"k": np.linspace(-4, 4, 3 * FP8_BLOCK + 7,
+                          dtype=np.float32)}
+    q = quantize_tree(x, "fp8")
+    if q.scheme == "int8":       # ml_dtypes absent: documented fallback
+        pytest.skip("ml_dtypes unavailable; fp8 degraded to int8")
+    assert q.scales[0].shape == (4,)             # ceil(blocks)
+    assert q.leaves[0].shape == x["k"].shape     # payload keeps shape
+    out = dequantize_tree(q)
+    err = float(np.abs(out["k"] - x["k"]).max())
+    assert err <= quant_error_bound(x["k"], "fp8")
+
+
+def test_stored_nbytes_tracks_representation():
+    tree = _kv(3)
+    assert stored_nbytes(tree) == tree_nbytes(tree)
+    q = quantize_tree(tree, "int8")
+    assert stored_nbytes(q) == q.nbytes \
+        == sum(p.nbytes for p in q.leaves) \
+        + sum(s.nbytes for s in q.scales if s is not None)
+
+
+# ---- tiered store: ledger + round trips ------------------------------------
+
+def test_tier_dtypes_validation(tmp_path):
+    with pytest.raises(ValueError):
+        TieredStore(1, 1, str(tmp_path / "a"), start_worker=False,
+                    tier_dtypes={"hbm": "int8"})   # HBM stays fp32
+    with pytest.raises(ValueError):
+        TieredStore(1, 1, str(tmp_path / "b"), start_worker=False,
+                    tier_dtypes={"cpu": "int4"})
+
+
+def test_demote_encodes_and_ledger_counts_stored_bytes(tmp_path):
+    tree = _kv(4)
+    nb_raw = tree_nbytes(tree)
+    ts = TieredStore(1 << 20, 1 << 20, str(tmp_path), start_worker=False,
+                     tier_dtypes={"cpu": "int8", "ssd": "int8"})
+    ts.put("a", tree)
+    assert ts.sizes["a"] == nb_raw               # HBM holds raw fp32
+    _conserved(ts)
+    ts._demote("a", "hbm")
+    assert ts.where("a") == "cpu"
+    assert ts.sizes["a"] < nb_raw / 3            # quantized cpu bytes
+    assert ts.stats["quant_bytes_saved"] == nb_raw - ts.sizes["a"]
+    _conserved(ts)
+    ts._demote("a", "cpu")
+    assert ts.where("a") == "ssd"
+    # quantized sizes ledger == the bytes actually on disk
+    with np.load(ts._ssd_path("a")) as z:
+        payload = sum(z[f].nbytes for f in z.files
+                      if not f.startswith("__"))
+    assert ts.sizes["a"] == payload == ts.ssd_keys["a"]
+    _conserved(ts)
+    # promote round trip: raw fp32 back in HBM, within the error bound
+    out, info = ts.get("a")
+    assert ts.where("a") == "hbm"
+    assert ts.sizes["a"] == nb_raw               # ledger re-inflated
+    assert info.nbytes == payload                # STORED bytes moved
+    _conserved(ts)
+    for name in ("k", "v"):
+        err = float(np.abs(out[name] - tree[name]).max())
+        assert err <= quant_error_bound(tree[name], "int8"), name
+    assert ts.stats["dequant_loads"] == 1
+
+
+def test_quantized_npz_survives_restart_and_legacy_fp32_loads(tmp_path):
+    tree = _kv(5)
+    ts = TieredStore(1 << 20, 1 << 20, str(tmp_path), start_worker=False,
+                     tier_dtypes={"ssd": "int8"})
+    ts.put("q", tree, prefer="ssd")
+    # legacy file: a{i} + __struct__/__nbytes__ only, no scheme/scales
+    # (exactly what pre-quantization processes wrote)
+    legacy = {"a0": tree["k"], "a1": tree["v"]}
+    legacy["__struct__"] = np.frombuffer(
+        json.dumps({"k": None, "v": None}).encode(), np.uint8)
+    legacy["__nbytes__"] = np.int64(tree_nbytes(tree))
+    np.savez(os.path.join(str(tmp_path), "old.npz"), **legacy)
+
+    ts2 = TieredStore(1 << 20, 1 << 20, str(tmp_path), start_worker=False)
+    assert ts2.where("q") == "ssd" and ts2.where("old") == "ssd"
+    qv, _ = ts2.get("q", promote=False)
+    for name in ("k", "v"):
+        err = float(np.abs(qv[name] - tree[name]).max())
+        assert err <= quant_error_bound(tree[name], "int8"), name
+    ov, _ = ts2.get("old", promote=False)        # legacy = bit-exact
+    np.testing.assert_array_equal(ov["k"], tree["k"])
+    np.testing.assert_array_equal(ov["v"], tree["v"])
+    _conserved(ts2)
+
+
+def test_fp32_default_stays_bit_exact(tmp_path):
+    tree = _kv(6)
+    ts = TieredStore(1 << 20, 1 << 20, str(tmp_path), start_worker=False)
+    ts.put("a", tree)
+    ts.flush()
+    assert ts.where("a") == "ssd"
+    out, _ = ts.get("a")
+    np.testing.assert_array_equal(out["k"], tree["k"])
+    assert ts.stats["quant_bytes_saved"] == 0
+    assert ts.stats["dequant_loads"] == 0
+
+
+# ---- satellite regressions -------------------------------------------------
+
+def test_promote_false_hits_advance_lru_clock(tmp_path):
+    """Regression: cpu/ssd hits with ``promote=False`` (the layer-
+    stream read path) never advanced ``self.lru``, so hot streamed
+    variants looked idle and were demoted first."""
+    nb = tree_nbytes(_kv(0))
+    ts = TieredStore(1, 2 * nb, str(tmp_path), start_worker=False,
+                     policy=LRUPolicy())
+    ts.put("hot", _kv(0, fill=1.0))    # hbm cap 1 byte -> lands on cpu
+    time.sleep(0.002)
+    ts.put("cold", _kv(0, fill=2.0))
+    time.sleep(0.002)
+    before = ts.lru["hot"]
+    _, info = ts.get("hot", promote=False)       # hbm full: no promote
+    assert info.tier == "cpu"
+    assert ts.lru["hot"] > before                # the clock moved
+    # and the touch is what saves it: the next put must evict "cold"
+    ts.put("new", _kv(0, fill=3.0))
+    assert ts.where("hot") == "cpu"
+    assert ts.where("cold") == "ssd"
+    _conserved(ts)
+
+
+def test_candidate_missing_size_uses_real_bytes(tmp_path):
+    """Regression: a missing size ledger entry defaulted the candidate
+    to 1 byte, inflating GDSF cost/size ~1e6x (unevictable)."""
+    tree = _kv(7)
+    ts = TieredStore(1 << 20, 1 << 20, str(tmp_path), start_worker=False)
+    ts.put("a", tree)
+    c = ts._candidate("a")
+    assert c.nbytes == tree_nbytes(tree)
+    del ts.sizes["a"]                  # simulate the unregistered key
+    c = ts._candidate("a", ts.hbm["a"])
+    assert c.nbytes == tree_nbytes(tree)         # real bytes, not 1
+    q = quantize_tree(tree, "int8")
+    assert ts._candidate("zz", q).nbytes == q.nbytes   # stored bytes
+
+
+def test_merge_load_infos_interval_union():
+    mk = lambda t0, t1: LoadInfo("cpu", t1 - t0, 0.0, 8, t0=t0, t1=t1)
+    # overlapping + disjoint + contained spans: union, not sum
+    m = merge_load_infos([mk(0.0, 1.0), mk(0.5, 1.5), mk(0.7, 0.9),
+                          mk(3.0, 3.5)])
+    assert abs(m.seconds_measured - 2.0) < 1e-12
+    assert m.t0 == 0.0 and m.t1 == 3.5
+    assert m.nbytes == 32
+    # unstamped infos (hand-built) fall back to summed durations
+    legacy = merge_load_infos([LoadInfo("ssd", 0.25, 0.0, 8),
+                               LoadInfo("cpu", 0.25, 0.0, 8)])
+    assert abs(legacy.seconds_measured - 0.5) < 1e-12
+    assert legacy.tier == "ssd"
+    # and a mixture counts each contribution once
+    mixed = merge_load_infos([mk(0.0, 1.0), LoadInfo("cpu", 0.25, 0.0, 8)])
+    assert abs(mixed.seconds_measured - 1.25) < 1e-12
+    assert merge_load_infos([]) is None
+
+
+def test_engine_surfaces_quant_stats(tmp_path):
+    """EngineStats carries the tier store's quant counters after run()
+    (smoke via the stats plumbing, no full engine workload needed)."""
+    from repro.serving.engine import EngineStats
+    s = EngineStats()
+    assert s.tier_quant_bytes_saved == 0 and s.tier_dequant_loads == 0

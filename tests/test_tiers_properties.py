@@ -132,3 +132,123 @@ def test_prefetch_never_resurrects_deleted_keys(ids):
     for key in KEYS:
         assert ts.where(key) is None
     assert ts.used == {"hbm": 0, "cpu": 0, "ssd": 0}
+
+
+# ---- hit/promote vs delete/put interleavings (quantized-tiers PR) ----------
+# ``get``'s slow path drops the lock during the (possibly delayed) load
+# and dequantize. Historically it then read ``self.sizes[key]`` outside
+# the lock — a concurrent ``delete`` raised KeyError on the lane worker
+# — and ``_promote`` happily installed the stale value over whatever a
+# concurrent ``put`` had just written. Now the size and a per-key
+# generation token are snapshotted under the lock at the hit, and
+# ``_promote`` drops values whose generation moved.
+
+def _cpu_resident(ts, key, val):
+    """Place ``key`` on the cpu tier of a store whose HBM fits it."""
+    ts.put(key, val)
+    ts._demote(key, "hbm")
+    assert ts.where(key) == "cpu"
+
+
+def test_delete_during_slow_get_neither_crashes_nor_resurrects():
+    import threading
+    ts = TieredStore(1 << 20, 1 << 20,
+                     tempfile.mkdtemp(prefix="cc-race-del-"),
+                     start_worker=False)
+    _cpu_resident(ts, "x", _val(1, 8))
+    ts.load_delay_s = 0.08
+    got = {}
+
+    def reader():
+        got["ret"] = ts.get("x")     # cpu hit; sleeps mid-flight
+
+    t = threading.Thread(target=reader)
+    t.start()
+    import time
+    time.sleep(0.02)
+    ts.delete("x")                   # interleaves with the in-flight get
+    t.join(timeout=5.0)
+    assert not t.is_alive()
+    val, info = got["ret"]
+    # the read raced the delete: whichever snapshot it took, it must not
+    # crash, and the delete must win durably (no stale resurrection)
+    if val is not None:
+        np.testing.assert_array_equal(val["k"], _val(1, 8)["k"])
+        assert info.tier == "cpu"
+    assert ts.where("x") is None
+    assert ts.used == {"hbm": 0, "cpu": 0, "ssd": 0}
+    _check_invariants(ts, {})
+
+
+def test_put_during_slow_get_is_not_clobbered_by_stale_promote():
+    import threading
+    ts = TieredStore(1 << 20, 1 << 20,
+                     tempfile.mkdtemp(prefix="cc-race-put-"),
+                     start_worker=False)
+    old, new = _val(1, 8), _val(2, 4)
+    _cpu_resident(ts, "x", old)
+    ts.load_delay_s = 0.08
+    got = {}
+
+    def reader():
+        got["ret"] = ts.get("x")
+
+    t = threading.Thread(target=reader)
+    t.start()
+    import time
+    time.sleep(0.02)
+    ts.put("x", new)                 # overwrite while the get sleeps
+    t.join(timeout=5.0)
+    assert not t.is_alive()
+    val, _info = got["ret"]
+    np.testing.assert_array_equal(val["k"], old["k"])   # snapshot read
+    # the stale promote must have been dropped: the store serves the
+    # NEW value with the NEW size accounting
+    cur, _ = ts.get("x", promote=False)
+    np.testing.assert_array_equal(cur["k"], new["k"])
+    assert ts.sizes["x"] == tree_nbytes(new)
+    _check_invariants(ts, {"x": new})
+
+
+# ---- quantized round-trip property (quantized-tiers PR) --------------------
+
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(16, 24)),
+                min_size=1, max_size=10),
+       st.sampled_from(["int8", "fp8"]))
+def test_quant_round_trip_preserves_ledger_and_values(puts, scheme):
+    """put(fp32) -> demote -> demote -> promote -> get: conservation
+    per tier, SSD ledger == real disk payload bytes, and dequantized KV
+    within the scheme's error bound."""
+    from repro.core.tiers import quant_error_bound, stored_nbytes
+    ts = TieredStore(1 << 20, 1 << 20,
+                     tempfile.mkdtemp(prefix=f"cc-qprop-{scheme}-"),
+                     start_worker=False,
+                     tier_dtypes={"cpu": scheme, "ssd": scheme})
+    alive = {}
+    for i, units in puts:
+        key = KEYS[i % len(KEYS)]
+        # big float leaves (>= 64 elems) so the codec actually engages
+        val = {"k": np.linspace(-1.0, 1.0, units * 16, dtype=np.float32)
+               .reshape(units, 16) * (i + 1)}
+        alive[key] = val
+        ts.put(key, val)
+    _check_invariants(ts, alive)
+    ts.flush()                       # hbm -> cpu -> ssd: everything deep
+    _check_invariants(ts, alive)
+    for key, val in alive.items():
+        assert ts.where(key) == "ssd"
+        # quantized sizes ledger == the bytes actually on disk
+        with np.load(ts._ssd_path(key)) as z:
+            payload = sum(z[f].nbytes for f in z.files
+                          if not f.startswith("__"))
+        assert ts.sizes[key] == payload == ts.ssd_keys[key]
+    for key, val in alive.items():
+        out, info = ts.get(key)      # promotes back to HBM
+        err = float(np.abs(out["k"] - val["k"]).max())
+        assert err <= quant_error_bound(val["k"], scheme), (key, err)
+        assert info.nbytes < tree_nbytes(val)   # stored bytes moved
+    _check_invariants(ts, alive)
+    for key in alive:
+        assert ts.where(key) == "hbm"
+        # HBM holds raw fp32 again: the ledger re-inflated on promote
+        assert ts.sizes[key] == tree_nbytes(alive[key])
