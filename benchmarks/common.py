@@ -8,6 +8,7 @@ checkpoint is cached under results/bench_model/.
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
 import time
@@ -25,6 +26,7 @@ from repro.core.chunkstore import ChunkStore                       # noqa
 from repro.core.prefill import CacheCraftExecutor, pack_cache      # noqa
 from repro.core.tiers import TieredStore                           # noqa
 from repro.models import model as M                                # noqa
+from repro.serving.api import EngineSpec, build_engine             # noqa
 from repro.serving.metrics import rouge_l_f1, relative_deviation   # noqa
 from repro.serving.rag import KnowledgeBase, Retriever, make_question  # noqa
 from repro.training import checkpoint as ckpt                      # noqa
@@ -82,6 +84,37 @@ def fresh_store(tmp_suffix: str, n=100, m=5, alpha=1.0,
     return ChunkStore(TieredStore(hbm, cpu, d, start_worker=False,
                                   tier_dtypes=tier_dtypes),
                       n_chunks=n, m_variants=m, alpha=alpha)
+
+
+def record_trajectory(fname, entry):
+    """Append one run's numbers to ``results/<fname>`` (a bench
+    trajectory: one JSON list entry per invocation, so regressions show
+    as a trend, not just a point)."""
+    path = os.path.join(os.path.dirname(__file__), "..", "results",
+                        fname)
+    history = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                history = json.load(f)
+        except (ValueError, OSError):
+            history = []
+    entry = dict(entry, run_index=len(history))
+    history.append(entry)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(history, f, indent=2)
+
+
+def make_engine(cfg, params, store, **spec_kw):
+    """Construct an ``Engine`` through the typed serving API
+    (``EngineSpec``/``build_engine``) with the bench cfg/params/store
+    injected — benchmarks hand in the trained model and their own
+    per-bench stores rather than letting the spec rebuild them.
+    ``spec_kw`` are ``EngineSpec`` fields (strategy, sched,
+    pool_blocks, ...)."""
+    return build_engine(EngineSpec(**spec_kw), cfg=cfg, params=params,
+                        store=store)
 
 
 def greedy_continue(cfg, params, res, n_tokens: int) -> List[int]:

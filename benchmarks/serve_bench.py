@@ -1,0 +1,196 @@
+"""Serve gate: the online HTTP front end vs offline ``Engine.run``.
+
+Boots a ``CacheCraftServer`` (background engine-stepping thread +
+stdlib HTTP API) on the trained tiny bench model and drives a
+multi-turn, mixed-tenant session trace over real HTTP with concurrent
+per-request stream readers, then replays the *same* trace offline
+through ``Engine.run`` on an identically-configured engine and store.
+
+The gate asserts the online path is a faithful serving front end, not
+a lookalike:
+
+* every streamed token sequence is bit-identical to the offline run's
+  output for the same request (sequential admission —
+  ``max_prefill_batch=1`` — keeps chunk-store evolution identical on
+  both sides; per-row decode isolation keeps tokens independent of
+  batch membership, so the real-time arrival interleave cannot drift
+  the bits);
+* one request is cancelled over HTTP mid-decode (after its second
+  streamed token): its stream must end in ``CANCELLED`` having
+  delivered a strict prefix of the offline (uncancelled) output, and
+  the pool must settle back to zero reserved blocks with the
+  conservation invariant (free + live == total) intact;
+* zero FAILED states, and the ``/stats`` per-tenant rollups report a
+  TTFT p99 and queue-wait p99 for every tenant in the trace with no
+  deadline expiries under the loose per-tenant SLOs.
+
+Numbers land in ``results/BENCH_serve.json`` (one trajectory entry per
+invocation) and in the ``serve`` gate of ``--ci-smoke``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import threading
+
+from benchmarks.common import (EngineSpec, build_engine, emit,
+                               fresh_store, get_trained_model,
+                               make_world, record_trajectory)
+from repro.serving.engine import EngineStats
+from repro.serving.request import State
+from repro.serving.scheduler import SchedulerConfig
+from repro.serving.server import CacheCraftServer, ServeClient
+from repro.serving.workload import TenantSpec, WorkloadConfig, generate
+
+N_REQ = 24                  # the acceptance floor: >= 24 HTTP requests
+CANCEL_RID = 4              # cancelled over HTTP after its 2nd token
+CANCEL_LONG = 96            # long decode so the cancel lands mid-decode
+
+TENANTS = (TenantSpec("gold", weight=3.0, deadline_s=120.0),
+           TenantSpec("free", weight=1.0, deadline_s=240.0))
+
+
+def _spec():
+    """Sequential-admission serving spec: one prefill per iteration and
+    FCFS keep store/variant evolution identical between the online
+    (real-time arrivals) and offline (all-queued) replays."""
+    return EngineSpec(
+        strategy="cachecraft", use_focus=False, pool_blocks=4096,
+        sched=SchedulerConfig(max_batch_tokens=8192, max_decode_batch=4,
+                              max_prefill_batch=1))
+
+
+def _trace(kb):
+    reqs = generate(kb, WorkloadConfig(
+        num_requests=N_REQ, qpm=1e9, seed=3, k_chunks=3,
+        max_new_tokens=6, turns=3, sessions=8, tenants=TENANTS))
+    reqs[CANCEL_RID].max_new_tokens = CANCEL_LONG
+    return reqs
+
+
+def _warm(eng, kb):
+    """Warm jit shapes AND the chunk store identically on both engines
+    (same warm trace), then zero the clock/stat state."""
+    eng.run(generate(kb, WorkloadConfig(num_requests=4, qpm=1e9, seed=9,
+                                        k_chunks=3, max_new_tokens=4)))
+    eng.clock = 0.0
+    eng.stats = EngineStats()
+    eng.counters.reset()
+
+
+def serve_gate() -> dict:
+    """Run the gate; returns the numbers ``ci_smoke`` checks."""
+    cfg, params = get_trained_model()
+    kb, _retr, _sys_t, _rng = make_world(cfg)
+
+    # ---- offline reference: same trace, cancelled request included to
+    # completion (its online stream must be a strict prefix of this)
+    ref_eng = build_engine(_spec(), cfg=cfg, params=params,
+                           store=fresh_store("serve-ref", n=40, m=4))
+    _warm(ref_eng, kb)
+    ref_reqs = _trace(kb)
+    ref_stats = ref_eng.run(ref_reqs)
+    assert ref_stats.failed == 0, "offline reference must not fail"
+    ref_out = {r.rid: list(r.output_tokens) for r in ref_reqs}
+
+    # ---- online: identical engine config + fresh identical store,
+    # served over real HTTP with one stream-reader thread per request
+    eng = build_engine(_spec(), cfg=cfg, params=params,
+                       store=fresh_store("serve-online", n=40, m=4))
+    _warm(eng, kb)
+    server = CacheCraftServer(eng)
+    server.start()
+    client = ServeClient(server.host, server.port)
+    streams: dict[int, list] = {}
+    states: dict[int, str] = {}
+    threads = []
+    try:
+        assert client.health()["ok"]
+
+        def reader(rid):
+            acc = []
+
+            def on_token(tok):
+                acc.append(tok)
+                # the mid-decode cancel: fired from the stream reader
+                # itself so it provably lands after tokens arrived
+                if rid == CANCEL_RID and len(acc) == 2:
+                    client.cancel(rid)
+
+            toks, state = client.stream(rid, on_token=on_token)
+            streams[rid], states[rid] = toks, state
+
+        for req in _trace(kb):
+            rid = client.submit(req)
+            t = threading.Thread(target=reader, args=(rid,), daemon=True)
+            t.start()
+            threads.append(t)
+        for t in threads:
+            t.join(timeout=300)
+        assert not any(t.is_alive() for t in threads), "stream stuck"
+        stats = client.stats()
+    finally:
+        server.shutdown()
+
+    # ---- the gate numbers
+    match = sum(streams[rid] == ref_out[rid]
+                for rid in range(N_REQ) if rid != CANCEL_RID)
+    c_toks = streams[CANCEL_RID]
+    cancel_prefix_ok = (
+        states[CANCEL_RID] == State.CANCELLED.value
+        and 2 <= len(c_toks) < CANCEL_LONG
+        and c_toks == ref_out[CANCEL_RID][:len(c_toks)])
+    pool = stats["pool"]
+    conserved = (pool["reserved_blocks"] == 0 and
+                 pool["free_blocks"] + pool["live_blocks"]
+                 == pool["num_blocks"])
+    tenants = stats["tenants"]
+    tenant_p99_ok = set(tenants) == {"gold", "free"} and all(
+        d["ttft_p99_s"] is not None and d["queue_wait_p99_s"] is not None
+        for d in tenants.values())
+    deadline_expired = sum(d["deadline_expired"]
+                           for d in tenants.values())
+    # terminal counts from the rollups (request states), not the racily
+    # read engine ints: ``EngineStats.failed`` is only recomputed by
+    # ``Engine.run`` — the online step path never sums it
+    out = dict(
+        n_req=N_REQ,
+        completed=sum(d["completed"] for d in tenants.values()),
+        failed=sum(d["failed"] for d in tenants.values()),
+        cancelled=sum(d["cancelled"] for d in tenants.values()),
+        streams_match=match, streams_expected=N_REQ - 1,
+        cancel_prefix_ok=bool(cancel_prefix_ok),
+        cancel_tokens=len(c_toks),
+        pool_conserved=bool(conserved),
+        reserved_after=pool["reserved_blocks"],
+        tenant_p99_ok=bool(tenant_p99_ok),
+        deadline_expired=deadline_expired,
+        **{f"ttft_p99_s_{k}": d["ttft_p99_s"]
+           for k, d in tenants.items()},
+        **{f"queue_wait_p99_s_{k}": d["queue_wait_p99_s"]
+           for k, d in tenants.items()})
+    out["ok"] = (
+        out["failed"] == 0
+        and out["completed"] == N_REQ - 1 and out["cancelled"] == 1
+        and match == N_REQ - 1
+        and cancel_prefix_ok and conserved and tenant_p99_ok
+        and deadline_expired == 0)
+    emit("serve_gate", float(out.get("ttft_p99_s_gold") or 0) * 1e6,
+         f"completed={out['completed']};cancelled={out['cancelled']};"
+         f"failed={out['failed']};streams_match={match}/{N_REQ - 1};"
+         f"cancel_prefix_ok={out['cancel_prefix_ok']};"
+         f"pool_conserved={out['pool_conserved']};"
+         f"deadline_expired={deadline_expired}")
+    record_trajectory("BENCH_serve.json", out)
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ci-smoke", action="store_true",
+                    help="run the serve gate and exit 1 on failure")
+    ap.parse_args()
+    res = serve_gate()
+    print(f"# serve gate: {'OK' if res['ok'] else 'FAIL'} {res}",
+          file=sys.stderr)
+    raise SystemExit(0 if res["ok"] else 1)

@@ -42,10 +42,15 @@ measured exposed load), the sharded lane (bit-equality + strictly
 fewer per-device KV bytes/attention FLOPs), and the quant lane
 (quantized-tier deep-miss *counts* at an equal byte budget from
 ``eviction_quant_compare`` + the ROUGE delta-vs-fp32 quality gate from
-``quant_quality_compare``, trajectory in ``results/BENCH_quant.json``)
-— all but the first count-based, immune to shared-runner timing noise)
-and writes the gate numbers to ``results/fig22_ci_smoke.json`` for the
-CI artifact upload.
+``quant_quality_compare``, trajectory in ``results/BENCH_quant.json``),
+and the serve lane (``benchmarks.serve_bench``: the online HTTP front
+end streams every token bit-identical to an offline ``Engine.run``
+replay of the same multi-turn mixed-tenant trace, survives a
+mid-decode HTTP cancel with the pool settled, and reports per-tenant
+p99 rollups; trajectory in ``results/BENCH_serve.json``) — all but the
+first count-based, immune to shared-runner timing noise) and writes
+the gate numbers to ``results/fig22_ci_smoke.json`` for the CI
+artifact upload.
 """
 from __future__ import annotations
 
@@ -57,8 +62,8 @@ import sys
 import numpy as np
 
 from benchmarks.common import emit, fresh_store, get_trained_model, \
-    make_world
-from repro.serving.engine import Engine, EngineStats
+    make_engine, make_world, record_trajectory as _record_trajectory
+from repro.serving.engine import EngineStats
 from repro.serving.metrics import queue_wait_p99, ttft_p99
 from repro.serving.rag import KnowledgeBase
 from repro.serving.request import Request, State
@@ -76,9 +81,8 @@ METHODS = {
 
 def _measure(cfg, params, store, sched, exkw, kb, n_req, qpm,
              warm_same: bool = False, workload_fn=None, **engine_kw):
-    eng = Engine(cfg, params, store, sched=sched, pool_blocks=4096,
-                 executor_kwargs=dict(store_fixed_variants=False, **exkw),
-                 **engine_kw)
+    eng = make_engine(cfg, params, store, sched=sched, pool_blocks=4096,
+                      store_fixed_variants=False, **exkw, **engine_kw)
 
     def make():
         if workload_fn is not None:
@@ -235,41 +239,20 @@ def _run_preemption_engine(cfg, params, kb, n_req, pool_blocks,
                            preempt_iters):
     """One starved-workload run; returns (engine, stats, reqs,
     last-decode-logits-per-rid)."""
-    eng = Engine(cfg, params, None,
-                 sched=SchedulerConfig(max_batch_tokens=100_000,
-                                       max_decode_batch=4,
-                                       max_prefill_batch=2,
-                                       preempt_after_iters=preempt_iters),
-                 pool_blocks=pool_blocks, decode_bucket_b=4,
-                 seq_bucket=512,
-                 executor_kwargs=dict(strategy="all", use_focus=False),
-                 trace_decode=True)
+    eng = make_engine(
+        cfg, params, None, strategy="all", use_focus=False,
+        sched=SchedulerConfig(max_batch_tokens=100_000,
+                              max_decode_batch=4,
+                              max_prefill_batch=2,
+                              preempt_after_iters=preempt_iters),
+        pool_blocks=pool_blocks, decode_bucket_b=4, seq_bucket=512,
+        trace_decode=True)
     reqs = _starved_workload(kb, n_req)
     stats = eng.run(reqs)
     last = {}
     for step_logits in eng.decode_trace:
         last.update(step_logits)
     return eng, stats, reqs, last
-
-
-def _record_trajectory(fname, entry):
-    """Append one run's numbers to ``results/<fname>`` (a bench
-    trajectory: one JSON list entry per invocation, so regressions show
-    as a trend, not just a point)."""
-    path = os.path.join(os.path.dirname(__file__), "..", "results",
-                        fname)
-    history = []
-    if os.path.exists(path):
-        try:
-            with open(path) as f:
-                history = json.load(f)
-        except (ValueError, OSError):
-            history = []
-    entry = dict(entry, run_index=len(history))
-    history.append(entry)
-    os.makedirs(os.path.dirname(path), exist_ok=True)
-    with open(path, "w") as f:
-        json.dump(history, f, indent=2)
 
 
 def _preemption_compare(cfg, params, kb, n_req, starved_blocks=20):
@@ -336,7 +319,7 @@ from repro.configs import get_tiny
 from repro.models import model as M
 from repro.models import backend as AB
 from repro.launch.mesh import make_serving_mesh
-from repro.serving.engine import Engine
+from repro.serving.api import EngineSpec, build_engine
 from repro.serving.rag import KnowledgeBase
 from repro.serving.scheduler import SchedulerConfig
 from repro.serving.workload import WorkloadConfig, generate
@@ -348,13 +331,13 @@ wl = WorkloadConfig(num_requests=4, qpm=1e9, seed=3, max_new_tokens=4)
 
 def run(mesh):
     AB.set_serving_mesh(None)
-    eng = Engine(cfg, params, None,
-                 sched=SchedulerConfig(max_batch_tokens=100_000,
-                                       max_decode_batch=8,
-                                       max_prefill_batch=4),
-                 pool_blocks=1024,
-                 executor_kwargs=dict(strategy="all", use_focus=False),
-                 trace_decode=True, mesh=mesh)
+    eng = build_engine(
+        EngineSpec(strategy="all", use_focus=False, pool_blocks=1024,
+                   sched=SchedulerConfig(max_batch_tokens=100_000,
+                                         max_decode_batch=8,
+                                         max_prefill_batch=4),
+                   trace_decode=True, mesh=mesh),
+        cfg=cfg, params=params, store=None)
     reqs = generate(kb, wl)
     stats = eng.run(reqs)
     return eng, reqs, stats
@@ -473,6 +456,13 @@ def ci_smoke() -> int:
       recompute ratio, with dequantized reads actually exercised
       (``dequant_loads > 0``). Trajectory in
       ``results/BENCH_quant.json``.
+    * serve — the online serving front end (``benchmarks.serve_bench``):
+      >= 24 multi-turn mixed-tenant requests over real HTTP with
+      streamed tokens bit-identical to the offline ``Engine.run``
+      replay, one mid-decode cancel delivering a strict prefix with
+      zero reserved blocks afterwards, zero FAILED, per-tenant TTFT /
+      queue-wait p99 rollups present. Trajectory in
+      ``results/BENCH_serve.json``.
 
     Gate numbers land in ``results/fig22_ci_smoke.json`` so CI can
     upload them as a workflow artifact."""
@@ -551,6 +541,14 @@ def ci_smoke() -> int:
              recompute_ratio=qq["int8"]["recompute"],
              dequant_loads=qq["int8"]["dequant_loads"]))
 
+    from benchmarks.serve_bench import serve_gate
+    # the online front end must be a faithful serving of Engine.run:
+    # every HTTP-streamed token sequence bit-identical to the offline
+    # replay, a mid-decode HTTP cancel delivering a strict prefix with
+    # the pool settled (zero reserved), per-tenant p99 rollups present
+    # (sv["ok"]; trajectory in results/BENCH_serve.json)
+    sv = serve_gate()
+
     sh = _sharded_compare()
     # bit-equality + strictly-fewer-per-device-work, all count-based:
     # the sharded engine must be a pure repartitioning of the same math
@@ -579,6 +577,7 @@ def ci_smoke() -> int:
         "sharded": dict(ok=ok_sharded, tokens_equal=sh["tokens_equal"],
                         logits_equal=sh["logits_equal"],
                         onedev=sh["onedev"], fourdev=sh["fourdev"]),
+        "serve": sv,
         "quant": dict(ok=ok_quant, capacity_fp32=evq["fp32"],
                       capacity_int8=evq["int8"],
                       rouge_fp32=qq["fp32"]["rouge"],
@@ -610,7 +609,8 @@ if __name__ == "__main__":
                          "bit-equality, eviction tier misses, preload "
                          "overlap, sharded bit-equality + per-device "
                          "FLOPs/bytes, quantized-tier capacity + "
-                         "quality delta); writes "
+                         "quality delta, online-serve HTTP streaming "
+                         "bit-equality + mid-decode cancel); writes "
                          "results/fig22_ci_smoke.json; exit 1 on any "
                          "gate failure")
     args = ap.parse_args()

@@ -5,8 +5,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import emit, fresh_store, get_trained_model, \
-    make_world
-from repro.serving.engine import Engine
+    make_engine, make_world
 from repro.serving.scheduler import SchedulerConfig
 from repro.serving.workload import WorkloadConfig, generate
 
@@ -15,11 +14,10 @@ def run(quick: bool = False):
     cfg, params = get_trained_model()
     kb, retr, sys_t, rng = make_world(cfg, n_chunks=32)
     store = fresh_store("trace", n=40, m=4)
-    eng = Engine(cfg, params, store,
-                 sched=SchedulerConfig(max_batch_tokens=4096,
-                                       max_decode_batch=4),
-                 pool_blocks=4096,
-                 executor_kwargs=dict(use_focus=True))
+    eng = make_engine(cfg, params, store,
+                      sched=SchedulerConfig(max_batch_tokens=4096,
+                                            max_decode_batch=4),
+                      pool_blocks=4096, use_focus=True)
     n = 12 if quick else 40
     reqs = generate(kb, WorkloadConfig(num_requests=n, qpm=1e9, seed=11,
                                        max_new_tokens=6, sessions=5))

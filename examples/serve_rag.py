@@ -8,7 +8,6 @@ Run: PYTHONPATH=src python examples/serve_rag.py [--requests 16]
 import argparse
 import os
 import sys
-import tempfile
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -16,10 +15,8 @@ import jax                                                     # noqa
 import numpy as np                                             # noqa
 
 from repro.configs import get_tiny                             # noqa
-from repro.core.chunkstore import ChunkStore                   # noqa
-from repro.core.tiers import TieredStore                       # noqa
 from repro.models import model as M                            # noqa
-from repro.serving.engine import Engine                        # noqa
+from repro.serving.api import EngineSpec, build_engine         # noqa
 from repro.serving.rag import KnowledgeBase                    # noqa
 from repro.serving.scheduler import SchedulerConfig            # noqa
 from repro.serving.workload import WorkloadConfig, generate    # noqa
@@ -37,15 +34,11 @@ def main():
 
     for name, strategy in (("full-recompute", "all"),
                            ("cache-craft", "cachecraft")):
-        store = None
-        if strategy != "all":
-            store = ChunkStore(
-                TieredStore(1 << 30, 1 << 30, tempfile.mkdtemp()), 100, 5)
-        eng = Engine(cfg, params, store,
-                     sched=SchedulerConfig(max_batch_tokens=4096,
-                                           max_decode_batch=4),
-                     pool_blocks=4096,
-                     executor_kwargs=dict(strategy=strategy))
+        eng = build_engine(
+            EngineSpec(strategy=strategy, pool_blocks=4096,
+                       sched=SchedulerConfig(max_batch_tokens=4096,
+                                             max_decode_batch=4)),
+            cfg=cfg, params=params)
         # warm jit caches (and the chunk store) before the timed trace,
         # as any serving deployment would
         warm = generate(kb, WorkloadConfig(num_requests=4, qpm=1e9,

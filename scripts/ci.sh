@@ -42,10 +42,17 @@
 #     (count-based), AND the quantized lane's ROUGE-L score stays
 #     within eps of the fp32 lane at an exactly matched recompute
 #     ratio with the dequant read path exercised,
+#   * online serving front end (benchmarks/serve_bench.py): >= 24
+#     multi-turn mixed-tenant requests over real HTTP with streamed
+#     tokens bit-identical to an offline Engine.run replay of the
+#     same trace, one mid-decode HTTP cancel delivering a strict
+#     prefix with the KV pool settled (zero reserved blocks), zero
+#     FAILED states, and per-tenant TTFT/queue-wait p99 rollups,
 # and writes results/fig22_ci_smoke.json for the CI artifact upload
 # (plus the preemption trajectory in results/BENCH_preemption.json,
-# the sharded trajectory in results/BENCH_sharded.json, and the quant
-# trajectory in results/BENCH_quant.json).
+# the sharded trajectory in results/BENCH_sharded.json, the quant
+# trajectory in results/BENCH_quant.json, and the serve trajectory in
+# results/BENCH_serve.json).
 # --smoke-only skips the pytest suite for fast local iteration on the
 # perf gates.
 set -euo pipefail
@@ -97,7 +104,8 @@ if [[ "$status" == "0" && "$perf_smoke" == "1" ]]; then
          "+ copy-vs-zerocopy shared-block gate + preemption gate" \
          "+ eviction tier-miss gate + layerwise-preload gate" \
          "+ sharded bit-equality/FLOPs gate" \
-         "+ quantized-tier capacity/quality gate)"
+         "+ quantized-tier capacity/quality gate" \
+         "+ online-serve HTTP streaming/cancel gate)"
     python -m benchmarks.throughput_latency --ci-smoke || status=$?
     echo "CI perf smoke exit status: $status"
 fi

@@ -1,0 +1,239 @@
+"""Typed engine construction: ``EngineSpec`` -> ``build_engine``.
+
+This is the ONE way engines are constructed — the launcher
+(``launch/serve.py``), the online server (``serving/server.py``), the
+benches (``benchmarks/common.py``), and the tests all go through it.
+Before this module, engine construction was smeared across call sites
+as an untyped executor-kwargs dict plus a dozen positional knobs; the
+dict survives one release as a deprecated ``Engine`` alias that warns
+and folds into the typed fields (see ``Engine.__init__``).
+
+``EngineSpec`` is a plain dataclass so call sites state exactly the
+fields they diverge on::
+
+    spec = EngineSpec(strategy="all", use_focus=False,
+                      pool_blocks=512,
+                      sched=SchedulerConfig(max_decode_batch=4))
+    eng = build_engine(spec, cfg=cfg, params=params)
+
+``build_engine`` validates the whole spec up front (unknown strategy /
+attention backend / tier dtype, non-positive capacities) so a typo
+fails at construction with a message naming the field, not three
+layers deep in the executor. ``cfg``/``params``/``store`` can be
+injected (tests share a module-scoped model; benches reuse the trained
+checkpoint and seed their own stores) — otherwise they are built from
+the spec: ``arch``/``tiny`` resolve the model config, ``seed`` or
+``params_path`` the parameters, and ``store`` (a ``StoreSpec``) the
+tiered chunk store, including quantized ``tier_dtypes``.
+"""
+from __future__ import annotations
+
+import tempfile
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, Optional
+
+from repro.serving.scheduler import SchedulerConfig
+
+STRATEGIES = ("cachecraft", "none", "random", "h2o", "prefix", "all")
+TIER_DTYPES = ("fp32", "int8", "fp8")
+_UNSET = object()
+
+
+@dataclass
+class StoreSpec:
+    """Chunk-store construction: tier capacities, variant caps, and the
+    per-tier storage codecs (``tier_dtypes``, e.g. ``{"cpu": "int8"}``).
+    ``ssd_dir=None`` creates a throwaway temp dir."""
+    hbm_bytes: int = 1 << 30
+    cpu_bytes: int = 1 << 30
+    ssd_dir: Optional[str] = None
+    n_chunks: int = 100
+    m_variants: int = 5
+    alpha: float = 1.0
+    start_worker: bool = True
+    tier_dtypes: Optional[Dict[str, str]] = None
+
+
+@dataclass
+class EngineSpec:
+    """Everything needed to build a serving engine, typed."""
+    # model identity (ignored when ``build_engine`` is given ``cfg`` /
+    # ``params`` directly)
+    arch: str = "llama3-8b"
+    tiny: bool = True
+    seed: int = 0
+    params_path: Optional[str] = None
+    # recompute strategy + executor behavior
+    strategy: str = "cachecraft"
+    use_focus: bool = True
+    force_recompute_fraction: Optional[float] = None
+    layerwise_load: bool = False
+    store_fixed_variants: bool = True
+    store_new_chunks: bool = True
+    fix_rpe: bool = True
+    fix_causality: bool = True
+    # attention backend / tensor-parallel serving mesh
+    attn_impl: Optional[str] = None
+    mesh: Any = None
+    # KV pool
+    pool_blocks: int = 4096
+    block_size: int = 16
+    # scheduler
+    sched: SchedulerConfig = field(default_factory=SchedulerConfig)
+    # engine knobs
+    decode_bucket_b: int = 4
+    seq_bucket: int = 64
+    time_scale: float = 1.0
+    incremental_decode: bool = True
+    share_chunk_kv: bool = True
+    trace_decode: bool = False
+    # chunk store (None -> no store, i.e. pure recompute serving)
+    store: Optional[StoreSpec] = field(default_factory=StoreSpec)
+
+    def validate(self):
+        """Fail fast with the offending field named. Returns self so
+        call sites can chain ``EngineSpec(...).validate()``."""
+        if self.strategy not in STRATEGIES:
+            raise ValueError(f"EngineSpec.strategy={self.strategy!r} "
+                             f"not in {STRATEGIES}")
+        if self.attn_impl is not None:
+            from repro.models.backend import BACKENDS
+            if self.attn_impl not in BACKENDS and \
+                    self.attn_impl != "auto":
+                raise ValueError(
+                    f"EngineSpec.attn_impl={self.attn_impl!r} not a "
+                    f"registered backend {sorted(BACKENDS)}")
+        if self.pool_blocks <= 0 or self.block_size <= 0:
+            raise ValueError(
+                f"EngineSpec pool_blocks/block_size must be positive "
+                f"(got {self.pool_blocks}/{self.block_size})")
+        if self.force_recompute_fraction is not None and \
+                not 0.0 <= self.force_recompute_fraction <= 1.0:
+            raise ValueError(
+                "EngineSpec.force_recompute_fraction="
+                f"{self.force_recompute_fraction} outside [0, 1]")
+        if not isinstance(self.sched, SchedulerConfig):
+            raise TypeError("EngineSpec.sched must be a SchedulerConfig, "
+                            f"got {type(self.sched).__name__}")
+        if self.store is not None:
+            if not isinstance(self.store, StoreSpec):
+                raise TypeError(
+                    "EngineSpec.store must be a StoreSpec or None, "
+                    f"got {type(self.store).__name__}")
+            for tier, dt in (self.store.tier_dtypes or {}).items():
+                if dt not in TIER_DTYPES:
+                    raise ValueError(
+                        f"StoreSpec.tier_dtypes[{tier!r}]={dt!r} not in "
+                        f"{TIER_DTYPES}")
+            if self.store.hbm_bytes <= 0 or self.store.cpu_bytes <= 0:
+                raise ValueError("StoreSpec tier capacities must be "
+                                 "positive")
+        return self
+
+    @classmethod
+    def from_args(cls, args) -> "EngineSpec":
+        """Build a spec from an ``argparse`` namespace (the launcher's
+        flag surface). Only attributes present on ``args`` are
+        consulted, so callers can parse any subset of the flags; the
+        ``--full`` flag replaces the old always-true ``--tiny`` (which
+        made full-size configs unreachable from the CLI)."""
+        def get(name, default):
+            return getattr(args, name, default)
+
+        spec = cls(
+            arch=get("arch", cls.arch),
+            tiny=not get("full", False),
+            seed=get("seed", cls.seed),
+            params_path=get("params", None),
+            strategy=get("strategy", cls.strategy),
+            use_focus=not get("no_focus", False),
+            force_recompute_fraction=get("recompute", None),
+            layerwise_load=get("layerwise_load", False),
+            attn_impl=get("attn_impl", None),
+            pool_blocks=get("pool_blocks", cls.pool_blocks),
+            sched=SchedulerConfig(
+                max_batch_tokens=get("max_batch_tokens", 8192),
+                max_decode_batch=get("max_decode_batch", 4)),
+        )
+        if spec.strategy == "all":
+            spec.store = None
+        elif spec.store is not None:
+            td = get("tier_dtypes", None)
+            if td:
+                # "cpu=int8,ssd=fp8" -> {"cpu": "int8", "ssd": "fp8"}
+                pairs = (p.split("=", 1) for p in td.split(","))
+                spec.store = replace(
+                    spec.store,
+                    tier_dtypes={k.strip(): v.strip()
+                                 for k, v in pairs})
+        return spec.validate()
+
+
+def build_store(sspec: Optional[StoreSpec]):
+    """Materialize a ``ChunkStore`` (or None) from a ``StoreSpec``."""
+    if sspec is None:
+        return None
+    from repro.core.chunkstore import ChunkStore
+    from repro.core.tiers import TieredStore
+    ssd = sspec.ssd_dir or tempfile.mkdtemp(prefix="cc-store-")
+    return ChunkStore(
+        TieredStore(sspec.hbm_bytes, sspec.cpu_bytes, ssd,
+                    start_worker=sspec.start_worker,
+                    tier_dtypes=sspec.tier_dtypes),
+        n_chunks=sspec.n_chunks, m_variants=sspec.m_variants,
+        alpha=sspec.alpha)
+
+
+def build_cfg(spec: EngineSpec):
+    """Resolve the model config named by ``arch``/``tiny``."""
+    from repro.configs import get_config, get_tiny
+    return get_tiny(spec.arch) if spec.tiny else get_config(spec.arch)
+
+
+def build_params(spec: EngineSpec, cfg):
+    """Restore ``params_path`` or random-init from ``seed``."""
+    if spec.params_path:
+        from repro.training import checkpoint as ckpt
+        return ckpt.restore(spec.params_path)["params"]
+    import jax
+    from repro.models import model as M
+    return M.init_params(cfg, jax.random.PRNGKey(spec.seed))
+
+
+def build_engine(spec: EngineSpec, *, cfg=None, params=None,
+                 store=_UNSET):
+    """Validated construction of an ``Engine`` from a spec.
+
+    ``cfg``/``params``/``store`` override the corresponding spec
+    fields when given (pass ``store=None`` explicitly for a storeless
+    engine regardless of ``spec.store``); otherwise each is built from
+    the spec. Strategy ``"all"`` (full recompute) never takes a store —
+    matching the pre-spec call sites, which constructed one only for
+    cache-serving strategies."""
+    from repro.serving.engine import Engine
+    spec.validate()
+    if cfg is None:
+        cfg = build_cfg(spec)
+    if params is None:
+        params = build_params(spec, cfg)
+    if store is _UNSET:
+        store = None if spec.strategy == "all" \
+            else build_store(spec.store)
+    return Engine(
+        cfg, params, store,
+        sched=spec.sched,
+        pool_blocks=spec.pool_blocks, block_size=spec.block_size,
+        decode_bucket_b=spec.decode_bucket_b,
+        seq_bucket=spec.seq_bucket,
+        strategy=spec.strategy,
+        use_focus=spec.use_focus,
+        force_recompute_fraction=spec.force_recompute_fraction,
+        layerwise_load=spec.layerwise_load,
+        store_fixed_variants=spec.store_fixed_variants,
+        store_new_chunks=spec.store_new_chunks,
+        fix_rpe=spec.fix_rpe, fix_causality=spec.fix_causality,
+        time_scale=spec.time_scale,
+        incremental_decode=spec.incremental_decode,
+        share_chunk_kv=spec.share_chunk_kv,
+        trace_decode=spec.trace_decode,
+        attn_impl=spec.attn_impl, mesh=spec.mesh)

@@ -67,21 +67,37 @@ queue-driven — every iteration, ``_prefetch_lookahead`` issues
 promotions for the first ``SchedulerConfig.prefetch_lookahead`` queued
 requests under a cancellable ``PrefetchTicket`` (teardown retracts
 pending promotions; counters ``prefetch_issued``/``prefetch_cancels``).
-With ``executor_kwargs=dict(layerwise_load=True)`` the prefill
-executor streams hit-chunk KV layer by layer (Eq. 16 /
-``core.preload.LayerStream``): the pass starts once the first
-``preload_depth`` layers are resident and the engine's
-``load_exposed_s``/``load_hidden_s`` become *measured* await-point
-overlap instead of the modeled formula (the eager path keeps the
-formula). Victim selection everywhere (tier demotion, variant capping,
-pool-run reclaim) goes through one ``core.eviction.EvictionPolicy``.
+With ``layerwise_load=True`` the prefill executor streams hit-chunk KV
+layer by layer (Eq. 16 / ``core.preload.LayerStream``): the pass
+starts once the first ``preload_depth`` layers are resident and the
+engine's ``load_exposed_s``/``load_hidden_s`` become *measured*
+await-point overlap instead of the modeled formula (the eager path
+keeps the formula). Victim selection everywhere (tier demotion,
+variant capping, pool-run reclaim) goes through one
+``core.eviction.EvictionPolicy``.
+
+Online serving (serving.server / serving.api): engines are constructed
+through the typed ``EngineSpec``/``build_engine`` front door (the old
+untyped executor-kwargs dict survives one release as a deprecated
+alias that folds into the typed fields). The decode loop feeds a
+per-token event buffer (``drain_tokens``) so a server can stream
+tokens as they are produced, and ``request_cancel``/``cancel`` tear a
+request down mid-flight — mid-queue (prefetch ticket retracted) or
+mid-decode (row masked, shared-run readers released, blocks +
+reservation reclaimed) — through the same ``_teardown`` path the
+preemption and expiry guards use, so pool conservation holds. The
+batch-replay ``run`` and the server's live loop share one
+``step_until_idle`` stepping/clock-advance policy.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+import threading
 import time
+import warnings
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -172,6 +188,7 @@ class EngineStats:
     prefill_batch_max: int = 0          # most prefills admitted in one pass
     completed: int = 0
     failed: int = 0
+    cancelled: int = 0                  # user-cancelled (Engine.cancel)
     clock: float = 0.0
     load_hidden_s: float = 0.0
     load_exposed_s: float = 0.0
@@ -181,6 +198,13 @@ class EngineStats:
     tier_quant_bytes_saved: int = 0
     tier_dequant_loads: int = 0
 
+    def stats_dict(self) -> dict:
+        """The one exported engine-stats payload (field name -> value).
+        Shares its schema duty with ``ServingCounters.stats_dict`` —
+        the server's ``/stats`` endpoint and the benches consume these
+        instead of hand-picking attributes."""
+        return dataclasses.asdict(self)
+
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params,
@@ -188,6 +212,13 @@ class Engine:
                  sched: Optional[SchedulerConfig] = None,
                  pool_blocks: int = 4096, block_size: int = 16,
                  decode_bucket_b: int = 4, seq_bucket: int = 64,
+                 strategy: str = "cachecraft",
+                 use_focus: bool = True,
+                 force_recompute_fraction: Optional[float] = None,
+                 layerwise_load: bool = False,
+                 store_fixed_variants: bool = True,
+                 store_new_chunks: bool = True,
+                 fix_rpe: bool = True, fix_causality: bool = True,
                  executor_kwargs: Optional[dict] = None,
                  time_scale: float = 1.0,
                  incremental_decode: bool = True,
@@ -213,7 +244,23 @@ class Engine:
             attn_impl = "sharded"
         self.attn_impl = attn_impl
         self.kv_shards = kv_shards
-        ek = dict(executor_kwargs or {})
+        # typed executor construction (serving.api.EngineSpec is the
+        # front door). ``executor_kwargs`` is a deprecated alias kept
+        # one release: the dict folds over the typed fields so old call
+        # sites keep working, with a warning pointing at the spec.
+        ek = dict(strategy=strategy, use_focus=use_focus,
+                  force_recompute_fraction=force_recompute_fraction,
+                  layerwise_load=layerwise_load,
+                  store_fixed_variants=store_fixed_variants,
+                  store_new_chunks=store_new_chunks,
+                  fix_rpe=fix_rpe, fix_causality=fix_causality)
+        if executor_kwargs:
+            warnings.warn(
+                "Engine(executor_kwargs=...) is deprecated; construct "
+                "engines through serving.api.EngineSpec/build_engine "
+                "(or the Engine keyword arguments it forwards)",
+                DeprecationWarning, stacklevel=2)
+            ek.update(executor_kwargs)
         if attn_impl is not None:
             ek.setdefault("attn_impl", attn_impl)
         self.executor = CacheCraftExecutor(cfg, params, store, **ek)
@@ -251,6 +298,17 @@ class Engine:
         self.trace_decode = trace_decode
         self.decode_trace: List[Dict[int, np.ndarray]] = []
         self.final_kv: Dict[int, tuple] = {}
+        # online serving support. Token events: every token the decode
+        # loop (or the prefill's first-token argmax) produces is
+        # appended as (rid, token) and drained by ``drain_tokens`` —
+        # the server's engine-loop thread routes them into per-request
+        # stream queues. Cancellation: HTTP threads only *request* a
+        # cancel (``request_cancel``); the engine thread applies it at
+        # the top of the next ``step`` so all jax/pool state stays
+        # single-threaded.
+        self._token_events: List[Tuple[int, int]] = []
+        self._events_lock = threading.Lock()
+        self._cancel_pending: set = set()
         from repro.core.prefill import decode_fn
         self._decode_fn = decode_fn(cfg, self.attn_impl or "auto")
 
@@ -281,10 +339,87 @@ class Engine:
                                     ticket=req.prefetch_ticket)
             self.counters.prefetch_issued += 1
 
+    # ---- per-token streaming ------------------------------------------------
+    def _emit_token(self, req: Request, token: int):
+        with self._events_lock:
+            self._token_events.append((req.rid, token))
+
+    def drain_tokens(self) -> List[Tuple[int, int]]:
+        """Drain the per-token event buffer: every (rid, token) pair
+        produced since the last drain, in production order. The decode
+        loop (and the prefill first-token argmax) feed it; the online
+        server drains after each step and fans the events out to the
+        per-request HTTP streams. Thread-safe (a buffer swap under a
+        lock), so a non-engine thread may drain — but the ownership
+        contract (serving.server) keeps it on the engine loop."""
+        with self._events_lock:
+            out = self._token_events
+            self._token_events = []
+        return out
+
+    # ---- cancellation -------------------------------------------------------
+    def request_cancel(self, rid: int):
+        """Thread-safe cancellation request: mark ``rid`` for cancel and
+        return immediately. The engine thread applies it at the top of
+        its next ``step`` (``cancel``), so HTTP handler threads never
+        touch jax or pool state."""
+        self._cancel_pending.add(rid)
+
+    def _process_cancels(self) -> bool:
+        if not self._cancel_pending:
+            return False
+        worked = False
+        while self._cancel_pending:
+            worked |= self.cancel(self._cancel_pending.pop())
+        return worked
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel one request mid-flight, wherever it currently is:
+
+        * still queued — removed from the scheduler queue (pending tier
+          promotions retracted via its ``PrefetchTicket``);
+        * mid-decode — its batch row is masked (``_decode_leave``), its
+          shared-run reader refs released, and its table blocks plus
+          open reservation reclaimed in one compound pool op.
+
+        Both arms share ``_teardown`` with the preemption / expiry /
+        requeue paths, so pool conservation
+        (``free + live + reserved == num_blocks``) holds mid-decode by
+        the same construction those paths are property-tested under.
+        Returns False when ``rid`` is unknown or already terminal
+        (cancelling a finished request is a no-op, not an error)."""
+        for r in self.scheduler.queue:
+            if r.rid == rid:
+                self.scheduler.queue.remove(r)
+                self._finish_cancel(r)
+                return True
+        for r in self.decoding:
+            if r.rid == rid:
+                row = next((i for i, q in enumerate(self._rows)
+                            if q is r), None)
+                self.decoding.remove(r)
+                if row is not None:
+                    self._decode_leave(row)
+                else:
+                    # admitted while a rebuild was pending: membership
+                    # changed under the stale cache (same edge as
+                    # ``_preempt``)
+                    self._needs_rebuild = True
+                self._finish_cancel(r)
+                return True
+        return False
+
+    def _finish_cancel(self, req: Request):
+        self._teardown(req)
+        req.state = State.CANCELLED
+        self.stats.cancelled += 1
+        self.scheduler.on_terminal(req)
+
     # ---- one ORCA iteration -------------------------------------------------
     def step(self) -> bool:
         """Returns True if any work was done."""
-        worked = self._expire_queued()
+        worked = self._process_cancels()
+        worked = self._expire_queued() or worked
         self._prefetch_lookahead()
         fails_before = self.counters.reserve_failures
         reqs = self._admit()
@@ -385,13 +520,17 @@ class Engine:
         this used to be dead code (``Scheduler.expired`` had no caller),
         so the documented guard never fired."""
         sched = self.scheduler
-        if sched.cfg.deadline_s <= 0 or not sched.queue:
+        if not sched.queue:
+            return False
+        if sched.cfg.deadline_s <= 0 and \
+                not any(r.deadline_s > 0 for r in sched.queue):
             return False
         expired = [r for r in sched.queue if sched.expired(r, self.clock)]
         for r in expired:
             sched.queue.remove(r)
             self._teardown(r)
             r.state = State.FAILED
+            r.deadline_hit = True
             self.counters.deadline_expired += 1
             sched.on_terminal(r)
         return bool(expired)
@@ -487,6 +626,7 @@ class Engine:
             self._count_attn_flops(res.plan.num_active_tokens,
                                    res.total_len)
             req.output_tokens.append(first)
+            self._emit_token(req, first)
             req.total_len = res.total_len
             req.t_first_token = self.clock
             req.prefill_tokens_total = res.total_len
@@ -830,6 +970,7 @@ class Engine:
                 self._requeue(r)
                 continue
             r.output_tokens.append(nxt)
+            self._emit_token(r, nxt)
             r.total_len += 1
             if len(r.output_tokens) >= r.max_new_tokens:
                 r.state = State.DONE
@@ -869,25 +1010,62 @@ class Engine:
         return k, v
 
     # ---- workload driver ------------------------------------------------------
+    def step_until_idle(self, *, max_iters: int = 1_000_000,
+                        feed=None, on_step=None, idle=None) -> int:
+        """The one serving loop ``run`` (batch replay) and the online
+        server share — step until there is no work left, with the
+        idle/clock-advance policy factored out of both callers:
+
+        * ``feed() -> Optional[float]`` — submit every request whose
+          arrival is due and return the next *future* arrival time
+          (None when no more arrivals are known). Batch replay feeds
+          from a sorted trace; the server feeds from its live inbox.
+        * ``on_step()`` — called after every ``step`` (the server
+          drains token events here, inside the engine thread).
+        * ``idle() -> bool`` — a step did no work and nothing is
+          queued or known to arrive. Return True to keep looping (the
+          server blocks briefly on its inbox); None/False stops (batch
+          replay is done).
+
+        When a step does no work but arrivals are still pending, the
+        clock jumps to the next arrival; when the queue is non-empty
+        the loop keeps stepping (waiting on reserve headroom). Returns
+        the number of iterations executed."""
+        iters = 0
+        while iters < max_iters:
+            nxt = feed() if feed is not None else None
+            if not (self.scheduler.queue or self.decoding
+                    or nxt is not None):
+                if idle is not None and idle():
+                    continue
+                break
+            iters += 1
+            worked = self.step()
+            if on_step is not None:
+                on_step()
+            if not worked:
+                if nxt is not None:      # idle: jump to next arrival
+                    self.clock = max(self.clock, nxt)
+                elif self.scheduler.queue:
+                    continue             # waiting on reserve headroom
+                elif not (idle is not None and idle()):
+                    break
+        return iters
+
     def run(self, requests: Sequence[Request],
             max_iters: int = 1_000_000) -> EngineStats:
         pending = sorted(requests, key=lambda r: r.arrival_time)
         i = 0
-        iters = 0
-        while (i < len(pending) or self.scheduler.queue or self.decoding) \
-                and iters < max_iters:
-            iters += 1
+
+        def feed():
+            nonlocal i
             while i < len(pending) and \
                     pending[i].arrival_time <= self.clock:
                 self.submit(pending[i])
                 i += 1
-            if not self.step():
-                if i < len(pending):     # idle: jump to next arrival
-                    self.clock = max(self.clock, pending[i].arrival_time)
-                elif self.scheduler.queue:
-                    continue             # waiting on reserve headroom
-                else:
-                    break
+            return pending[i].arrival_time if i < len(pending) else None
+
+        self.step_until_idle(max_iters=max_iters, feed=feed)
         self.stats.clock = self.clock
         self.stats.failed = sum(1 for r in requests
                                 if r.state == State.FAILED)
@@ -898,3 +1076,15 @@ class Engine:
             self.stats.tier_dequant_loads = \
                 int(tstats.get("dequant_loads", 0))
         return self.stats
+
+    def stats_dict(self) -> dict:
+        """One merged stats payload (the ``/stats`` endpoint body, also
+        what benches record): engine stats + counters + pool occupancy.
+        """
+        d = self.stats.stats_dict()
+        d["counters"] = self.counters.stats_dict()
+        d["pool"] = dict(num_blocks=self.pool.num_blocks,
+                         free_blocks=self.pool.free_blocks,
+                         live_blocks=self.pool.live_blocks,
+                         reserved_blocks=self.pool.reserved_blocks)
+        return d

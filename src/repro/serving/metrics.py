@@ -1,12 +1,14 @@
 """Quality metrics (paper §5.1.3): ROUGE-L F1 and Jaccard similarity over
-token sequences, plus deviation measures used in Figs. 7/12/15, and the
+token sequences, plus deviation measures used in Figs. 7/12/15, the
 serving-side counters (reservation protocol + incremental decode batch)
-shared by the pool, the engine, and the Fig. 22 benches."""
+shared by the pool, the engine, and the Fig. 22 benches, and the
+per-tenant SLO rollups (``tenant_rollups``) the online server's
+``/stats`` endpoint reports."""
 from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Sequence
+from typing import Dict, Sequence
 
 import numpy as np
 
@@ -81,6 +83,13 @@ class ServingCounters:
         for f in dataclasses.fields(self):
             setattr(self, f.name, f.default)
 
+    def stats_dict(self) -> dict:
+        """The one exported counter payload: every counter by name.
+        The server's ``/stats`` endpoint serves it verbatim and the
+        Fig. 22 benches index into it instead of hand-picking
+        attributes (one schema, one source of truth)."""
+        return dataclasses.asdict(self)
+
 
 def percentile(xs: Sequence[float], q: float) -> float:
     """Nearest-rank percentile (inclusive, numpy 'lower' flavor is too
@@ -102,6 +111,35 @@ def queue_wait_p99(requests) -> float:
     """p99 head-of-line wait (enqueue -> serving prefill start)."""
     return percentile([r.queue_wait for r in requests
                        if r.queue_wait is not None], 99)
+
+
+def tenant_rollups(requests) -> Dict[str, dict]:
+    """Per-tenant SLO rollups over a set of (possibly in-flight)
+    requests: TTFT p99, queue-wait p99, terminal-state counts, and how
+    many of the failures were deadline (SLO) expiries. This is the
+    payload the online server reports under ``/stats`` ``tenants`` and
+    the serve CI gate asserts on — mixed-tenant traces with per-tenant
+    deadlines (``Request.tenant`` / ``Request.deadline_s``) land here.
+    """
+    from repro.serving.request import State
+    by: Dict[str, dict] = {}
+    for r in requests:
+        d = by.setdefault(r.tenant, dict(
+            requests=0, completed=0, failed=0, cancelled=0,
+            deadline_expired=0, ttft_p99_s=[], queue_wait_p99_s=[]))
+        d["requests"] += 1
+        d["completed"] += r.state == State.DONE
+        d["failed"] += r.state == State.FAILED
+        d["cancelled"] += r.state == State.CANCELLED
+        d["deadline_expired"] += r.deadline_hit
+        if r.ttft is not None:
+            d["ttft_p99_s"].append(r.ttft)
+        if r.queue_wait is not None:
+            d["queue_wait_p99_s"].append(r.queue_wait)
+    for d in by.values():
+        d["ttft_p99_s"] = percentile(d["ttft_p99_s"], 99)
+        d["queue_wait_p99_s"] = percentile(d["queue_wait_p99_s"], 99)
+    return by
 
 
 def _lcs(a: Sequence[int], b: Sequence[int]) -> int:

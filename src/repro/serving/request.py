@@ -17,6 +17,12 @@ class State(enum.Enum):
     DECODING = "decoding"
     DONE = "done"
     FAILED = "failed"
+    # user-initiated cancellation (online serving): the request was torn
+    # down through the same ``Engine._teardown`` path preemption and
+    # expiry use — blocks freed, shared-run readers released, pending
+    # tier promotions retracted — but unlike FAILED it is not an error
+    # and unlike preemption it never re-enters the queue
+    CANCELLED = "cancelled"
 
 
 @dataclass
@@ -27,6 +33,17 @@ class Request:
     question_tokens: np.ndarray
     max_new_tokens: int = 32
     arrival_time: float = 0.0            # workload clock (seconds)
+    # --- multi-tenant / session identity (online serving) ---
+    # tenant name for per-tenant SLO rollups (metrics.tenant_rollups);
+    # deadline_s is this request's own queue-wait SLO — it overrides
+    # the scheduler-wide ``SchedulerConfig.deadline_s`` when set (> 0)
+    tenant: str = "default"
+    deadline_s: float = 0.0
+    # session-structured workloads: which conversation this request
+    # belongs to and which turn it is (metadata only — the engine does
+    # not interpret them; generators and benches do)
+    session: int = -1
+    turn: int = 0
     # --- engine state ---
     state: State = State.QUEUED
     table: BlockTable = field(default_factory=BlockTable)
@@ -71,6 +88,11 @@ class Request:
     prefill_tokens_total: int = 0
     cache_hits: int = 0
     load_seconds_modeled: float = 0.0
+    # set by the engine's straggler guard when this request FAILED
+    # because its (per-request or scheduler-wide) deadline expired —
+    # distinguishes SLO misses from genuine failures in the per-tenant
+    # rollups
+    deadline_hit: bool = False
 
     def reset_attempt(self):
         """Clear attempt-scoped state before the request re-enters the
@@ -123,4 +145,4 @@ class Request:
 
     @property
     def finished(self) -> bool:
-        return self.state in (State.DONE, State.FAILED)
+        return self.state in (State.DONE, State.FAILED, State.CANCELLED)

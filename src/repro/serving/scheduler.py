@@ -292,9 +292,13 @@ class Scheduler:
 
     def expired(self, req: Request, clock: float) -> bool:
         """Straggler guard: a queued request whose total wait exceeded
-        ``deadline_s``. ``Engine.step`` polls this every iteration and
+        its deadline. ``Engine.step`` polls this every iteration and
         FAILs expired queued requests through the teardown path (the
         guard was dead code before that wiring — a documented deadline
-        that never fired)."""
-        return (self.cfg.deadline_s > 0 and req.t_enqueued is not None
-                and clock - req.t_enqueued > self.cfg.deadline_s)
+        that never fired). A per-request ``Request.deadline_s`` (> 0,
+        e.g. a tenant SLO from the mixed-tenant workload generator)
+        overrides the scheduler-wide ``SchedulerConfig.deadline_s``."""
+        deadline = req.deadline_s if req.deadline_s > 0 \
+            else self.cfg.deadline_s
+        return (deadline > 0 and req.t_enqueued is not None
+                and clock - req.t_enqueued > deadline)

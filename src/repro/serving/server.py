@@ -1,0 +1,374 @@
+"""Online serving front end: the ``Engine`` on a background stepping
+thread behind a minimal stdlib-only HTTP API.
+
+Routes (JSON in / JSON or NDJSON out):
+
+* ``POST /v1/submit``      — enqueue a request, returns ``{"rid": n}``
+* ``GET  /v1/stream/<rid>``— NDJSON token stream: one ``{"token": t}``
+  line per generated token as it is produced, then a final
+  ``{"done": true, "state": ...}`` line (close-delimited)
+* ``POST /v1/cancel/<rid>``— cancel wherever the request currently is
+  (queued / prefilling next pass / mid-decode)
+* ``GET  /health``         — liveness of the HTTP and engine threads
+* ``GET  /stats``          — ``Engine.stats_dict()`` plus per-tenant
+  SLO rollups (``metrics.tenant_rollups``) and server info
+
+Threading / ownership contract
+------------------------------
+The engine-loop thread OWNS all jax, pool, store, and scheduler state.
+HTTP handler threads never touch it: they only
+
+* enqueue submissions into the inbox ``queue.Queue`` (picked up by the
+  loop's ``feed`` callback, stamped with a wall-clock arrival time);
+* flag cancellations via ``Engine.request_cancel`` (a set-add under
+  no lock contention; the engine thread applies them at the top of its
+  next ``step``);
+* block on their per-request stream ``queue.Queue`` for tokens the
+  engine thread fanned out (``_dispatch`` drains
+  ``Engine.drain_tokens()`` after every step, on the engine thread).
+
+``/stats`` reads counters racily from a handler thread — integers only,
+monitoring-grade, never used for control decisions. Everything that
+mutates engine state happens on exactly one thread, which is what makes
+cancellation mid-decode safe: the row mask, shared-run release, and
+pool reclaim all run between steps, never concurrent with them.
+
+The engine loop is ``Engine.step_until_idle`` — the same loop batch
+replay (``Engine.run``) uses — with the server's inbox as ``feed`` and
+a short blocking inbox wait as ``idle``, so the thread sleeps when
+there is no work instead of spinning.
+"""
+from __future__ import annotations
+
+import itertools
+import json
+import queue
+import threading
+import time
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.serving.metrics import tenant_rollups
+from repro.serving.request import Request
+
+
+def _request_from_json(rid: int, body: dict) -> Request:
+    return Request(
+        rid=rid,
+        system_tokens=np.asarray(body["system_tokens"], np.int32),
+        chunk_tokens=[np.asarray(c, np.int32)
+                      for c in body.get("chunk_tokens", [])],
+        question_tokens=np.asarray(body["question_tokens"], np.int32),
+        max_new_tokens=int(body.get("max_new_tokens", 32)),
+        tenant=str(body.get("tenant", "default")),
+        deadline_s=float(body.get("deadline_s", 0.0)),
+        session=int(body.get("session", -1)),
+        turn=int(body.get("turn", 0)),
+    )
+
+
+class CacheCraftServer:
+    """Run an ``Engine`` behind HTTP. Construct the engine through
+    ``serving.api.build_engine`` and hand it over — the server takes
+    ownership of stepping it (do not call ``run``/``step`` yourself
+    while the server is started)."""
+
+    def __init__(self, engine, host: str = "127.0.0.1", port: int = 0):
+        self.engine = engine
+        self._rid = itertools.count()
+        self._inbox: "queue.Queue[Request]" = queue.Queue()
+        # rid -> per-request stream queue; created at submit (before
+        # the request can produce tokens) so no event is ever dropped
+        self._streams: Dict[int, "queue.Queue"] = {}
+        self._streams_lock = threading.Lock()
+        # every request ever submitted (for /stats rollups) and the
+        # subset not yet observed terminal by the dispatcher
+        self._requests: Dict[int, Request] = {}
+        self._inflight: Dict[int, Request] = {}
+        self._stop = threading.Event()
+        self._t0 = time.monotonic()
+        self._thread: Optional[threading.Thread] = None
+
+        self.httpd = ThreadingHTTPServer((host, port), _Handler)
+        self.httpd.daemon_threads = True
+        self.httpd.cc = self          # handler back-pointer
+        self.host, self.port = self.httpd.server_address[:2]
+
+    # ---- lifecycle -------------------------------------------------------
+    def start(self):
+        self._t0 = time.monotonic()
+        self._thread = threading.Thread(target=self._engine_loop,
+                                        name="cc-engine", daemon=True)
+        self._thread.start()
+        self._http_thread = threading.Thread(
+            target=self.httpd.serve_forever, name="cc-http", daemon=True)
+        self._http_thread.start()
+        return self
+
+    def shutdown(self, timeout: float = 30.0):
+        """Stop accepting work, let the engine drain in-flight
+        requests, then stop both threads."""
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout)
+        self.httpd.shutdown()
+        self.httpd.server_close()
+        self._http_thread.join(timeout)
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    # ---- engine-loop thread ----------------------------------------------
+    def _now(self) -> float:
+        return time.monotonic() - self._t0
+
+    def _drain_inbox(self) -> bool:
+        got = False
+        while True:
+            try:
+                req = self._inbox.get_nowait()
+            except queue.Empty:
+                return got
+            req.arrival_time = self._now()
+            self.engine.submit(req)
+            got = True
+
+    def _engine_loop(self):
+        eng = self.engine
+        # discard token events a pre-server Engine.run left undrained
+        # (warm-up traces): their rids would collide with fresh server
+        # rids and misroute stale tokens into new streams
+        eng.drain_tokens()
+
+        def feed():
+            self._drain_inbox()
+            return None            # arrivals are live, never known ahead
+
+        def idle():
+            # nothing queued, nothing decoding: sleep on the inbox so
+            # the loop does not spin while the server is quiescent
+            if self._stop.is_set() and self._inbox.empty():
+                return False
+            try:
+                req = self._inbox.get(timeout=0.02)
+            except queue.Empty:
+                return not self._stop.is_set()
+            req.arrival_time = self._now()
+            eng.submit(req)
+            return True
+
+        eng.step_until_idle(feed=feed, on_step=self._dispatch, idle=idle)
+        self._dispatch()           # flush events from the final step
+
+    def _dispatch(self):
+        """Fan engine output out to the HTTP side (engine thread only):
+        route drained (rid, token) events into per-request stream
+        queues, then close the streams of requests that went terminal
+        this step."""
+        for rid, tok in self.engine.drain_tokens():
+            with self._streams_lock:
+                q = self._streams.get(rid)
+            if q is not None:
+                q.put(("token", tok))
+        done = [rid for rid, r in self._inflight.items() if r.finished]
+        for rid in done:
+            req = self._inflight.pop(rid)
+            with self._streams_lock:
+                q = self._streams.get(rid)
+            if q is not None:
+                q.put(("done", req.state.value))
+
+    # ---- HTTP-thread entry points ----------------------------------------
+    def submit(self, body: dict) -> int:
+        req = _request_from_json(next(self._rid), body)
+        with self._streams_lock:
+            self._streams[req.rid] = queue.Queue()
+        self._requests[req.rid] = req
+        self._inflight[req.rid] = req
+        self._inbox.put(req)
+        return req.rid
+
+    def cancel(self, rid: int) -> bool:
+        if rid not in self._requests:
+            return False
+        self.engine.request_cancel(rid)
+        return True
+
+    def stream(self, rid: int):
+        """Yield stream events for ``rid`` until its terminal event.
+        Runs on the HTTP handler thread; only ever touches the
+        per-request queue."""
+        with self._streams_lock:
+            q = self._streams.get(rid)
+        if q is None:
+            return
+        while True:
+            try:
+                kind, val = q.get(timeout=120.0)
+            except queue.Empty:
+                yield {"error": "stream timeout"}
+                return
+            if kind == "token":
+                yield {"token": int(val)}
+            else:
+                yield {"done": True, "state": val}
+                with self._streams_lock:
+                    self._streams.pop(rid, None)
+                return
+
+    def stats(self) -> dict:
+        d = self.engine.stats_dict()
+        d["tenants"] = tenant_rollups(list(self._requests.values()))
+        d["server"] = dict(
+            inflight=len(self._inflight),
+            submitted=len(self._requests),
+            uptime_s=self._now(),
+            engine_thread_alive=bool(self._thread
+                                     and self._thread.is_alive()))
+        return d
+
+
+class _Handler(BaseHTTPRequestHandler):
+    # close-delimited streaming: HTTP/1.0 + Connection: close means the
+    # client reads NDJSON lines until EOF, no chunked framing needed
+    protocol_version = "HTTP/1.0"
+
+    def log_message(self, fmt, *args):   # quiet by default
+        pass
+
+    @property
+    def cc(self) -> CacheCraftServer:
+        return self.server.cc
+
+    def _json(self, code: int, obj: dict):
+        body = json.dumps(obj).encode()
+        self.send_response(code)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def do_GET(self):
+        if self.path == "/health":
+            alive = bool(self.cc._thread and self.cc._thread.is_alive())
+            self._json(200 if alive else 503,
+                       {"ok": alive, "engine_thread_alive": alive})
+        elif self.path == "/stats":
+            self._json(200, self.cc.stats())
+        elif self.path.startswith("/v1/stream/"):
+            try:
+                rid = int(self.path.rsplit("/", 1)[1])
+            except ValueError:
+                return self._json(400, {"error": "bad rid"})
+            if rid not in self.cc._requests:
+                return self._json(404, {"error": f"unknown rid {rid}"})
+            self.send_response(200)
+            self.send_header("Content-Type", "application/x-ndjson")
+            self.send_header("Connection", "close")
+            self.end_headers()
+            try:
+                for event in self.cc.stream(rid):
+                    self.wfile.write(
+                        (json.dumps(event) + "\n").encode())
+                    self.wfile.flush()
+            except BrokenPipeError:
+                pass               # client went away; engine unaffected
+        else:
+            self._json(404, {"error": f"no route {self.path}"})
+
+    def do_POST(self):
+        n = int(self.headers.get("Content-Length", 0))
+        raw = self.rfile.read(n) if n else b"{}"
+        if self.path == "/v1/submit":
+            try:
+                body = json.loads(raw)
+                rid = self.cc.submit(body)
+            except (KeyError, ValueError, TypeError) as e:
+                return self._json(400, {"error": repr(e)})
+            self._json(200, {"rid": rid})
+        elif self.path.startswith("/v1/cancel/"):
+            try:
+                rid = int(self.path.rsplit("/", 1)[1])
+            except ValueError:
+                return self._json(400, {"error": "bad rid"})
+            ok = self.cc.cancel(rid)
+            self._json(200 if ok else 404, {"cancelled": ok})
+        else:
+            self._json(404, {"error": f"no route {self.path}"})
+
+
+# ---- tiny stdlib client (tests / CI serve gate / examples) ---------------
+class ServeClient:
+    """http.client-based helper for driving a ``CacheCraftServer``:
+    submit, read a token stream to completion, cancel, fetch stats."""
+
+    def __init__(self, host: str, port: int, timeout: float = 120.0):
+        self.host, self.port, self.timeout = host, port, timeout
+
+    def _conn(self):
+        import http.client
+        return http.client.HTTPConnection(self.host, self.port,
+                                          timeout=self.timeout)
+
+    def _post(self, path: str, body: Optional[dict] = None) -> dict:
+        c = self._conn()
+        try:
+            payload = json.dumps(body or {})
+            c.request("POST", path, payload,
+                      {"Content-Type": "application/json"})
+            return json.loads(c.getresponse().read())
+        finally:
+            c.close()
+
+    def _get(self, path: str) -> dict:
+        c = self._conn()
+        try:
+            c.request("GET", path)
+            return json.loads(c.getresponse().read())
+        finally:
+            c.close()
+
+    def submit(self, req: Request, **over) -> int:
+        body = dict(system_tokens=req.system_tokens.tolist(),
+                    chunk_tokens=[c.tolist() for c in req.chunk_tokens],
+                    question_tokens=req.question_tokens.tolist(),
+                    max_new_tokens=req.max_new_tokens,
+                    tenant=req.tenant, deadline_s=req.deadline_s,
+                    session=req.session, turn=req.turn)
+        body.update(over)
+        return int(self._post("/v1/submit", body)["rid"])
+
+    def stream(self, rid: int, on_token=None):
+        """Read the NDJSON stream to completion. Returns
+        ``(tokens, final_state)``; ``on_token(tok)`` fires per line as
+        it arrives (incrementality assertions hook here)."""
+        c = self._conn()
+        try:
+            c.request("GET", f"/v1/stream/{rid}")
+            resp = c.getresponse()
+            tokens, state = [], None
+            for line in resp:
+                if not line.strip():
+                    continue
+                ev = json.loads(line)
+                if "token" in ev:
+                    tokens.append(ev["token"])
+                    if on_token is not None:
+                        on_token(ev["token"])
+                elif ev.get("done"):
+                    state = ev.get("state")
+            return tokens, state
+        finally:
+            c.close()
+
+    def cancel(self, rid: int) -> bool:
+        return bool(self._post(f"/v1/cancel/{rid}").get("cancelled"))
+
+    def health(self) -> dict:
+        return self._get("/health")
+
+    def stats(self) -> dict:
+        return self._get("/stats")

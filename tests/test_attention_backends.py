@@ -196,7 +196,7 @@ from repro.configs import get_tiny
 from repro.models import model as M
 from repro.models import backend as AB
 from repro.launch.mesh import make_serving_mesh
-from repro.serving.engine import Engine
+from repro.serving.api import EngineSpec, build_engine
 from repro.serving.rag import KnowledgeBase
 from repro.serving.scheduler import SchedulerConfig
 from repro.serving.workload import WorkloadConfig, generate
@@ -208,13 +208,13 @@ wl = WorkloadConfig(num_requests=4, qpm=1e9, seed=3, max_new_tokens=4)
 
 def run(mesh):
     AB.set_serving_mesh(None)
-    eng = Engine(cfg, params, None,
-                 sched=SchedulerConfig(max_batch_tokens=100_000,
-                                       max_decode_batch=8,
-                                       max_prefill_batch=4),
-                 pool_blocks=1024,
-                 executor_kwargs=dict(strategy="all", use_focus=False),
-                 trace_decode=True, mesh=mesh)
+    eng = build_engine(
+        EngineSpec(strategy="all", use_focus=False, pool_blocks=1024,
+                   sched=SchedulerConfig(max_batch_tokens=100_000,
+                                         max_decode_batch=8,
+                                         max_prefill_batch=4),
+                   trace_decode=True, mesh=mesh),
+        cfg=cfg, params=params, store=None)
     reqs = generate(kb, wl)
     stats = eng.run(reqs)
     assert stats.completed == 4 and stats.failed == 0, \

@@ -440,16 +440,16 @@ def test_engine_accounts_measured_overlap(tiny_world, tmp_path):
     exposure when streaming is on (stats.load_exposed_s is a real
     await-point measurement, counters record the hidden/blocked
     split)."""
-    from repro.serving.engine import Engine
+    from repro.serving.api import EngineSpec, build_engine
     from repro.serving.request import Request, State
     cfg, params, kb, sys_t, q1, q2 = tiny_world
     store = _warm_store(cfg, params, tmp_path, "eng", kb, sys_t, q1)
-    eng = Engine(cfg, params, store, pool_blocks=512,
-                 executor_kwargs=dict(use_focus=False,
-                                      store_fixed_variants=False,
-                                      store_new_chunks=False,
-                                      force_recompute_fraction=0.25,
-                                      layerwise_load=True))
+    eng = build_engine(
+        EngineSpec(use_focus=False, store_fixed_variants=False,
+                   store_new_chunks=False,
+                   force_recompute_fraction=0.25,
+                   layerwise_load=True, pool_blocks=512),
+        cfg=cfg, params=params, store=store)
     reqs = [Request(rid=i, system_tokens=sys_t,
                     chunk_tokens=[kb[1], kb[0], kb[2]],
                     question_tokens=q2, max_new_tokens=2,
@@ -466,7 +466,7 @@ def test_engine_accounts_measured_overlap(tiny_world, tmp_path):
 def test_engine_cancels_prefetch_on_expiry(tiny_world, tmp_path):
     """Expiring a queued request retracts its pending tier promotions
     (counter-asserted on both the engine and the tier store)."""
-    from repro.serving.engine import Engine
+    from repro.serving.api import EngineSpec, build_engine
     from repro.serving.request import Request, State
     from repro.serving.scheduler import SchedulerConfig
     cfg, params, kb, sys_t, q1, q2 = tiny_world
@@ -475,12 +475,12 @@ def test_engine_cancels_prefetch_on_expiry(tiny_world, tmp_path):
     ts = store.tiers
     # max_decode_batch=0 keeps the request queued (admission defers),
     # isolating the prefetch-then-expire lifecycle
-    eng = Engine(cfg, params, store, pool_blocks=512,
-                 sched=SchedulerConfig(deadline_s=1.0,
-                                       max_decode_batch=0),
-                 executor_kwargs=dict(use_focus=False,
-                                      store_fixed_variants=False,
-                                      store_new_chunks=False))
+    eng = build_engine(
+        EngineSpec(use_focus=False, store_fixed_variants=False,
+                   store_new_chunks=False, pool_blocks=512,
+                   sched=SchedulerConfig(deadline_s=1.0,
+                                         max_decode_batch=0)),
+        cfg=cfg, params=params, store=store)
     req = Request(rid=0, system_tokens=sys_t, chunk_tokens=[kb[0]],
                   question_tokens=q2, max_new_tokens=2, arrival_time=0.0)
     eng.submit(req)

@@ -8,7 +8,7 @@ from repro.configs import get_tiny
 from repro.core.chunkstore import ChunkStore
 from repro.core.tiers import TieredStore
 from repro.models import model as M
-from repro.serving.engine import Engine
+from repro.serving.api import EngineSpec, build_engine
 from repro.serving.rag import KnowledgeBase
 from repro.serving.request import Request, State
 from repro.serving.scheduler import Scheduler, SchedulerConfig
@@ -27,11 +27,11 @@ def test_engine_completes_workload(world, tmp_path):
     cfg, params, kb = world
     store = ChunkStore(TieredStore(1 << 28, 1 << 28, str(tmp_path / "s"),
                                    start_worker=False), 50, 4)
-    eng = Engine(cfg, params, store,
-                 sched=SchedulerConfig(max_batch_tokens=4096,
-                                       max_decode_batch=4),
-                 pool_blocks=1024,
-                 executor_kwargs=dict(use_focus=False))
+    eng = build_engine(
+        EngineSpec(use_focus=False, pool_blocks=1024,
+                   sched=SchedulerConfig(max_batch_tokens=4096,
+                                         max_decode_batch=4)),
+        cfg=cfg, params=params, store=store)
     reqs = generate(kb, WorkloadConfig(num_requests=6, qpm=1e6, seed=1,
                                        max_new_tokens=4))
     stats = eng.run(reqs)
@@ -47,9 +47,9 @@ def test_engine_decode_matches_model(world, tmp_path):
     """Engine output with strategy='all' (no reuse) must equal direct
     greedy decoding with the model."""
     cfg, params, kb = world
-    eng = Engine(cfg, params, None,
-                 executor_kwargs=dict(strategy="all", use_focus=False),
-                 pool_blocks=512)
+    eng = build_engine(
+        EngineSpec(strategy="all", use_focus=False, pool_blocks=512),
+        cfg=cfg, params=params, store=None)
     rng = np.random.default_rng(5)
     req = Request(rid=0,
                   system_tokens=rng.integers(0, cfg.vocab_size, 8),
@@ -137,10 +137,11 @@ def test_scheduler_retries_cleared_on_terminal():
 
 def test_engine_pool_exhaustion_fails_gracefully(world, tmp_path):
     cfg, params, kb = world
-    eng = Engine(cfg, params, None,
-                 executor_kwargs=dict(strategy="all", use_focus=False),
-                 pool_blocks=4,              # absurdly small pool
-                 sched=SchedulerConfig(retry_limit=1))
+    eng = build_engine(
+        EngineSpec(strategy="all", use_focus=False,
+                   pool_blocks=4,            # absurdly small pool
+                   sched=SchedulerConfig(retry_limit=1)),
+        cfg=cfg, params=params, store=None)
     reqs = generate(kb, WorkloadConfig(num_requests=2, qpm=1e6, seed=2,
                                        max_new_tokens=2))
     stats = eng.run(reqs, max_iters=200)

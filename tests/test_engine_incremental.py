@@ -20,7 +20,7 @@ import pytest
 
 from repro.configs import get_tiny
 from repro.models import model as M
-from repro.serving.engine import Engine
+from repro.serving.api import EngineSpec, build_engine
 from repro.serving.rag import KnowledgeBase
 from repro.serving.request import State
 from repro.serving.scheduler import SchedulerConfig
@@ -48,13 +48,14 @@ def _churny_requests(kb):
 
 
 def _run(cfg, params, kb, incremental):
-    eng = Engine(cfg, params, None,
-                 sched=SchedulerConfig(max_batch_tokens=100_000,
-                                       max_decode_batch=4,
-                                       max_prefill_batch=1),
-                 pool_blocks=512, decode_bucket_b=4, seq_bucket=320,
-                 executor_kwargs=dict(strategy="all", use_focus=False),
-                 incremental_decode=incremental, trace_decode=True)
+    eng = build_engine(
+        EngineSpec(strategy="all", use_focus=False,
+                   pool_blocks=512, decode_bucket_b=4, seq_bucket=320,
+                   sched=SchedulerConfig(max_batch_tokens=100_000,
+                                         max_decode_batch=4,
+                                         max_prefill_batch=1),
+                   incremental_decode=incremental, trace_decode=True),
+        cfg=cfg, params=params, store=None)
     reqs = _churny_requests(kb)
     stats = eng.run(reqs)
     return eng, stats, reqs
@@ -111,12 +112,13 @@ def test_zero_burn_requeues_under_pool_pressure(world):
     admission must already own its blocks — no request may burn packed
     compute and then fail the KV write-back."""
     cfg, params, kb = world
-    eng = Engine(cfg, params, None,
-                 sched=SchedulerConfig(max_batch_tokens=100_000,
-                                       max_decode_batch=8,
-                                       max_prefill_batch=4),
-                 pool_blocks=12,            # ~192 tokens: one request
-                 executor_kwargs=dict(strategy="all", use_focus=False))
+    eng = build_engine(
+        EngineSpec(strategy="all", use_focus=False,
+                   pool_blocks=12,          # ~192 tokens: one request
+                   sched=SchedulerConfig(max_batch_tokens=100_000,
+                                         max_decode_batch=8,
+                                         max_prefill_batch=4)),
+        cfg=cfg, params=params, store=None)
     wl = WorkloadConfig(num_requests=4, qpm=1e9, seed=3, k_chunks=3,
                         max_new_tokens=3)
     reqs = generate(kb, wl)
@@ -147,15 +149,17 @@ def _preempt_churn_requests(kb):
 
 
 def _run_preempt(cfg, params, kb, pool_blocks, preempt_after):
-    eng = Engine(cfg, params, None,
-                 sched=SchedulerConfig(max_batch_tokens=100_000,
-                                       max_decode_batch=4,
-                                       max_prefill_batch=2,
-                                       preempt_after_iters=preempt_after),
-                 pool_blocks=pool_blocks, decode_bucket_b=4,
-                 seq_bucket=512,
-                 executor_kwargs=dict(strategy="all", use_focus=False),
-                 trace_decode=True)
+    eng = build_engine(
+        EngineSpec(strategy="all", use_focus=False,
+                   pool_blocks=pool_blocks, decode_bucket_b=4,
+                   seq_bucket=512,
+                   sched=SchedulerConfig(
+                       max_batch_tokens=100_000,
+                       max_decode_batch=4,
+                       max_prefill_batch=2,
+                       preempt_after_iters=preempt_after),
+                   trace_decode=True),
+        cfg=cfg, params=params, store=None)
     reqs = _preempt_churn_requests(kb)
     stats = eng.run(reqs)
     last = {}
@@ -213,12 +217,13 @@ def test_decode_batch_shape_growth_triggers_rebuild(world):
     """A joiner that does not fit the row arena (S too small) must fall
     back to a full rebuild rather than truncate its KV."""
     cfg, params, kb = world
-    eng = Engine(cfg, params, None,
-                 sched=SchedulerConfig(max_batch_tokens=100_000,
-                                       max_decode_batch=4,
-                                       max_prefill_batch=1),
-                 pool_blocks=512, decode_bucket_b=4, seq_bucket=32,
-                 executor_kwargs=dict(strategy="all", use_focus=False))
+    eng = build_engine(
+        EngineSpec(strategy="all", use_focus=False,
+                   pool_blocks=512, decode_bucket_b=4, seq_bucket=32,
+                   sched=SchedulerConfig(max_batch_tokens=100_000,
+                                         max_decode_batch=4,
+                                         max_prefill_batch=1)),
+        cfg=cfg, params=params, store=None)
     wl = WorkloadConfig(num_requests=3, qpm=1e9, seed=6, k_chunks=2,
                         max_new_tokens=3)
     reqs = generate(kb, wl)

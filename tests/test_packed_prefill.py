@@ -15,6 +15,7 @@ from repro.core.chunkstore import ChunkStore
 from repro.core.prefill import CacheCraftExecutor
 from repro.core.tiers import TieredStore
 from repro.models import model as M
+from repro.serving.api import EngineSpec, build_engine
 from repro.serving.engine import Engine
 from repro.serving.kvpool import BlockTable, KVPool
 from repro.serving.rag import KnowledgeBase
@@ -144,12 +145,13 @@ def test_engine_packs_prefills_and_matches_serial(world):
     wl = WorkloadConfig(num_requests=6, qpm=1e9, seed=4, max_new_tokens=3)
 
     def run(max_pack):
-        eng = Engine(cfg, params, None,
-                     sched=SchedulerConfig(max_batch_tokens=100_000,
-                                           max_decode_batch=8,
-                                           max_prefill_batch=max_pack),
-                     pool_blocks=2048,
-                     executor_kwargs=dict(strategy="all", use_focus=False))
+        eng = build_engine(
+            EngineSpec(strategy="all", use_focus=False,
+                       pool_blocks=2048,
+                       sched=SchedulerConfig(max_batch_tokens=100_000,
+                                             max_decode_batch=8,
+                                             max_prefill_batch=max_pack)),
+            cfg=cfg, params=params, store=None)
         reqs = generate(kb, wl)
         stats = eng.run(reqs)
         return stats, reqs

@@ -28,7 +28,7 @@ import pytest
 
 from repro.configs import get_tiny
 from repro.models import model as M
-from repro.serving.engine import Engine
+from repro.serving.api import EngineSpec, build_engine
 from repro.serving.rag import KnowledgeBase
 from repro.serving.request import Request, State
 from repro.serving.scheduler import Scheduler, SchedulerConfig
@@ -54,15 +54,17 @@ def _starved_requests(kb, n_long=2, n_short=3, long_new=20, short_new=4):
 
 
 def _engine(cfg, params, pool_blocks, preempt_after, **kw):
-    return Engine(cfg, params, None,
-                  sched=SchedulerConfig(max_batch_tokens=100_000,
-                                        max_decode_batch=4,
-                                        max_prefill_batch=2,
-                                        preempt_after_iters=preempt_after),
-                  pool_blocks=pool_blocks, decode_bucket_b=4,
-                  seq_bucket=512,
-                  executor_kwargs=dict(strategy="all", use_focus=False),
-                  **kw)
+    return build_engine(
+        EngineSpec(strategy="all", use_focus=False,
+                   pool_blocks=pool_blocks, decode_bucket_b=4,
+                   seq_bucket=512,
+                   sched=SchedulerConfig(
+                       max_batch_tokens=100_000,
+                       max_decode_batch=4,
+                       max_prefill_batch=2,
+                       preempt_after_iters=preempt_after),
+                   **kw),
+        cfg=cfg, params=params, store=None)
 
 
 # ---- tentpole: preemption bounds the head-of-line stall --------------------
@@ -117,16 +119,16 @@ def test_preempted_request_reuses_shared_runs(world, tmp_path):
     store = ChunkStore(TieredStore(1 << 28, 1 << 28,
                                    str(tmp_path / "s"),
                                    start_worker=False), 50, 4)
-    eng = Engine(cfg, params, store,
-                 sched=SchedulerConfig(max_batch_tokens=100_000,
-                                       max_decode_batch=4,
-                                       max_prefill_batch=2,
-                                       preempt_after_iters=4),
-                 pool_blocks=26, decode_bucket_b=4, seq_bucket=512,
-                 executor_kwargs=dict(strategy="cachecraft",
-                                      use_focus=False,
-                                      force_recompute_fraction=0.25,
-                                      store_fixed_variants=False))
+    eng = build_engine(
+        EngineSpec(strategy="cachecraft", use_focus=False,
+                   force_recompute_fraction=0.25,
+                   store_fixed_variants=False,
+                   pool_blocks=26, decode_bucket_b=4, seq_bucket=512,
+                   sched=SchedulerConfig(max_batch_tokens=100_000,
+                                         max_decode_batch=4,
+                                         max_prefill_batch=2,
+                                         preempt_after_iters=4)),
+        cfg=cfg, params=params, store=store)
     # warm the store so the measured pass hits chunk caches
     eng.run(_starved_requests(kb, n_long=0, n_short=3))
     reqs = _starved_requests(kb)
@@ -166,13 +168,14 @@ def test_multi_victim_preemption_accumulates_for_large_head(world):
     # empty pool — one preempted small frees 4 (free 5 < 9), so a
     # single-victim event can never admit it
     reqs = [mk(0, 32, 16, 8), mk(1, 32, 16, 8), mk(2, 96, 32, 4)]
-    eng = Engine(cfg, params, None,
-                 sched=SchedulerConfig(max_batch_tokens=100_000,
-                                       max_decode_batch=4,
-                                       max_prefill_batch=2,
-                                       preempt_after_iters=4),
-                 pool_blocks=9, decode_bucket_b=4, seq_bucket=512,
-                 executor_kwargs=dict(strategy="all", use_focus=False))
+    eng = build_engine(
+        EngineSpec(strategy="all", use_focus=False,
+                   pool_blocks=9, decode_bucket_b=4, seq_bucket=512,
+                   sched=SchedulerConfig(max_batch_tokens=100_000,
+                                         max_decode_batch=4,
+                                         max_prefill_batch=2,
+                                         preempt_after_iters=4)),
+        cfg=cfg, params=params, store=None)
     stats = eng.run(reqs)
     assert stats.failed == 0 and stats.completed == 3
     assert all(r.state == State.DONE for r in reqs)
@@ -262,16 +265,15 @@ def test_reclaimable_shortage_never_fails_requests(world, tmp_path):
     store = ChunkStore(TieredStore(1 << 28, 1 << 28,
                                    str(tmp_path / "s"),
                                    start_worker=False), 50, 4)
-    eng = Engine(cfg, params, store,
-                 sched=SchedulerConfig(max_batch_tokens=100_000,
-                                       max_decode_batch=4,
-                                       max_prefill_batch=2,
-                                       preempt_after_iters=4),
-                 pool_blocks=28,
-                 executor_kwargs=dict(strategy="cachecraft",
-                                      use_focus=False,
-                                      force_recompute_fraction=0.25,
-                                      store_fixed_variants=False))
+    eng = build_engine(
+        EngineSpec(strategy="cachecraft", use_focus=False,
+                   force_recompute_fraction=0.25,
+                   store_fixed_variants=False, pool_blocks=28,
+                   sched=SchedulerConfig(max_batch_tokens=100_000,
+                                         max_decode_batch=4,
+                                         max_prefill_batch=2,
+                                         preempt_after_iters=4)),
+        cfg=cfg, params=params, store=store)
     wl = WorkloadConfig(num_requests=8, qpm=1e9, seed=11,
                         max_new_tokens=6)
     reqs = generate(kb, wl)
@@ -298,13 +300,13 @@ def test_terminal_shortage_still_converges_to_failed(world):
     reclaimable) burns bounded retries and FAILs the head instead of
     livelocking the run loop."""
     cfg, params, kb = world
-    eng = Engine(cfg, params, None,
-                 sched=SchedulerConfig(max_batch_tokens=100_000,
-                                       max_decode_batch=4,
-                                       max_prefill_batch=1,
-                                       retry_limit=1),
-                 pool_blocks=16,
-                 executor_kwargs=dict(strategy="all", use_focus=False))
+    eng = build_engine(
+        EngineSpec(strategy="all", use_focus=False, pool_blocks=16,
+                   sched=SchedulerConfig(max_batch_tokens=100_000,
+                                         max_decode_batch=4,
+                                         max_prefill_batch=1,
+                                         retry_limit=1)),
+        cfg=cfg, params=params, store=None)
     leak = eng.pool.reserve(10)            # simulated leak: never closed
     assert leak is not None
     reqs = generate(kb, WorkloadConfig(num_requests=1, qpm=1e9, seed=3,
@@ -371,15 +373,16 @@ def test_deadline_expires_starved_queued_request(world):
     Wired into ``Engine.step``, an expired queued request FAILs through
     the teardown path with clean pool accounting."""
     cfg, params, kb = world
-    eng = Engine(cfg, params, None,
-                 sched=SchedulerConfig(max_batch_tokens=100_000,
-                                       max_decode_batch=4,
-                                       max_prefill_batch=4,
-                                       deadline_s=1e-6),
-                 pool_blocks=14,            # fits req0 (13 blocks), so
-                 #   req1 (14 blocks) fits the pool in principle but
-                 #   must wait — the expiry, not the fail-fast, path
-                 executor_kwargs=dict(strategy="all", use_focus=False))
+    eng = build_engine(
+        EngineSpec(strategy="all", use_focus=False,
+                   pool_blocks=14,          # fits req0 (13 blocks), so
+                   #   req1 (14 blocks) fits the pool in principle but
+                   #   must wait — the expiry, not the fail-fast, path
+                   sched=SchedulerConfig(max_batch_tokens=100_000,
+                                         max_decode_batch=4,
+                                         max_prefill_batch=4,
+                                         deadline_s=1e-6)),
+        cfg=cfg, params=params, store=None)
     reqs = generate(kb, WorkloadConfig(num_requests=2, qpm=1e9, seed=3,
                                        max_new_tokens=4))
     for r in reqs:
@@ -400,12 +403,12 @@ def test_deadline_expires_starved_queued_request(world):
 
 def test_no_deadline_means_no_expiry(world):
     cfg, params, kb = world
-    eng = Engine(cfg, params, None,
-                 sched=SchedulerConfig(max_batch_tokens=100_000,
-                                       max_decode_batch=4,
-                                       max_prefill_batch=1),
-                 pool_blocks=512,
-                 executor_kwargs=dict(strategy="all", use_focus=False))
+    eng = build_engine(
+        EngineSpec(strategy="all", use_focus=False, pool_blocks=512,
+                   sched=SchedulerConfig(max_batch_tokens=100_000,
+                                         max_decode_batch=4,
+                                         max_prefill_batch=1)),
+        cfg=cfg, params=params, store=None)
     reqs = generate(kb, WorkloadConfig(num_requests=2, qpm=1e9, seed=3,
                                        max_new_tokens=4))
     stats = eng.run(reqs)
@@ -445,8 +448,9 @@ def test_requeue_resets_stale_attempt_metrics(world):
     a requeued request reported TTFT/hit metrics from a discarded
     pass."""
     cfg, params, _kb = world
-    eng = Engine(cfg, params, None, pool_blocks=64,
-                 executor_kwargs=dict(strategy="all", use_focus=False))
+    eng = build_engine(
+        EngineSpec(strategy="all", use_focus=False, pool_blocks=64),
+        cfg=cfg, params=params, store=None)
     req = _req(1)
     eng.scheduler.enqueue(req, clock=1.5)
     eng.scheduler.queue.popleft()

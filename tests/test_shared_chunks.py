@@ -18,7 +18,7 @@ from repro.core.chunkstore import ChunkStore
 from repro.core.scoring import ChunkScores
 from repro.core.tiers import TieredStore
 from repro.models import model as M
-from repro.serving.engine import Engine
+from repro.serving.api import EngineSpec, build_engine
 from repro.serving.kvpool import KVPool
 from repro.serving.rag import KnowledgeBase
 from repro.serving.request import Request, State
@@ -68,15 +68,14 @@ def test_zerocopy_matches_copy_path_and_shares_blocks(world, tmp_path):
     results = {}
     for share in (False, True):
         store = _store(tmp_path, f"eq-{share}")
-        eng = Engine(cfg, params, store,
-                     sched=SchedulerConfig(max_batch_tokens=100_000,
-                                           max_decode_batch=8,
-                                           max_prefill_batch=4),
-                     pool_blocks=256,
-                     executor_kwargs=dict(use_focus=False,
-                                          store_fixed_variants=False,
-                                          force_recompute_fraction=0.3),
-                     share_chunk_kv=share, trace_decode=True)
+        eng = build_engine(
+            EngineSpec(use_focus=False, store_fixed_variants=False,
+                       force_recompute_fraction=0.3, pool_blocks=256,
+                       sched=SchedulerConfig(max_batch_tokens=100_000,
+                                             max_decode_batch=8,
+                                             max_prefill_batch=4),
+                       share_chunk_kv=share, trace_decode=True),
+            cfg=cfg, params=params, store=store)
         from repro.serving.engine import EngineStats
         eng.run(_overlap_requests(kb, 4))      # populate the store
         eng.run(_overlap_requests(kb, 4))      # hit + pin pool runs
@@ -234,15 +233,14 @@ def test_delta_reservation_admits_what_full_reservation_defers(world,
     fails = {}
     for share in (False, True):
         store = _store(tmp_path, f"delta-{share}")
-        eng = Engine(cfg, params, store,
-                     sched=SchedulerConfig(max_batch_tokens=100_000,
-                                           max_decode_batch=8,
-                                           max_prefill_batch=4),
-                     pool_blocks=22,
-                     executor_kwargs=dict(use_focus=False,
-                                          store_fixed_variants=False,
-                                          force_recompute_fraction=0.0),
-                     share_chunk_kv=share)
+        eng = build_engine(
+            EngineSpec(use_focus=False, store_fixed_variants=False,
+                       force_recompute_fraction=0.0, pool_blocks=22,
+                       sched=SchedulerConfig(max_batch_tokens=100_000,
+                                             max_decode_batch=8,
+                                             max_prefill_batch=4),
+                       share_chunk_kv=share),
+            cfg=cfg, params=params, store=store)
         from repro.serving.engine import EngineStats
         eng.run(_overlap_requests(kb, 2))  # populate the store
         eng.run(_overlap_requests(kb, 2))  # hit + pin pool runs
@@ -268,15 +266,14 @@ def test_unbudgeted_cow_pressure_escalates_not_fails(world, tmp_path):
     used to exhaust retries and FAIL requests the copy path served)."""
     cfg, params, kb = world
     store = _store(tmp_path, "cow-pressure")
-    eng = Engine(cfg, params, store,
-                 sched=SchedulerConfig(max_batch_tokens=100_000,
-                                       max_decode_batch=8,
-                                       max_prefill_batch=4),
-                 pool_blocks=22,
-                 executor_kwargs=dict(use_focus=False,
-                                      store_fixed_variants=False,
-                                      force_recompute_fraction=0.3),
-                 share_chunk_kv=True)
+    eng = build_engine(
+        EngineSpec(use_focus=False, store_fixed_variants=False,
+                   force_recompute_fraction=0.3, pool_blocks=22,
+                   sched=SchedulerConfig(max_batch_tokens=100_000,
+                                         max_decode_batch=8,
+                                         max_prefill_batch=4),
+                   share_chunk_kv=True),
+        cfg=cfg, params=params, store=store)
     eng.run(_overlap_requests(kb, 2))      # populate the store
     eng.run(_overlap_requests(kb, 2))      # hit + pin pool runs
     from repro.serving.engine import EngineStats
@@ -309,15 +306,14 @@ def test_cold_runs_reclaimed_under_admission_pressure(world, tmp_path):
     runs (admission backpressure) instead of failing the requests."""
     cfg, params, kb = world
     store = _store(tmp_path, "reclaim")
-    eng = Engine(cfg, params, store,
-                 sched=SchedulerConfig(max_batch_tokens=100_000,
-                                       max_decode_batch=8,
-                                       max_prefill_batch=2),
-                 pool_blocks=24,
-                 executor_kwargs=dict(use_focus=False,
-                                      store_fixed_variants=False,
-                                      force_recompute_fraction=0.0),
-                 share_chunk_kv=True)
+    eng = build_engine(
+        EngineSpec(use_focus=False, store_fixed_variants=False,
+                   force_recompute_fraction=0.0, pool_blocks=24,
+                   sched=SchedulerConfig(max_batch_tokens=100_000,
+                                         max_decode_batch=8,
+                                         max_prefill_batch=2),
+                   share_chunk_kv=True),
+        cfg=cfg, params=params, store=store)
     # two disjoint hot sets, each run twice (populate, then hit + pin):
     # their cold runs accumulate toward the pool capacity
     for chunk_ids, seed in (((0, 1, 2), 1), ((3, 4, 5), 2)):
@@ -346,15 +342,14 @@ def test_sequential_engines_reuse_one_store(world, tmp_path):
     cfg, params, kb = world
 
     def make(store):
-        return Engine(cfg, params, store,
-                      sched=SchedulerConfig(max_batch_tokens=100_000,
-                                            max_decode_batch=8,
-                                            max_prefill_batch=2),
-                      pool_blocks=128,
-                      executor_kwargs=dict(use_focus=False,
-                                           store_fixed_variants=False,
-                                           force_recompute_fraction=0.0),
-                      share_chunk_kv=True)
+        return build_engine(
+            EngineSpec(use_focus=False, store_fixed_variants=False,
+                       force_recompute_fraction=0.0, pool_blocks=128,
+                       sched=SchedulerConfig(max_batch_tokens=100_000,
+                                             max_decode_batch=8,
+                                             max_prefill_batch=2),
+                       share_chunk_kv=True),
+            cfg=cfg, params=params, store=store)
 
     store = _store(tmp_path, "seq")
     eng1 = make(store)
