@@ -341,6 +341,17 @@ class Engine:
 
     # ---- per-token streaming ------------------------------------------------
     def _emit_token(self, req: Request, token: int):
+        """Queue one (rid, token) event for ``drain_tokens``, at most
+        once per output index: ``Request.tokens_emitted`` survives
+        ``reset_attempt``, so when a requeue/preemption burns an
+        attempt whose tokens were already fanned out to a live stream,
+        the retry recomputes the same prefix (decode is deterministic
+        per request) but re-emits nothing — the stream sees each index
+        exactly once."""
+        n = len(req.output_tokens)
+        if n <= req.tokens_emitted:
+            return
+        req.tokens_emitted = n
         with self._events_lock:
             self._token_events.append((req.rid, token))
 
@@ -1010,7 +1021,7 @@ class Engine:
         return k, v
 
     # ---- workload driver ------------------------------------------------------
-    def step_until_idle(self, *, max_iters: int = 1_000_000,
+    def step_until_idle(self, *, max_iters: Optional[int] = None,
                         feed=None, on_step=None, idle=None) -> int:
         """The one serving loop ``run`` (batch replay) and the online
         server share — step until there is no work left, with the
@@ -1030,9 +1041,14 @@ class Engine:
         When a step does no work but arrivals are still pending, the
         clock jumps to the next arrival; when the queue is non-empty
         the loop keeps stepping (waiting on reserve headroom). Returns
-        the number of iterations executed."""
+        the number of iterations executed.
+
+        ``max_iters=None`` (the default) is unbounded — what a
+        long-lived serving loop needs, where any finite bound would
+        eventually kill the engine thread mid-flight. Batch replay
+        (``run``) passes an explicit bound as a runaway backstop."""
         iters = 0
-        while iters < max_iters:
+        while max_iters is None or iters < max_iters:
             nxt = feed() if feed is not None else None
             if not (self.scheduler.queue or self.decoding
                     or nxt is not None):

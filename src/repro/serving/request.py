@@ -68,6 +68,12 @@ class Request:
     prefetch_issued: bool = False
     prefetch_ticket: Optional[object] = None
     output_tokens: List[int] = field(default_factory=list)
+    # high-water mark of output indices already handed to
+    # ``Engine.drain_tokens`` subscribers. Survives ``reset_attempt``:
+    # a requeued/preempted attempt re-prefills and recomputes the same
+    # token prefix, and a live stream must not receive those indices a
+    # second time (``Engine._emit_token`` gates on this)
+    tokens_emitted: int = 0
     total_len: int = 0
     # --- timings ---
     t_enqueued: Optional[float] = None
@@ -108,7 +114,10 @@ class Request:
         ``output_tokens`` would terminate the retry early with a
         corrupted output sequence. ``reserve_full`` is attempt-spanning
         escalation state and is managed by the caller (the engine
-        resets it on preemption, sets it on write-back burns)."""
+        resets it on preemption, sets it on write-back burns).
+        ``tokens_emitted`` also spans attempts: it tracks what a
+        stream consumer has already seen, which a retry must not
+        replay."""
         self.output_tokens = []
         self.total_len = 0
         self.prefetch_issued = False     # a fresh attempt re-prefetches

@@ -27,16 +27,34 @@ HTTP handler threads never touch it: they only
   engine thread fanned out (``_dispatch`` drains
   ``Engine.drain_tokens()`` after every step, on the engine thread).
 
-``/stats`` reads counters racily from a handler thread — integers only,
+The server-side registries (``_streams`` / ``_requests`` /
+``_inflight``) are shared between the engine thread and HTTP handler
+threads and are guarded by one ``_lock``: submit inserts under it, the
+dispatcher and ``/stats`` snapshot under it before iterating. Engine
+counters read by ``/stats`` are still read racily — integers only,
 monitoring-grade, never used for control decisions. Everything that
 mutates engine state happens on exactly one thread, which is what makes
 cancellation mid-decode safe: the row mask, shared-run release, and
 pool reclaim all run between steps, never concurrent with them.
 
 The engine loop is ``Engine.step_until_idle`` — the same loop batch
-replay (``Engine.run``) uses — with the server's inbox as ``feed`` and
-a short blocking inbox wait as ``idle``, so the thread sleeps when
-there is no work instead of spinning.
+replay (``Engine.run``) uses, but unbounded (``max_iters=None``) so a
+long-lived server never exhausts a replay-sized iteration budget —
+with the server's inbox as ``feed`` and a short blocking inbox wait as
+``idle``, so the thread sleeps when there is no work instead of
+spinning.
+
+Clock: in serve mode the loop advances ``Engine.clock`` to wall time
+(``time.monotonic`` since ``start``) before every feed, so per-request
+``deadline_s`` SLOs and queue-wait metrics are measured in real
+seconds; modeled prefill/load durations still add on top, making the
+clock an upper bound on wall time rather than a pure simulation.
+
+Terminal streams a client never read (or abandoned mid-read) are
+garbage-collected ``stream_ttl_s`` after the terminal event, and the
+finished-request registry is capped at ``request_cap`` (oldest
+finished evicted first), so a long-running server does not leak one
+queue + Request per submission.
 """
 from __future__ import annotations
 
@@ -75,18 +93,28 @@ class CacheCraftServer:
     ownership of stepping it (do not call ``run``/``step`` yourself
     while the server is started)."""
 
-    def __init__(self, engine, host: str = "127.0.0.1", port: int = 0):
+    def __init__(self, engine, host: str = "127.0.0.1", port: int = 0,
+                 stream_ttl_s: float = 300.0, request_cap: int = 10_000):
         self.engine = engine
+        self.stream_ttl_s = stream_ttl_s
+        self.request_cap = request_cap
         self._rid = itertools.count()
         self._inbox: "queue.Queue[Request]" = queue.Queue()
         # rid -> per-request stream queue; created at submit (before
         # the request can produce tokens) so no event is ever dropped
         self._streams: Dict[int, "queue.Queue"] = {}
-        self._streams_lock = threading.Lock()
         # every request ever submitted (for /stats rollups) and the
         # subset not yet observed terminal by the dispatcher
         self._requests: Dict[int, Request] = {}
         self._inflight: Dict[int, Request] = {}
+        # rid -> wall time its terminal event was queued; drives the
+        # unread-stream GC
+        self._done_at: Dict[int, float] = {}
+        # one lock for every registry above: they are written by HTTP
+        # submit threads and iterated by the engine thread (_dispatch)
+        # and /stats — unguarded, a concurrent insert during iteration
+        # raises and kills the engine loop
+        self._lock = threading.Lock()
         self._stop = threading.Event()
         self._t0 = time.monotonic()
         self._thread: Optional[threading.Thread] = None
@@ -144,6 +172,10 @@ class CacheCraftServer:
         eng.drain_tokens()
 
         def feed():
+            # live serving measures SLOs in real seconds: pull the
+            # engine clock up to wall time so deadline expiry and
+            # queue-wait are not stuck on the modeled step durations
+            eng.clock = max(eng.clock, self._now())
             self._drain_inbox()
             return None            # arrivals are live, never known ahead
 
@@ -156,43 +188,76 @@ class CacheCraftServer:
                 req = self._inbox.get(timeout=0.02)
             except queue.Empty:
                 return not self._stop.is_set()
+            eng.clock = max(eng.clock, self._now())
             req.arrival_time = self._now()
             eng.submit(req)
             return True
 
-        eng.step_until_idle(feed=feed, on_step=self._dispatch, idle=idle)
+        # max_iters=None: the live loop must never exhaust a finite
+        # iteration budget and silently exit with streams in flight
+        eng.step_until_idle(max_iters=None, feed=feed,
+                            on_step=self._dispatch, idle=idle)
         self._dispatch()           # flush events from the final step
 
     def _dispatch(self):
         """Fan engine output out to the HTTP side (engine thread only):
         route drained (rid, token) events into per-request stream
-        queues, then close the streams of requests that went terminal
-        this step."""
-        for rid, tok in self.engine.drain_tokens():
-            with self._streams_lock:
+        queues, close the streams of requests that went terminal this
+        step, then collect garbage (unread terminal streams past their
+        TTL, finished requests beyond the retention cap). All registry
+        access happens under ``_lock`` because HTTP submit threads
+        insert concurrently."""
+        events = self.engine.drain_tokens()
+        now = time.monotonic()
+        with self._lock:
+            for rid, tok in events:
                 q = self._streams.get(rid)
-            if q is not None:
-                q.put(("token", tok))
-        done = [rid for rid, r in self._inflight.items() if r.finished]
-        for rid in done:
-            req = self._inflight.pop(rid)
-            with self._streams_lock:
+                if q is not None:
+                    q.put(("token", tok))
+            done = [rid for rid, r in self._inflight.items()
+                    if r.finished]
+            for rid in done:
+                req = self._inflight.pop(rid)
                 q = self._streams.get(rid)
-            if q is not None:
-                q.put(("done", req.state.value))
+                if q is not None:
+                    q.put(("done", req.state.value))
+                    self._done_at[rid] = now
+            self._gc_locked(now)
+
+    def _gc_locked(self, now: float):
+        """Reap abandoned state (caller holds ``_lock``): stream
+        queues whose terminal event nobody consumed within
+        ``stream_ttl_s`` (client never connected, or disconnected
+        early), and the oldest finished requests once ``_requests``
+        exceeds ``request_cap`` — /stats rollups lose ancient history
+        instead of the server growing without bound."""
+        expired = [rid for rid, t in self._done_at.items()
+                   if now - t > self.stream_ttl_s]
+        for rid in expired:
+            self._done_at.pop(rid, None)
+            self._streams.pop(rid, None)
+        if len(self._requests) > self.request_cap:
+            for rid in list(self._requests):
+                if len(self._requests) <= self.request_cap:
+                    break
+                r = self._requests[rid]
+                if r.finished and rid not in self._streams:
+                    del self._requests[rid]
 
     # ---- HTTP-thread entry points ----------------------------------------
     def submit(self, body: dict) -> int:
         req = _request_from_json(next(self._rid), body)
-        with self._streams_lock:
+        with self._lock:
             self._streams[req.rid] = queue.Queue()
-        self._requests[req.rid] = req
-        self._inflight[req.rid] = req
+            self._requests[req.rid] = req
+            self._inflight[req.rid] = req
         self._inbox.put(req)
         return req.rid
 
     def cancel(self, rid: int) -> bool:
-        if rid not in self._requests:
+        with self._lock:
+            known = rid in self._requests
+        if not known:
             return False
         self.engine.request_cancel(rid)
         return True
@@ -201,7 +266,7 @@ class CacheCraftServer:
         """Yield stream events for ``rid`` until its terminal event.
         Runs on the HTTP handler thread; only ever touches the
         per-request queue."""
-        with self._streams_lock:
+        with self._lock:
             q = self._streams.get(rid)
         if q is None:
             return
@@ -215,16 +280,20 @@ class CacheCraftServer:
                 yield {"token": int(val)}
             else:
                 yield {"done": True, "state": val}
-                with self._streams_lock:
+                with self._lock:
                     self._streams.pop(rid, None)
+                    self._done_at.pop(rid, None)
                 return
 
     def stats(self) -> dict:
         d = self.engine.stats_dict()
-        d["tenants"] = tenant_rollups(list(self._requests.values()))
+        with self._lock:
+            requests = list(self._requests.values())
+            inflight = len(self._inflight)
+        d["tenants"] = tenant_rollups(requests)
         d["server"] = dict(
-            inflight=len(self._inflight),
-            submitted=len(self._requests),
+            inflight=inflight,
+            submitted=len(requests),
             uptime_s=self._now(),
             engine_thread_alive=bool(self._thread
                                      and self._thread.is_alive()))
@@ -263,7 +332,9 @@ class _Handler(BaseHTTPRequestHandler):
                 rid = int(self.path.rsplit("/", 1)[1])
             except ValueError:
                 return self._json(400, {"error": "bad rid"})
-            if rid not in self.cc._requests:
+            with self.cc._lock:
+                known = rid in self.cc._requests
+            if not known:
                 return self._json(404, {"error": f"unknown rid {rid}"})
             self.send_response(200)
             self.send_header("Content-Type", "application/x-ndjson")

@@ -265,6 +265,36 @@ def test_streaming_incremental_and_bit_exact(world):
         assert streamed[r.rid] == r.output_tokens == rr.output_tokens
 
 
+def test_requeue_does_not_duplicate_streamed_tokens(world):
+    """Regression: a preemption/requeue cleared ``output_tokens`` and
+    the retry re-ran prefill+decode, so ``_emit_token`` re-emitted the
+    already-streamed prefix — HTTP clients saw duplicated tokens under
+    pool pressure. The ``tokens_emitted`` watermark survives
+    ``reset_attempt`` and suppresses the replayed indices."""
+    cfg, params, kb = world
+    eng = build_engine(_spec(), cfg=cfg, params=params, store=None)
+    r = _requests(kb, n=1, max_new=6)[0]
+    eng.submit(r)
+    streamed = []
+    for _ in range(64):
+        eng.step()
+        streamed += [t for _, t in eng.drain_tokens()]
+        if r.state == State.DECODING and len(r.output_tokens) >= 3:
+            break
+    assert r.state == State.DECODING and len(streamed) >= 3
+
+    eng._preempt(r)                  # burns the attempt mid-decode
+    assert r.output_tokens == [] and r.tokens_emitted == len(streamed)
+    eng.scheduler.preempt_requeue(r)   # the path step() takes
+    eng.step_until_idle()
+    streamed += [t for _, t in eng.drain_tokens()]
+
+    assert r.state == State.DONE
+    assert len(r.output_tokens) == r.max_new_tokens
+    # the stream saw each output index exactly once, no replayed prefix
+    assert streamed == r.output_tokens
+
+
 # ---- stats payload -----------------------------------------------------------
 def test_stats_dict_shape(world):
     cfg, params, kb = world
@@ -346,6 +376,40 @@ def test_http_cancel_mid_decode(world):
         stats = client.stats()
         assert stats["cancelled"] == 1
         assert stats["pool"]["reserved_blocks"] == 0
+    finally:
+        server.shutdown()
+
+
+def test_unread_streams_and_old_requests_are_garbage_collected(world):
+    """A client that submits but never opens its stream (or drops the
+    connection early) must not leak the stream queue or the Request
+    forever: the dispatcher reaps terminal streams past
+    ``stream_ttl_s`` and evicts the oldest finished requests beyond
+    ``request_cap``."""
+    import time as _time
+    from repro.serving.server import CacheCraftServer, ServeClient
+    cfg, params, kb = world
+    eng = build_engine(_spec(), cfg=cfg, params=params, store=None)
+    server = CacheCraftServer(eng, stream_ttl_s=0.0, request_cap=1)
+    server.start()
+    try:
+        client = ServeClient(server.host, server.port)
+        reqs = _requests(kb, n=2, max_new=3)
+        rid_a = client.submit(reqs[0])     # stream never opened
+        deadline = _time.monotonic() + 120
+        while _time.monotonic() < deadline:
+            if client.stats()["server"]["inflight"] == 0:
+                break
+            _time.sleep(0.05)
+        assert client.stats()["server"]["inflight"] == 0
+
+        rid_b = client.submit(reqs[1])     # its dispatches drive the GC
+        toks, state = client.stream(rid_b)
+        assert state == State.DONE.value and len(toks) == 3
+        with server._lock:
+            assert rid_a not in server._streams      # TTL reap
+            assert rid_a not in server._done_at
+            assert rid_a not in server._requests     # cap eviction
     finally:
         server.shutdown()
 
