@@ -9,15 +9,23 @@ workload replayed with fp32 vs int8 cpu/ssd tiers, every chunk read
 forced through the deep tiers, at a MATCHED recompute ratio (tier
 quantization never changes plan decisions — they derive from chunk
 metadata). Gate: ROUGE delta vs the fp32 lane <= eps. The capacity
-half lives in ``preloading.eviction_quant_compare``."""
+half lives in ``preloading.eviction_quant_compare``.
+
+``frontier_compare`` is the quality-vs-recompute frontier on a
+REORDERED-context workload (warm in one chunk order, serve rotated):
+cachecraft / blend frac sweeps plus the prefix and full single points,
+emitted as ``fig20_frontier_*``, with the ``frontier`` ci-smoke gate
+asserting blend reaches cachecraft's anchor quality (within eps) at a
+strictly lower recompute-token count."""
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.common import (bench_config, build_cases, emit, fresh_store,
                                get_trained_model, greedy_continue,
-                               make_world, timed)
+                               make_world, record_trajectory, timed)
 from repro.core.prefill import CacheCraftExecutor
+from repro.core.strategies import get_strategy
 from repro.serving.metrics import relative_deviation, rouge_l_f1
 
 FRACS = (0.0, 0.1, 0.2, 0.3, 0.45, 0.6)
@@ -69,6 +77,107 @@ def run(quick: bool = False):
                  f"actual_recompute={np.mean(rfracs):.2f}")
 
     quant_quality_compare(quick=quick)
+    frontier_compare(quick=quick)
+
+
+FRONTIER_FRACS = (0.0, 0.1, 0.2, 0.3, 0.45, 0.6)
+
+
+def frontier_compare(quick: bool = False, eps: float = 0.05,
+                     anchor_frac: float = 0.45) -> dict:
+    """Quality-vs-recompute frontier on a reordered-context workload.
+
+    The store warms on each case's chunks in RETRIEVAL order; every
+    eval serves the same chunks ROTATED (chunk list shifted by one).
+    That is CacheBlend's motivating regime: the stored Eq. 14 scores
+    were measured in the original order, so cachecraft's CFO-prefix
+    selection is blind to what the reorder actually perturbed, while
+    blend's deviation probe measures the perturbation directly (and
+    the prefix baseline degenerates to full recompute — the rotated
+    prefix never matches a stored context exactly).
+
+    Lanes: ``full`` (the oracle itself, ROUGE 1.0 at full token cost)
+    and ``prefix`` as single points, ``cachecraft`` and ``blend`` as
+    recompute-fraction sweeps. Each point reports mean ROUGE-L vs the
+    full-recompute references and the TOTAL recompute-token count over
+    the eval cases (question tokens excluded — they are always
+    computed). Gate (count-based, timing-free): against cachecraft's
+    ``anchor_frac`` point, some blend point must reach ROUGE within
+    ``eps`` at a strictly lower token count."""
+    cfg, params = get_trained_model()
+    kb, retr, sys_t, rng = make_world(cfg)
+    warm = build_cases(kb, retr, rng, 4 if quick else N_WARM, seed_base=0)
+    cases = build_cases(kb, retr, rng, 4 if quick else N_EVAL,
+                        seed_base=700)
+
+    store = fresh_store("frontier")
+    warm_ex = CacheCraftExecutor(cfg, params, store, use_focus=False)
+    for c in warm:
+        warm_ex.process(sys_t, c.chunks, c.question)
+
+    def rotated(c):
+        return list(c.chunks[1:]) + list(c.chunks[:1])
+
+    oracle = CacheCraftExecutor(cfg, params, None, strategy="all",
+                                use_focus=False)
+    refs = [greedy_continue(cfg, params,
+                            oracle.process(sys_t, rotated(c), c.question),
+                            GEN)
+            for c in cases]
+
+    def lane(strategy: str, frac):
+        ex = CacheCraftExecutor(
+            cfg, params,
+            store if get_strategy(strategy).needs_store else None,
+            strategy=strategy, use_focus=False,
+            force_recompute_fraction=frac,
+            store_fixed_variants=False, store_new_chunks=False)
+        rouges, tokens = [], 0
+        for c, ref in zip(cases, refs):
+            res = ex.process(sys_t, rotated(c), c.question)
+            rouges.append(rouge_l_f1(
+                greedy_continue(cfg, params, res, GEN), ref))
+            tokens += (res.plan.num_active_tokens
+                       - res.plan.question.length)
+        return dict(rouge=float(np.mean(rouges)), tokens=int(tokens),
+                    frac=None if frac is None else float(frac))
+
+    points: dict = {"full": [lane("all", None)],
+                    "prefix": [lane("prefix", None)]}
+    cc_fracs = (anchor_frac,) if quick else FRONTIER_FRACS
+    blend_fracs = (0.15, 0.3) if quick else FRONTIER_FRACS
+    points["cachecraft"] = [lane("cachecraft" if f > 0 else "none", f)
+                            for f in cc_fracs]
+    points["blend"] = [lane("blend" if f > 0 else "none", f)
+                       for f in blend_fracs]
+    for name in ("full", "prefix"):
+        p = points[name][0]
+        emit(f"fig20_frontier_{name}", 0.0,
+             f"rouge={p['rouge']:.3f};tokens={p['tokens']}")
+    for name in ("cachecraft", "blend"):
+        for p in points[name]:
+            emit(f"fig20_frontier_{name}_recomp{int(p['frac']*100):02d}",
+                 0.0, f"rouge={p['rouge']:.3f};tokens={p['tokens']}")
+
+    cc = min(points["cachecraft"],
+             key=lambda p: abs(p["frac"] - anchor_frac))
+    blend_win = next(
+        (p for p in sorted(points["blend"], key=lambda p: p["frac"])
+         if p["tokens"] < cc["tokens"] and p["rouge"] >= cc["rouge"] - eps),
+        None)
+    out = dict(ok=blend_win is not None, eps=float(eps),
+               anchor=dict(frac=cc["frac"], rouge=cc["rouge"],
+                           tokens=cc["tokens"]),
+               blend_win=blend_win, points=points)
+    emit("fig20_frontier_gate", 0.0,
+         f"ok={out['ok']};cc_rouge={cc['rouge']:.3f};"
+         f"cc_tokens={cc['tokens']};"
+         + (f"blend_rouge={blend_win['rouge']:.3f};"
+            f"blend_tokens={blend_win['tokens']};"
+            f"blend_frac={blend_win['frac']}" if blend_win
+            else "blend_win=None"))
+    record_trajectory("BENCH_frontier.json", out)
+    return out
 
 
 def quant_quality_compare(quick: bool = False, frac: float = 0.2,

@@ -463,6 +463,13 @@ def ci_smoke() -> int:
       zero reserved blocks afterwards, zero FAILED, per-tenant TTFT /
       queue-wait p99 rollups present. Trajectory in
       ``results/BENCH_serve.json``.
+    * frontier — the quality-vs-recompute frontier on the
+      reordered-context workload
+      (``quality_vs_recompute.frontier_compare``): some blend
+      (CacheBlend fusion) point must reach ROUGE-L within eps of the
+      cachecraft anchor point at a STRICTLY lower recompute-token
+      count (count-based). Trajectory in
+      ``results/BENCH_frontier.json``.
 
     Gate numbers land in ``results/fig22_ci_smoke.json`` so CI can
     upload them as a workflow artifact."""
@@ -541,6 +548,12 @@ def ci_smoke() -> int:
              recompute_ratio=qq["int8"]["recompute"],
              dequant_loads=qq["int8"]["dequant_loads"]))
 
+    from benchmarks.quality_vs_recompute import frontier_compare
+    # blend must beat the cachecraft anchor on token count at matched
+    # quality on the rotated workload (fr["ok"]; trajectory appended
+    # inside frontier_compare to results/BENCH_frontier.json)
+    fr = frontier_compare(quick=True)
+
     from benchmarks.serve_bench import serve_gate
     # the online front end must be a faithful serving of Engine.run:
     # every HTTP-streamed token sequence bit-identical to the offline
@@ -578,6 +591,8 @@ def ci_smoke() -> int:
                         logits_equal=sh["logits_equal"],
                         onedev=sh["onedev"], fourdev=sh["fourdev"]),
         "serve": sv,
+        "frontier": dict(ok=fr["ok"], eps=fr["eps"],
+                         anchor=fr["anchor"], blend_win=fr["blend_win"]),
         "quant": dict(ok=ok_quant, capacity_fp32=evq["fp32"],
                       capacity_int8=evq["int8"],
                       rouge_fp32=qq["fp32"]["rouge"],
@@ -610,7 +625,8 @@ if __name__ == "__main__":
                          "overlap, sharded bit-equality + per-device "
                          "FLOPs/bytes, quantized-tier capacity + "
                          "quality delta, online-serve HTTP streaming "
-                         "bit-equality + mid-decode cancel); writes "
+                         "bit-equality + mid-decode cancel, blend-vs-"
+                         "cachecraft recompute frontier); writes "
                          "results/fig22_ci_smoke.json; exit 1 on any "
                          "gate failure")
     args = ap.parse_args()

@@ -48,11 +48,17 @@
 #     same trace, one mid-decode HTTP cancel delivering a strict
 #     prefix with the KV pool settled (zero reserved blocks), zero
 #     FAILED states, and per-tenant TTFT/queue-wait p99 rollups,
+#   * quality-vs-recompute frontier on a reordered-context workload
+#     (quality_vs_recompute.frontier_compare): the blend strategy
+#     (CacheBlend fusion — top KV-deviation tokens anywhere in the
+#     chunk) must reach ROUGE-L within eps of the cachecraft anchor
+#     point at a STRICTLY lower recompute-token count (count-based),
 # and writes results/fig22_ci_smoke.json for the CI artifact upload
 # (plus the preemption trajectory in results/BENCH_preemption.json,
 # the sharded trajectory in results/BENCH_sharded.json, the quant
-# trajectory in results/BENCH_quant.json, and the serve trajectory in
-# results/BENCH_serve.json).
+# trajectory in results/BENCH_quant.json, the serve trajectory in
+# results/BENCH_serve.json, and the frontier trajectory in
+# results/BENCH_frontier.json).
 # --smoke-only skips the pytest suite for fast local iteration on the
 # perf gates.
 set -euo pipefail
@@ -105,7 +111,8 @@ if [[ "$status" == "0" && "$perf_smoke" == "1" ]]; then
          "+ eviction tier-miss gate + layerwise-preload gate" \
          "+ sharded bit-equality/FLOPs gate" \
          "+ quantized-tier capacity/quality gate" \
-         "+ online-serve HTTP streaming/cancel gate)"
+         "+ online-serve HTTP streaming/cancel gate" \
+         "+ blend-vs-cachecraft recompute-frontier gate)"
     python -m benchmarks.throughput_latency --ci-smoke || status=$?
     echo "CI perf smoke exit status: $status"
 fi

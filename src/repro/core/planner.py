@@ -6,6 +6,14 @@ Stat chunk ids:          0        1 ... k              k+1
 
 The system prompt is treated as chunk 0 under the same framework (the
 paper's footnote: instructions are an always-repeated chunk).
+
+Which tokens get recomputed — and what counts as a hit at all — is the
+strategy layer's job (``core.strategies``): ``build_plan`` carries only
+the strategy name, resolves it through the registry, and lays out
+whatever decisions ``classify`` returns. Strategies that defer token
+choice to the executor (``needs_deviation``) leave ``deferred=True``
+decisions in the plan; the executor finalizes them and re-lays-out via
+``layout_plan``.
 """
 from __future__ import annotations
 
@@ -15,7 +23,6 @@ from typing import List, Optional, Sequence
 import numpy as np
 
 from repro.core.chunkstore import ChunkStore, Variant, prompt_hashes
-from repro.core.select import select_recompute_tokens
 
 
 @dataclass
@@ -38,6 +45,9 @@ class ChunkDecision:
     cfo: float = 1.0
     recompute_idx: np.ndarray = field(
         default_factory=lambda: np.zeros(0, np.int64))
+    # True while a deviation-probed strategy (blend) has not yet chosen
+    # the recompute set; the executor clears it before running the plan
+    deferred: bool = False
 
     @property
     def is_hit(self) -> bool:
@@ -65,15 +75,54 @@ class InferencePlan:
         return active_cacheable / max(1, cacheable)
 
 
+def layout_plan(segments: List[Segment], decisions: List[ChunkDecision],
+                question: Segment, total_len: int) -> InferencePlan:
+    """Derive the active-token layout from a set of decisions. Split out
+    of ``build_plan`` so the executor can re-lay-out a plan after
+    finalizing deferred (deviation-probed) decisions."""
+    act_pos, act_tok, act_sid = [], [], []
+    cached_tokens = 0
+    for d in decisions:
+        if d.is_hit:
+            cached_tokens += d.seg.length - len(d.recompute_idx)
+            sel = d.recompute_idx
+        else:
+            sel = np.arange(d.seg.length)
+        act_pos.append(d.seg.start + sel)
+        act_tok.append(d.seg.tokens[sel])
+        act_sid.append(np.full(len(sel), d.seg.stat_id))
+    act_pos.append(np.arange(question.start, question.end))
+    act_tok.append(question.tokens)
+    act_sid.append(np.full(question.length, question.stat_id))
+
+    active_positions = np.concatenate(act_pos).astype(np.int32)
+    order = np.argsort(active_positions, kind="stable")
+    return InferencePlan(
+        segments=segments + [question], decisions=decisions,
+        question=question, total_len=total_len,
+        active_positions=active_positions[order],
+        active_tokens=np.concatenate(act_tok).astype(np.int32)[order],
+        active_stat_ids=np.concatenate(act_sid).astype(np.int32)[order],
+        num_cached_tokens=cached_tokens,
+        num_active_tokens=len(active_positions),
+    )
+
+
 def build_plan(store: Optional[ChunkStore], system_tokens: np.ndarray,
                chunks: Sequence[np.ndarray], question_tokens: np.ndarray,
                *, strategy: str = "cachecraft",
                rng: Optional[np.random.Generator] = None,
                force_recompute_fraction: Optional[float] = None
                ) -> InferencePlan:
-    """strategy governs recompute-token choice (see core.select).
-    ``force_recompute_fraction`` overrides the CFO-derived fraction (used
-    by the fixed-budget baselines Random-Recomp / Prefill-H2O)."""
+    """``strategy`` names a registered ``core.strategies`` policy (or is
+    an already-resolved instance); it governs both hit classification
+    and recompute-token choice. ``force_recompute_fraction`` overrides
+    the CFO-derived fraction (used by the fixed-budget baselines
+    Random-Recomp / Prefill-H2O and the frontier sweeps)."""
+    # lazy: strategies imports Segment/ChunkDecision from this module
+    from repro.core.strategies import get_strategy
+    strat = get_strategy(strategy)
+
     segs: List[Segment] = []
     pos = 0
     all_parts = [np.asarray(system_tokens)] + [np.asarray(c) for c in chunks]
@@ -87,69 +136,7 @@ def build_plan(store: Optional[ChunkStore], system_tokens: np.ndarray,
                 tokens=np.asarray(question_tokens), chash=None)
     pos += len(question_tokens)
 
-    decisions: List[ChunkDecision] = []
-    prefix_broken = False
-    for i, seg in enumerate(segs):
-        hit = store.best_variant(seg.chash, hashes[:i]) if store else None
-        if strategy == "prefix":
-            # Prefix-Cache baseline (§5.1.4): a chunk reuses its cache only
-            # if the ENTIRE preceding prefix matches a stored context
-            # exactly (and all earlier chunks hit too); no recomputation.
-            exact = None
-            if not prefix_broken and store is not None:
-                for var in store.lookup(seg.chash):
-                    if list(var.scores.prefix_hashes) == hashes[:i] and \
-                            var.scores.orig_start == seg.start:
-                        exact = var
-                        break
-            if exact is None:
-                prefix_broken = True
-                decisions.append(ChunkDecision(
-                    seg=seg, variant=None, cfo=1.0,
-                    recompute_idx=np.arange(seg.length)))
-            else:
-                decisions.append(ChunkDecision(
-                    seg=seg, variant=exact, cfo=0.0,
-                    recompute_idx=np.zeros(0, np.int64)))
-            continue
-        if hit is None:
-            decisions.append(ChunkDecision(seg=seg, variant=None, cfo=1.0,
-                                           recompute_idx=np.arange(
-                                               seg.length)))
-            continue
-        var, cfo_val = hit
-        frac = (force_recompute_fraction
-                if force_recompute_fraction is not None else cfo_val)
-        idx = select_recompute_tokens(
-            var.scores.token_inter[:seg.length], frac, strategy=strategy,
-            rng=rng,
-            token_total=getattr(var.scores, "token_total", None))
-        decisions.append(ChunkDecision(seg=seg, variant=var, cfo=cfo_val,
-                                       recompute_idx=idx))
-
-    act_pos, act_tok, act_sid = [], [], []
-    cached_tokens = 0
-    for d in decisions:
-        if d.is_hit:
-            cached_tokens += d.seg.length - len(d.recompute_idx)
-            sel = d.recompute_idx
-        else:
-            sel = np.arange(d.seg.length)
-        act_pos.append(d.seg.start + sel)
-        act_tok.append(d.seg.tokens[sel])
-        act_sid.append(np.full(len(sel), d.seg.stat_id))
-    act_pos.append(np.arange(q.start, q.end))
-    act_tok.append(q.tokens)
-    act_sid.append(np.full(q.length, q.stat_id))
-
-    active_positions = np.concatenate(act_pos).astype(np.int32)
-    order = np.argsort(active_positions, kind="stable")
-    return InferencePlan(
-        segments=segs + [q], decisions=decisions, question=q,
-        total_len=pos,
-        active_positions=active_positions[order],
-        active_tokens=np.concatenate(act_tok).astype(np.int32)[order],
-        active_stat_ids=np.concatenate(act_sid).astype(np.int32)[order],
-        num_cached_tokens=cached_tokens,
-        num_active_tokens=len(active_positions),
-    )
+    decisions = strat.classify(
+        store if strat.needs_store else None, segs, hashes,
+        frac_override=force_recompute_fraction, rng=rng)
+    return layout_plan(segs, decisions, q, pos)

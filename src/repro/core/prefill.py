@@ -24,8 +24,9 @@ import numpy as np
 from repro.core import scoring
 from repro.core.chunkstore import ChunkStore
 from repro.core.focus import FocusTracker
-from repro.core.planner import InferencePlan, build_plan
+from repro.core.planner import InferencePlan, build_plan, layout_plan
 from repro.core.preload import LayerStream, layerwise_schedule
+from repro.core.strategies import SelectScores, get_strategy
 from repro.core.tiers import CPU_TO_HBM_GBPS, SSD_GBPS, merge_load_infos
 from repro.models import model as M
 from repro.models.config import ModelConfig
@@ -197,7 +198,9 @@ class PrefillResult:
 
 class CacheCraftExecutor:
     """Binds (model config, params, chunk store) into a serving-side
-    prefill engine. ``strategy``: cachecraft | random | h2o | none | all."""
+    prefill engine. ``strategy``: any name registered in
+    ``core.strategies.STRATEGIES`` (resolved at construction, so an
+    unknown name fails fast with the known list)."""
 
     def __init__(self, cfg: ModelConfig, params, store: Optional[ChunkStore],
                  *, strategy: str = "cachecraft", use_focus: bool = True,
@@ -216,6 +219,7 @@ class CacheCraftExecutor:
         self.params = params
         self.store = store
         self.strategy = strategy
+        self.strategy_obj = get_strategy(strategy)
         self.use_focus = use_focus
         self.focus_w = focus_w
         self.bucket = bucket
@@ -270,10 +274,12 @@ class CacheCraftExecutor:
         cfg = self.cfg
         t_start = time.perf_counter()
         plans = [build_plan(
-            self.store if self.strategy != "all" else None,
-            sys_t, chs, q_t, strategy=self.strategy, rng=self.rng,
+            self.store if self.strategy_obj.needs_store else None,
+            sys_t, chs, q_t, strategy=self.strategy_obj, rng=self.rng,
             force_recompute_fraction=self.force_recompute_fraction)
             for sys_t, chs, q_t in requests]
+        if self.strategy_obj.needs_deviation:
+            plans = [self._finalize_deviation_plan(p) for p in plans]
         R = len(plans)
 
         L = cfg.num_layers
@@ -625,6 +631,87 @@ class CacheCraftExecutor:
                             "streams": stream_traces[r]}
                 if streamed else None))
         return results
+
+    # ---- CacheBlend deviation probe (strategy_obj.needs_deviation) --------
+    def _finalize_deviation_plan(self, plan: InferencePlan) -> InferencePlan:
+        """Finalize deferred (deviation-probed) decisions: run the FIRST
+        layer window of this request alone with EVERY token active —
+        the scatter overwrites each injected cache slot before
+        attention, so the window produces the full-recompute KV of the
+        probe layers — then rank each hit chunk's tokens by squared KV
+        deviation of the cached bytes vs the recomputed ones and let
+        the strategy pick top-deviation tokens ANYWHERE in the chunk.
+        Plans without deferred decisions pass through untouched; the
+        finalized plan is re-laid-out via ``layout_plan``."""
+        deferred = [d for d in plan.decisions if d.deferred]
+        if not deferred:
+            return plan
+        cfg = self.cfg
+        L = cfg.num_layers
+        P, G = len(cfg.pattern), cfg.n_groups
+        probe_layers = list(range(P)) if G else list(range(cfg.n_tail))
+        hkv, dh = cfg.num_kv_heads, cfg.head_dim_
+        T = plan.total_len
+        S = _bucket(T, self.bucket)
+        k_np = np.zeros((L, S, hkv, dh), np.float32)
+        v_np = np.zeros((L, S, hkv, dh), np.float32)
+        pos_layout = np.full(S, -1, np.int32)
+        pos_layout[:T] = np.arange(T, dtype=np.int32)
+        seg_layout = np.full(S, -1, np.int32)
+        seg_layout[:T] = 0
+        layout_sid = np.full(S, cfg.stats_chunks - 1, np.int32)
+        for seg in plan.segments:
+            layout_sid[seg.start:seg.end] = seg.stat_id
+        cached_ref = {}
+        for d in plan.decisions:
+            if not d.is_hit:
+                continue
+            span = np.arange(d.seg.start, d.seg.end, dtype=np.int32)
+            rope_pos = span if self.fix_rpe else \
+                (np.arange(d.seg.length) + d.variant.scores.orig_start)
+            # probe-only read: the main pass records the actual use
+            kv, _info = self.store.get_kv(d.variant)
+            kc, vc = inject_chunk_kv(cfg, kv, rope_pos)
+            k_np[:, d.seg.start:d.seg.end] = kc
+            v_np[:, d.seg.start:d.seg.end] = vc
+            if d.deferred:
+                cached_ref[id(d)] = (kc, vc)
+
+        act_tok = np.zeros(S, np.int32)
+        act_tok[:T] = np.concatenate(
+            [s.tokens for s in plan.segments]).astype(np.int32)
+        act_pos = jnp.asarray(pos_layout)[None]
+        h = self._embed(self.params, jnp.asarray(act_tok)[None])
+        cache = pack_cache(cfg, k_np, v_np, pos_layout)
+        _h, new_cache, _stats, _kstats, _ = self._window(
+            self.params, h, act_pos, jnp.asarray(layout_sid)[None],
+            cache, act_pos, jnp.asarray(seg_layout)[None],
+            jnp.asarray(seg_layout)[None], None, None,
+            g0=0, g1=min(G, 1), tail=G == 0, collect=False,
+            attn_impl=self.attn_impl)
+
+        for d in deferred:
+            s0, s1 = d.seg.start, d.seg.end
+            kc, vc = cached_ref[id(d)]
+            dev = np.zeros(d.seg.length)
+            for l in probe_layers:
+                if G:
+                    k_new = np.asarray(
+                        new_cache["groups"][l]["k"][0, 0, s0:s1])
+                    v_new = np.asarray(
+                        new_cache["groups"][l]["v"][0, 0, s0:s1])
+                else:
+                    k_new = np.asarray(new_cache["tail"][l]["k"][0, s0:s1])
+                    v_new = np.asarray(new_cache["tail"][l]["v"][0, s0:s1])
+                dev += ((k_new - kc[l]) ** 2).sum(axis=(1, 2))
+                dev += ((v_new - vc[l]) ** 2).sum(axis=(1, 2))
+            frac = self.force_recompute_fraction \
+                if self.force_recompute_fraction is not None else d.cfo
+            d.recompute_idx = self.strategy_obj.select_tokens(
+                SelectScores(deviation=dev), frac, self.rng)
+            d.deferred = False
+        return layout_plan(plan.segments[:-1], plan.decisions,
+                           plan.question, plan.total_len)
 
     # ---- layer-granular streamed loads (Eq. 16 / Algorithm 2) -------------
     def _layer_load_estimate(self, var) -> float:

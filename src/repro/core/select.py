@@ -1,5 +1,13 @@
-"""Token selection for recomputation (paper §3.2.1, Eq. 14) and the
-baseline selection strategies evaluated against it (§5.1.4)."""
+"""DEPRECATED shim over ``core.strategies`` (kept for one release).
+
+Token selection for recomputation (paper §3.2.1, Eq. 14) and the
+baseline strategies now live in the registry-dispatched strategy layer
+— see ``core.strategies`` for the contract and the full strategy list.
+``select_recompute_tokens`` delegates to
+``STRATEGIES[strategy].select_tokens`` and exists only so legacy
+callers keep working; new code should resolve a strategy via
+``core.strategies.get_strategy`` instead.
+"""
 from __future__ import annotations
 
 import numpy as np
@@ -8,33 +16,22 @@ import numpy as np
 def select_recompute_tokens(token_inter: np.ndarray, cfo: float,
                             strategy: str = "cachecraft",
                             rng: np.random.Generator | None = None,
-                            token_total: np.ndarray | None = None
+                            token_total: np.ndarray | None = None,
+                            seeded_default: bool = False
                             ) -> np.ndarray:
-    """Return sorted indices (within the chunk) of the tokens to recompute.
+    """Return sorted indices (within the chunk) of the tokens to
+    recompute, via the ``core.strategies`` registry.
 
-    strategies:
-      cachecraft  Eq. 14: top-N by external (inter) attention mass
-      random      Random-Recomp baseline: uniform choice of N tokens
-      h2o         Prefill-H2O baseline: top-N by *total* attention received
-                  (token_total must be given: mass each token received as a
-                  key, the heavy-hitter criterion)
-      none        no recomputation (Full-Cache baseline)
-      all         recompute everything (Full-Recomp oracle path)
+    ``random`` requires an ``rng`` — the historic silent
+    ``default_rng(0)`` fallback re-seeded identically on every call,
+    correlating the Random-Recomp baseline across chunks. Pass
+    ``seeded_default=True`` to explicitly opt back into that fixed
+    seed (deterministic one-off scripts only).
     """
-    t = len(token_inter)
-    n = int(np.ceil(min(1.0, max(0.0, cfo)) * t))
-    if strategy == "none" or n == 0:
-        return np.zeros(0, np.int64)
-    if strategy == "all" or n >= t:
-        return np.arange(t)
-    if strategy == "cachecraft":
-        idx = np.argsort(-token_inter, kind="stable")[:n]
-    elif strategy == "random":
-        rng = rng or np.random.default_rng(0)
-        idx = rng.choice(t, size=n, replace=False)
-    elif strategy == "h2o":
-        src = token_total if token_total is not None else token_inter
-        idx = np.argsort(-src, kind="stable")[:n]
-    else:
-        raise ValueError(strategy)
-    return np.sort(idx)
+    from repro.core.strategies import SelectScores, get_strategy
+
+    if rng is None and seeded_default:
+        rng = np.random.default_rng(0)
+    return get_strategy(strategy).select_tokens(
+        SelectScores(inter=np.asarray(token_inter), total=token_total),
+        cfo, rng)

@@ -47,9 +47,11 @@ def make_parser() -> argparse.ArgumentParser:
     ap.add_argument("--arch", default="llama3-8b")
     ap.add_argument("--full", action="store_true",
                     help="full-size config (default is the tiny one)")
+    from repro.core.strategies import STRATEGIES
     ap.add_argument("--strategy", default="cachecraft",
-                    choices=("cachecraft", "none", "random", "h2o",
-                             "prefix", "all"))
+                    choices=tuple(STRATEGIES),
+                    help="recompute strategy (core.strategies registry): "
+                         + ", ".join(STRATEGIES))
     ap.add_argument("--recompute", type=float, default=None)
     ap.add_argument("--no-focus", action="store_true")
     ap.add_argument("--attn-impl", default=None)

@@ -32,9 +32,13 @@ import tempfile
 from dataclasses import dataclass, field, replace
 from typing import Any, Dict, Optional
 
+from repro.core.strategies import STRATEGIES as _STRATEGY_REGISTRY
+from repro.core.strategies import get_strategy
 from repro.serving.scheduler import SchedulerConfig
 
-STRATEGIES = ("cachecraft", "none", "random", "h2o", "prefix", "all")
+# the registered recompute strategies (core.strategies is the one
+# source of truth; this tuple exists for the CLI/help surfaces)
+STRATEGIES = tuple(_STRATEGY_REGISTRY)
 TIER_DTYPES = ("fp32", "int8", "fp8")
 _UNSET = object()
 
@@ -93,9 +97,7 @@ class EngineSpec:
     def validate(self):
         """Fail fast with the offending field named. Returns self so
         call sites can chain ``EngineSpec(...).validate()``."""
-        if self.strategy not in STRATEGIES:
-            raise ValueError(f"EngineSpec.strategy={self.strategy!r} "
-                             f"not in {STRATEGIES}")
+        get_strategy(self.strategy)  # unknown -> ValueError with the name
         if self.attn_impl is not None:
             from repro.models.backend import BACKENDS
             if self.attn_impl not in BACKENDS and \
@@ -155,7 +157,7 @@ class EngineSpec:
                 max_batch_tokens=get("max_batch_tokens", 8192),
                 max_decode_batch=get("max_decode_batch", 4)),
         )
-        if spec.strategy == "all":
+        if not get_strategy(spec.strategy).needs_store:
             spec.store = None
         elif spec.store is not None:
             td = get("tier_dtypes", None)
@@ -207,9 +209,10 @@ def build_engine(spec: EngineSpec, *, cfg=None, params=None,
     ``cfg``/``params``/``store`` override the corresponding spec
     fields when given (pass ``store=None`` explicitly for a storeless
     engine regardless of ``spec.store``); otherwise each is built from
-    the spec. Strategy ``"all"`` (full recompute) never takes a store —
-    matching the pre-spec call sites, which constructed one only for
-    cache-serving strategies."""
+    the spec. A strategy that declares ``needs_store=False`` in the
+    ``core.strategies`` registry (``all``, the full-recompute oracle)
+    never takes a store — matching the pre-spec call sites, which
+    constructed one only for cache-serving strategies."""
     from repro.serving.engine import Engine
     spec.validate()
     if cfg is None:
@@ -217,8 +220,8 @@ def build_engine(spec: EngineSpec, *, cfg=None, params=None,
     if params is None:
         params = build_params(spec, cfg)
     if store is _UNSET:
-        store = None if spec.strategy == "all" \
-            else build_store(spec.store)
+        store = build_store(spec.store) \
+            if get_strategy(spec.strategy).needs_store else None
     return Engine(
         cfg, params, store,
         sched=spec.sched,

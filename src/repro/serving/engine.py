@@ -765,7 +765,9 @@ class Engine:
             req.prompt_hashes = prompt_hashes(parts[0], parts[1:])
         hashes = req.prompt_hashes
         residency = self.store.residency
-        predict = self.executor.strategy not in ("prefix", "all")
+        # a strategy whose hit logic diverges from the best_variant
+        # probe declares predicts_residency=False in the registry
+        predict = self.executor.strategy_obj.predicts_residency
         blocks = full = 0
         start = 0
         for i, part in enumerate(parts):

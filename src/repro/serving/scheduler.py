@@ -22,8 +22,9 @@ scheduler therefore tracks consecutive head-of-line reservation
 failures (``note_head_stall``); once the head has stalled for
 ``preempt_after_iters`` iterations — and the engine's cold-run reclaim
 found nothing to free — the engine preempts the victims the scheduler
-selects (``select_victim``: *newest* decode requests first, so the
-oldest in-flight work always keeps making progress), retrying
+selects (``select_victim``: *newest* decode requests first by default,
+so the oldest in-flight work always keeps making progress; or
+fewest-blocks-held behind ``SchedulerConfig.victim_policy``), retrying
 admission after each one until the head fits, and only then requeues
 the victims at the queue front (``preempt_requeue``) so they keep
 FCFS priority over everything still waiting — held back until the
@@ -59,6 +60,11 @@ class SchedulerConfig:
     # caps how often one request may be chosen as victim (liveness).
     preempt_after_iters: int = 0
     preempt_limit: int = 2
+    # victim policy: "newest" (default — oldest in-flight work keeps
+    # progressing) or "fewest-blocks" (smallest pool footprint first —
+    # table blocks plus open reservation — minimizing discarded work
+    # per preemption; ties break newest-first)
+    victim_policy: str = "newest"
     # queue-driven look-ahead prefetch: each engine iteration, tier
     # promotions are (re)issued for the first N queued requests —
     # requests deep in the queue do not pollute the HBM tier, and a
@@ -144,16 +150,36 @@ class Scheduler:
                 and self._stall_iters >= self.cfg.preempt_after_iters)
 
     def select_victim(self, decoding: List[Request]) -> Optional[Request]:
-        """Victim selection hook: the *newest* decode request — the
-        oldest in-flight work keeps progressing, which is what
-        guarantees liveness. Requests already preempted
+        """Victim selection hook, governed by ``cfg.victim_policy``:
+
+        ``newest`` (default): the newest decode request — the oldest
+        in-flight work keeps progressing, which is what guarantees
+        liveness. ``fewest-blocks``: the request holding the fewest
+        pool blocks (table blocks plus any open reservation's), so
+        each preemption discards the least completed work; ties break
+        newest-first. Either way, requests already preempted
         ``preempt_limit`` times are skipped (a pool that fits one
-        request would otherwise ping-pong two requests forever).
-        Override for other policies (e.g. fewest-blocks-held)."""
-        for req in reversed(decoding):
-            if self.preemptions.get(req.rid, 0) < self.cfg.preempt_limit:
-                return req
-        return None
+        request would otherwise ping-pong two requests forever)."""
+        eligible = [r for r in reversed(decoding)
+                    if self.preemptions.get(r.rid, 0)
+                    < self.cfg.preempt_limit]
+        if not eligible:
+            return None
+        if self.cfg.victim_policy == "fewest-blocks":
+            # min() is stable, and eligible is newest-first
+            return min(eligible, key=self._blocks_held)
+        return eligible[0]
+
+    @staticmethod
+    def _blocks_held(req: Request) -> int:
+        """Pool blocks a decode request pins: its table's, plus an open
+        reservation's undrawn tail (both return to the pool on
+        preemption teardown)."""
+        held = len(req.table.blocks) if req.table is not None else 0
+        res = req.reservation
+        if res is not None and not res.closed:
+            held += res.remaining
+        return held
 
     def preempt_requeue(self, req: Request):
         """Return a preempted request to the *front* of the queue: it

@@ -229,6 +229,38 @@ def test_scheduler_victim_selection_newest_first_with_limit():
     assert sched.select_victim([]) is None
 
 
+def test_scheduler_victim_selection_fewest_blocks_policy():
+    from repro.serving.kvpool import Reservation
+
+    sched = Scheduler(SchedulerConfig(preempt_after_iters=1,
+                                      preempt_limit=2,
+                                      victim_policy="fewest-blocks"))
+    a, b, c = _req(1), _req(2), _req(3)
+    a.table.blocks = [0, 1, 2, 3]
+    b.table.blocks = [4]
+    c.table.blocks = [5, 6, 7]
+    decoding = [a, b, c]                   # admission order: c newest
+    # b pins the fewest blocks -> least discarded work per preemption
+    assert sched.select_victim(decoding) is b
+    # an OPEN reservation's undrawn blocks count toward the footprint...
+    b.reservation = Reservation(blocks=[8, 9, 10, 11])
+    assert sched.select_victim(decoding) is c
+    # ...a closed one returns nothing on teardown, so it does not
+    b.reservation.closed = True
+    assert sched.select_victim(decoding) is b
+    # ties break newest-first (liveness parity with the default policy)
+    b.table.blocks = [4, 8, 9]
+    b.reservation = None
+    assert sched._blocks_held(b) == sched._blocks_held(c)
+    assert sched.select_victim(decoding) is c
+    # preempt_limit still guards eligibility under either policy
+    sched.preemptions[c.rid] = 2
+    assert sched.select_victim(decoding) is b
+    sched.preemptions[b.rid] = sched.preemptions[a.rid] = 2
+    assert sched.select_victim(decoding) is None
+    assert sched.select_victim([]) is None
+
+
 def test_preempt_requeue_is_front_and_not_a_retry():
     sched = Scheduler(SchedulerConfig(retry_limit=1))
     victim, waiting = _req(1), _req(2)

@@ -127,9 +127,27 @@ def test_select_strategies():
     assert list(select_recompute_tokens(ti, 0.4, "cachecraft")) == [0, 2]
     assert list(select_recompute_tokens(ti, 0.4, "h2o",
                                         token_total=tot)) == [1, 3]
-    assert len(select_recompute_tokens(ti, 0.4, "random")) == 2
+    assert len(select_recompute_tokens(
+        ti, 0.4, "random", rng=np.random.default_rng(7))) == 2
     assert len(select_recompute_tokens(ti, 1.0, "none")) == 0
     assert len(select_recompute_tokens(ti, 0.1, "all")) == 5
+
+
+def test_select_random_requires_rng():
+    """The silent default_rng(0) fallback re-seeded identically per
+    call, correlating the Random-Recomp baseline across chunks — now
+    an rng must come from the plan level, and the old fixed seed is
+    only available behind the explicit ``seeded_default`` kwarg."""
+    ti = np.arange(10.0)
+    with pytest.raises(ValueError, match="random"):
+        select_recompute_tokens(ti, 0.4, "random")
+    a = select_recompute_tokens(ti, 0.4, "random", seeded_default=True)
+    b = select_recompute_tokens(ti, 0.4, "random", seeded_default=True)
+    assert list(a) == list(b)               # explicit opt-in: deterministic
+    rng = np.random.default_rng(3)
+    draws = [select_recompute_tokens(ti, 0.4, "random", rng=rng)
+             for _ in range(8)]
+    assert len({tuple(d) for d in draws}) > 1   # plan-level rng advances
 
 
 # ---- Algorithm 1 -------------------------------------------------------------

@@ -1,0 +1,310 @@
+"""The recompute-strategy layer (core.strategies): registry contract,
+bit-identity of every migrated strategy against its pre-refactor
+output, the CacheBlend ``blend`` strategy's endpoints (== all at frac
+1.0, == none at frac 0.0) and order sensitivity, and the no-ladder
+source scan (no strategy name string-compared outside strategies.py)."""
+import argparse
+import pathlib
+import re
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_tiny
+from repro.core.chunkstore import ChunkStore, prompt_hashes
+from repro.core.planner import ChunkDecision, Segment, build_plan, layout_plan
+from repro.core.prefill import CacheCraftExecutor
+from repro.core.select import select_recompute_tokens
+from repro.core.strategies import (STRATEGIES, SelectScores, get_strategy)
+from repro.core.tiers import TieredStore
+from repro.models import model as M
+from repro.serving.api import EngineSpec
+
+LEGACY_NAMES = ("cachecraft", "random", "h2o", "none", "all", "prefix")
+
+
+# ---- registry contract ------------------------------------------------------
+def test_unknown_strategy_raises_with_name():
+    with pytest.raises(ValueError, match="bogus"):
+        get_strategy("bogus")
+    with pytest.raises(ValueError, match="bogus"):
+        EngineSpec(strategy="bogus").validate()
+    with pytest.raises(ValueError, match="bogus"):
+        select_recompute_tokens(np.ones(4), 0.5, "bogus")
+
+
+def test_every_registered_strategy_roundtrips_enginespec():
+    for name in STRATEGIES:
+        assert EngineSpec(strategy=name).validate().strategy == name
+
+
+def test_registry_flags():
+    assert set(LEGACY_NAMES) | {"blend"} == set(STRATEGIES)
+    assert not STRATEGIES["all"].needs_store
+    assert not STRATEGIES["all"].predicts_residency
+    assert not STRATEGIES["prefix"].predicts_residency
+    assert STRATEGIES["blend"].needs_deviation
+    for name in ("cachecraft", "random", "h2o", "none", "blend"):
+        assert STRATEGIES[name].needs_store
+        assert STRATEGIES[name].predicts_residency
+    for name in LEGACY_NAMES:
+        assert not STRATEGIES[name].needs_deviation
+
+
+def test_random_requires_plan_level_rng():
+    scores = SelectScores(inter=np.arange(10.0))
+    with pytest.raises(ValueError, match="rng"):
+        STRATEGIES["random"].select_tokens(scores, 0.4)
+    idx = STRATEGIES["random"].select_tokens(
+        scores, 0.4, np.random.default_rng(5))
+    assert len(idx) == 4 and (np.diff(idx) > 0).all()
+
+
+def test_executor_rng_decorrelates_across_chunks():
+    """One plan-level generator advances between chunks: consecutive
+    draws must not replay the same selection (the old per-call
+    default_rng(0) fallback did exactly that)."""
+    rng = np.random.default_rng(11)
+    scores = SelectScores(inter=np.zeros(24))
+    draws = [tuple(STRATEGIES["random"].select_tokens(scores, 0.3, rng))
+             for _ in range(6)]
+    assert len(set(draws)) > 1
+
+
+# ---- bit-identity vs the pre-refactor selection ladder ----------------------
+def _legacy_select(token_inter, cfo, strategy="cachecraft", rng=None,
+                   token_total=None):
+    """Verbatim copy of the pre-refactor core.select ladder."""
+    t = len(token_inter)
+    n = int(np.ceil(min(1.0, max(0.0, cfo)) * t))
+    if strategy == "none" or n == 0:
+        return np.zeros(0, np.int64)
+    if strategy == "all" or n >= t:
+        return np.arange(t)
+    if strategy == "cachecraft":
+        idx = np.argsort(-token_inter, kind="stable")[:n]
+    elif strategy == "random":
+        rng = rng or np.random.default_rng(0)
+        idx = rng.choice(t, size=n, replace=False)
+    elif strategy == "h2o":
+        src = token_total if token_total is not None else token_inter
+        idx = np.argsort(-src, kind="stable")[:n]
+    else:
+        raise ValueError(strategy)
+    return np.sort(idx)
+
+
+@pytest.mark.parametrize("strategy", ["cachecraft", "random", "h2o",
+                                      "none", "all"])
+@pytest.mark.parametrize("frac", [0.0, 0.05, 0.3, 0.5, 0.99, 1.0])
+def test_select_bit_identical_to_legacy(strategy, frac):
+    gen = np.random.default_rng(42)
+    ti = gen.normal(size=37)
+    tot = gen.normal(size=37)
+    old = _legacy_select(ti, frac, strategy,
+                         rng=np.random.default_rng(7), token_total=tot)
+    new = select_recompute_tokens(ti, frac, strategy,
+                                  rng=np.random.default_rng(7),
+                                  token_total=tot)
+    np.testing.assert_array_equal(old, new)
+
+
+def _legacy_build_plan(store, system_tokens, chunks, question_tokens, *,
+                       strategy="cachecraft", rng=None,
+                       force_recompute_fraction=None):
+    """Verbatim copy of the pre-refactor planner.build_plan decision
+    loop (prefix special case + select ladder), on top of the shared
+    layout helper."""
+    segs, pos = [], 0
+    all_parts = [np.asarray(system_tokens)] + [np.asarray(c) for c in chunks]
+    hashes = prompt_hashes(all_parts[0], all_parts[1:])
+    for i, part in enumerate(all_parts):
+        segs.append(Segment(stat_id=i, start=pos, end=pos + len(part),
+                            tokens=part, chash=hashes[i]))
+        pos += len(part)
+    q = Segment(stat_id=len(all_parts), start=pos,
+                end=pos + len(question_tokens),
+                tokens=np.asarray(question_tokens), chash=None)
+    pos += len(question_tokens)
+
+    decisions, prefix_broken = [], False
+    for i, seg in enumerate(segs):
+        hit = store.best_variant(seg.chash, hashes[:i]) if store else None
+        if strategy == "prefix":
+            exact = None
+            if not prefix_broken and store is not None:
+                for var in store.lookup(seg.chash):
+                    if list(var.scores.prefix_hashes) == hashes[:i] and \
+                            var.scores.orig_start == seg.start:
+                        exact = var
+                        break
+            if exact is None:
+                prefix_broken = True
+                decisions.append(ChunkDecision(
+                    seg=seg, variant=None, cfo=1.0,
+                    recompute_idx=np.arange(seg.length)))
+            else:
+                decisions.append(ChunkDecision(
+                    seg=seg, variant=exact, cfo=0.0,
+                    recompute_idx=np.zeros(0, np.int64)))
+            continue
+        if hit is None:
+            decisions.append(ChunkDecision(
+                seg=seg, variant=None, cfo=1.0,
+                recompute_idx=np.arange(seg.length)))
+            continue
+        var, cfo_val = hit
+        frac = (force_recompute_fraction
+                if force_recompute_fraction is not None else cfo_val)
+        idx = _legacy_select(
+            var.scores.token_inter[:seg.length], frac, strategy=strategy,
+            rng=rng, token_total=getattr(var.scores, "token_total", None))
+        decisions.append(ChunkDecision(seg=seg, variant=var, cfo=cfo_val,
+                                       recompute_idx=idx))
+    return layout_plan(segs, decisions, q, pos)
+
+
+# ---- shared tiny world ------------------------------------------------------
+@pytest.fixture(scope="module")
+def world(tmp_path_factory):
+    cfg = get_tiny("llama3-8b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    V = cfg.vocab_size
+    kb = [rng.integers(0, V, 24) for _ in range(4)]
+    sys_t = rng.integers(0, V, 8)
+    q1 = rng.integers(0, V, 12)
+    q2 = rng.integers(0, V, 12)
+    return cfg, params, kb, sys_t, q1, q2, tmp_path_factory
+
+
+def _warm_store(world, tag, order=None):
+    cfg, params, kb, sys_t, q1, _q2, tmp = world
+    tiers = TieredStore(1 << 30, 1 << 30, str(tmp.mktemp(tag)),
+                        start_worker=False)
+    store = ChunkStore(tiers, n_chunks=20, m_variants=3)
+    CacheCraftExecutor(cfg, params, store, use_focus=False).process(
+        sys_t, order if order is not None else kb[:3], q1)
+    return store
+
+
+@pytest.mark.parametrize("strategy", LEGACY_NAMES)
+def test_build_plan_bit_identical_to_legacy(world, strategy):
+    cfg, params, kb, sys_t, q1, q2, _ = world
+    store = _warm_store(world, f"plan-{strategy}")
+    chunks = [kb[1], kb[0], kb[3]]          # reorder + one novel chunk
+    for frac in (None, 0.4):
+        old = _legacy_build_plan(
+            None if strategy == "all" else store, sys_t, chunks, q2,
+            strategy=strategy, rng=np.random.default_rng(3),
+            force_recompute_fraction=frac)
+        new = build_plan(                    # gates the store itself
+            store, sys_t, chunks, q2, strategy=strategy,
+            rng=np.random.default_rng(3), force_recompute_fraction=frac)
+        assert len(old.decisions) == len(new.decisions)
+        for do, dn in zip(old.decisions, new.decisions):
+            assert do.is_hit == dn.is_hit
+            assert do.cfo == pytest.approx(dn.cfo)
+            np.testing.assert_array_equal(do.recompute_idx,
+                                          dn.recompute_idx)
+        np.testing.assert_array_equal(old.active_positions,
+                                      new.active_positions)
+        np.testing.assert_array_equal(old.active_tokens, new.active_tokens)
+        np.testing.assert_array_equal(old.active_stat_ids,
+                                      new.active_stat_ids)
+        assert old.num_cached_tokens == new.num_cached_tokens
+        assert old.num_active_tokens == new.num_active_tokens
+
+
+# ---- blend endpoints + order sensitivity ------------------------------------
+def _eval_executor(world, store, strategy, frac):
+    cfg, params, *_ = world
+    return CacheCraftExecutor(
+        cfg, params, store, strategy=strategy, use_focus=False,
+        force_recompute_fraction=frac, store_fixed_variants=False,
+        store_new_chunks=False)
+
+
+def test_blend_equals_all_at_fraction_one(world):
+    cfg, params, kb, sys_t, q1, q2, _ = world
+    store = _warm_store(world, "blend-all")
+    chunks = [kb[1], kb[0], kb[2]]
+    ra = CacheCraftExecutor(cfg, params, None, strategy="all",
+                            use_focus=False).process(sys_t, chunks, q2)
+    rb = _eval_executor(world, store, "blend", 1.0).process(
+        sys_t, chunks, q2)
+    assert all(len(d.recompute_idx) == d.seg.length
+               for d in rb.plan.decisions)
+    np.testing.assert_array_equal(rb.logits_last, ra.logits_last)
+    np.testing.assert_array_equal(rb.k_layers, ra.k_layers)
+    np.testing.assert_array_equal(rb.v_layers, ra.v_layers)
+
+
+def test_blend_equals_none_at_fraction_zero(world):
+    cfg, params, kb, sys_t, q1, q2, _ = world
+    store = _warm_store(world, "blend-none")
+    chunks = [kb[1], kb[0], kb[2]]
+    rn = _eval_executor(world, store, "none", None).process(
+        sys_t, chunks, q2)
+    rb = _eval_executor(world, store, "blend", 0.0).process(
+        sys_t, chunks, q2)
+    assert all(len(d.recompute_idx) == 0
+               for d in rb.plan.decisions if d.is_hit)
+    np.testing.assert_array_equal(rb.logits_last, rn.logits_last)
+    np.testing.assert_array_equal(rb.k_layers, rn.k_layers)
+    np.testing.assert_array_equal(rb.v_layers, rn.v_layers)
+
+
+def _idx_for_chunk(plan, tokens):
+    for d in plan.decisions:
+        if d.seg.length == len(tokens) and (d.seg.tokens == tokens).all():
+            return d.recompute_idx
+    raise AssertionError("chunk not found in plan")
+
+
+def test_blend_selection_is_order_sensitive_cachecraft_is_not(world):
+    """Rotating the serving context changes which tokens of a reused
+    chunk deviate (positions and neighbors move), so blend — which
+    measures deviation in the serving context — picks a different set,
+    while cachecraft reads the same stored Eq. 14 scores either way."""
+    cfg, params, kb, sys_t, q1, q2, _ = world
+    store = _warm_store(world, "blend-order")
+    orig = [kb[0], kb[1], kb[2]]
+    rot = [kb[2], kb[0], kb[1]]
+    sel = {}
+    for strat in ("blend", "cachecraft"):
+        ex = _eval_executor(world, store, strat, 0.3)
+        p_orig = ex.process(sys_t, orig, q2).plan
+        p_rot = ex.process(sys_t, rot, q2).plan
+        sel[strat] = (_idx_for_chunk(p_orig, kb[0]),
+                      _idx_for_chunk(p_rot, kb[0]))
+        assert all(d.is_hit for d in p_orig.decisions)
+        assert all(d.is_hit for d in p_rot.decisions)
+    np.testing.assert_array_equal(*sel["cachecraft"])
+    assert list(sel["blend"][0]) != list(sel["blend"][1])
+
+
+# ---- store gating + source scan ---------------------------------------------
+def test_from_args_store_gating_via_needs_store():
+    ns = argparse.Namespace(strategy="all")
+    assert EngineSpec.from_args(ns).store is None
+    for name in ("cachecraft", "blend", "prefix"):
+        assert EngineSpec.from_args(
+            argparse.Namespace(strategy=name)).store is not None
+
+
+def test_no_strategy_string_comparisons_outside_registry():
+    """The refactor's point: strategy names are data, dispatched in ONE
+    module. Any `strategy ==` / `strategy !=` / membership ladder that
+    creeps back into src/ outside core/strategies.py fails here."""
+    src = pathlib.Path(__file__).resolve().parents[1] / "src"
+    pat = re.compile(r"strategy\s*(==|!=|\bnot in\b|\bin\b\s*\()")
+    offenders = []
+    for py in src.rglob("*.py"):
+        if py.name == "strategies.py":
+            continue
+        for i, line in enumerate(py.read_text().splitlines(), 1):
+            if pat.search(line):
+                offenders.append(f"{py}:{i}: {line.strip()}")
+    assert not offenders, "\n".join(offenders)
