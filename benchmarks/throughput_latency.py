@@ -32,6 +32,12 @@ Also emitted:
   attention FLOPs, with output tokens identical and traced decode
   logits bit-identical across the two runs. Trajectory appends to
   ``results/BENCH_sharded.json``.
+* ``fig22_paged_{arena,paged}`` — arena-gather decode vs
+  block-table-native paged decode on the churny join/leave schedule
+  (the paged-decode tentpole): streamed tokens and per-step decode
+  logits bit-equal while ``decode_gather_bytes`` and
+  ``decode_join_copies`` drop to zero (count-based). Trajectory
+  appends to ``results/BENCH_paged.json``.
 
 ``--ci-smoke`` runs the perf gates (admission throughput, decode-churn
 rebuild *counts*, copy-vs-zerocopy reserved *blocks*, preemption
@@ -303,6 +309,60 @@ def _preemption_compare(cfg, params, kb, n_req, starved_blocks=20):
     return out
 
 
+# ---- paged decode (PR 10 tentpole) ------------------------------------------
+def _paged_compare(cfg, params, kb, n_req):
+    """Arena-gather decode vs block-table-native paged decode on the
+    churny join/leave schedule: streamed tokens AND per-step decode
+    logits bit-equal, while the paged engine moves strictly fewer
+    decode gather bytes (zero — its only decode-side traffic is the
+    dirty-block sync of freshly written pool blocks). Returns the
+    count-based gate numbers per mode and appends the trajectory to
+    ``results/BENCH_paged.json``."""
+    sched = SchedulerConfig(max_batch_tokens=100_000, max_decode_batch=4,
+                            max_prefill_batch=2)
+    out, tokens, traces = {}, {}, {}
+    for label, paged in (("arena", False), ("paged", True)):
+        eng = make_engine(cfg, params, None, strategy="all",
+                          use_focus=False, sched=sched, pool_blocks=512,
+                          decode_bucket_b=4, seq_bucket=512,
+                          trace_decode=True, paged_decode=paged)
+        reqs = _churn_workload(kb, n_req)
+        stats = eng.run(reqs)
+        done = [r for r in reqs if r.e2e_latency is not None]
+        lat = float(np.mean([r.e2e_latency for r in done])) if done \
+            else 0.0
+        c = eng.counters
+        tokens[label] = {r.rid: list(r.output_tokens) for r in reqs}
+        traces[label] = eng.decode_trace
+        emit(f"fig22_paged_{label}", lat * 1e6,
+             f"mean_e2e_s={lat:.3f};"
+             f"decode_gather_bytes={c.decode_gather_bytes};"
+             f"decode_join_copies={c.decode_join_copies};"
+             f"paged_block_syncs={c.paged_block_syncs};"
+             f"paged_sync_bytes={c.paged_sync_bytes};"
+             f"completed={stats.completed};failed={stats.failed}")
+        out[label] = dict(
+            decode_gather_bytes=c.decode_gather_bytes,
+            decode_join_copies=c.decode_join_copies,
+            paged_block_syncs=c.paged_block_syncs,
+            paged_sync_bytes=c.paged_sync_bytes,
+            completed=stats.completed, failed=stats.failed)
+    out["tokens_equal"] = tokens["arena"] == tokens["paged"]
+    out["logits_equal"] = (
+        len(traces["arena"]) == len(traces["paged"]) > 0 and all(
+            set(ta) == set(tp) and all(
+                np.array_equal(ta[rid], tp[rid]) for rid in ta)
+            for ta, tp in zip(traces["arena"], traces["paged"])))
+    _record_trajectory(
+        "BENCH_paged.json",
+        dict(n_req=n_req,
+             tokens_equal=out["tokens_equal"],
+             logits_equal=out["logits_equal"], **{
+                 f"{k}_{label}": v for label in ("arena", "paged")
+                 for k, v in out[label].items()}))
+    return out
+
+
 # ---- tensor-parallel sharded serving (PR 6 tentpole) ------------------------
 # The parent process has already initialized jax on one device, so the
 # 4-device comparison runs in a child with XLA_FLAGS set before the
@@ -463,6 +523,13 @@ def ci_smoke() -> int:
       zero reserved blocks afterwards, zero FAILED, per-tenant TTFT /
       queue-wait p99 rollups present. Trajectory in
       ``results/BENCH_serve.json``.
+    * paged — arena vs block-table-native paged decode on the churny
+      schedule: streamed tokens and per-step decode logits bit-equal,
+      ``decode_gather_bytes`` strictly lower than arena (and exactly
+      zero, with zero join copies), dirty-block syncs observed — the
+      paged engine must be the same math reading KV in place from the
+      pool (all count-based). Trajectory in
+      ``results/BENCH_paged.json``.
     * frontier — the quality-vs-recompute frontier on the
       reordered-context workload
       (``quality_vs_recompute.frontier_compare``): some blend
@@ -562,6 +629,19 @@ def ci_smoke() -> int:
     # (sv["ok"]; trajectory in results/BENCH_serve.json)
     sv = serve_gate()
 
+    pg = _paged_compare(cfg, params, kb, n_req=6)
+    # bit-equality at strictly fewer moved bytes, all count-based: the
+    # paged engine reads KV in place from the pool, so the per-step
+    # gather traffic of the arena path must vanish outright
+    ok_paged = (
+        pg["tokens_equal"] and pg["logits_equal"]
+        and pg["arena"]["failed"] == 0 and pg["paged"]["failed"] == 0
+        and pg["paged"]["decode_gather_bytes"]
+        < pg["arena"]["decode_gather_bytes"]
+        and pg["paged"]["decode_gather_bytes"] == 0
+        and pg["paged"]["decode_join_copies"] == 0
+        and pg["paged"]["paged_block_syncs"] > 0)
+
     sh = _sharded_compare()
     # bit-equality + strictly-fewer-per-device-work, all count-based:
     # the sharded engine must be a pure repartitioning of the same math
@@ -591,6 +671,9 @@ def ci_smoke() -> int:
                         logits_equal=sh["logits_equal"],
                         onedev=sh["onedev"], fourdev=sh["fourdev"]),
         "serve": sv,
+        "paged": dict(ok=ok_paged, tokens_equal=pg["tokens_equal"],
+                      logits_equal=pg["logits_equal"],
+                      arena=pg["arena"], paged=pg["paged"]),
         "frontier": dict(ok=fr["ok"], eps=fr["eps"],
                          anchor=fr["anchor"], blend_win=fr["blend_win"]),
         "quant": dict(ok=ok_quant, capacity_fp32=evq["fp32"],
@@ -626,7 +709,8 @@ if __name__ == "__main__":
                          "FLOPs/bytes, quantized-tier capacity + "
                          "quality delta, online-serve HTTP streaming "
                          "bit-equality + mid-decode cancel, blend-vs-"
-                         "cachecraft recompute frontier); writes "
+                         "cachecraft recompute frontier, paged-decode "
+                         "bit-equality at zero gather bytes); writes "
                          "results/fig22_ci_smoke.json; exit 1 on any "
                          "gate failure")
     args = ap.parse_args()

@@ -53,12 +53,19 @@
 #     (CacheBlend fusion — top KV-deviation tokens anywhere in the
 #     chunk) must reach ROUGE-L within eps of the cachecraft anchor
 #     point at a STRICTLY lower recompute-token count (count-based),
+#   * paged decode: block-table-native decode reading KV in place from
+#     the pool vs the arena-gather path on a churny join/leave
+#     schedule — streamed tokens and per-step decode logits bit-equal
+#     while decode_gather_bytes is strictly lower than arena (exactly
+#     zero, with zero join copies and dirty-block syncs observed;
+#     count-based),
 # and writes results/fig22_ci_smoke.json for the CI artifact upload
 # (plus the preemption trajectory in results/BENCH_preemption.json,
 # the sharded trajectory in results/BENCH_sharded.json, the quant
 # trajectory in results/BENCH_quant.json, the serve trajectory in
-# results/BENCH_serve.json, and the frontier trajectory in
-# results/BENCH_frontier.json).
+# results/BENCH_serve.json, the frontier trajectory in
+# results/BENCH_frontier.json, and the paged trajectory in
+# results/BENCH_paged.json).
 # --smoke-only skips the pytest suite for fast local iteration on the
 # perf gates.
 set -euo pipefail
@@ -112,7 +119,8 @@ if [[ "$status" == "0" && "$perf_smoke" == "1" ]]; then
          "+ sharded bit-equality/FLOPs gate" \
          "+ quantized-tier capacity/quality gate" \
          "+ online-serve HTTP streaming/cancel gate" \
-         "+ blend-vs-cachecraft recompute-frontier gate)"
+         "+ blend-vs-cachecraft recompute-frontier gate" \
+         "+ paged-decode bit-equality/zero-gather gate)"
     python -m benchmarks.throughput_latency --ci-smoke || status=$?
     echo "CI perf smoke exit status: $status"
 fi

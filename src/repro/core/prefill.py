@@ -99,6 +99,71 @@ def decode_fn(cfg, attn_impl="auto"):
     return fn
 
 
+@functools.lru_cache(maxsize=None)
+def paged_decode_fn(cfg, attn_impl="paged", block_size=0):
+    """Jitted one-token decode over the POOL-TWIN cache (paged decode:
+    leaves ``{"kp": [NBf,Hkv,D], "vp", "ppos": [NBf]}`` shared by every
+    request — see the paged attend contract in models/backend.py).
+
+    ``slots`` are pool-FLAT append slots (block * block_size + offset,
+    pre-opened host-side by ``KVPool.ensure_append_slot``; -1 = masked
+    row). ``rows [B, S]`` are the compact slot-index rows for the
+    *existing* tokens; the appended token's slot is spliced in here at
+    column ``positions`` (its logical index) so attention sees it the
+    same step it is written — exactly like the arena path. The cache is
+    donated: the twin is large (the whole pool) and must not double."""
+    @functools.partial(jax.jit, donate_argnums=(3,))
+    def fn(params, tokens, positions, cache, slots, rows, block_rows=None):
+        B, S = rows.shape
+        col = jnp.where(slots >= 0, positions, S)
+        rows = rows.at[jnp.arange(B), col].set(slots, mode="drop")
+        out = M.decode_step(cfg, params, tokens, positions, cache,
+                            decode_slot=slots, attn_impl=attn_impl,
+                            paged_rows=rows, paged_block_rows=block_rows,
+                            paged_block_size=block_size)
+        return out.logits, out.cache
+    return fn
+
+
+@functools.lru_cache(maxsize=None)
+def paged_sync_fn(cfg):
+    """Jitted dirty-block upload into the pool-twin cache: host-side
+    pool writes (prefill write-back, CoW clones, recompute fixups) land
+    on the device twin as one scatter of the touched blocks' slots.
+    ``slots [m]`` flat slot ids (-1 entries drop), ``k_upd/v_upd
+    [L, m, Hkv, D]``, ``pos_upd [m]``. The cache is donated — the
+    update must not copy the whole twin."""
+    P, G = len(cfg.pattern), cfg.n_groups
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def fn(cache, slots, k_upd, v_upd, pos_upd):
+        nslots = (cache["groups"][0]["kp"].shape[1] if G
+                  else cache["tail"][0]["kp"].shape[0])
+        wslot = jnp.where(slots >= 0, slots, nslots)
+        out = {"groups": [], "tail": []}
+        if G:
+            kg = k_upd[:G * P].reshape(G, P, *k_upd.shape[1:])
+            vg = v_upd[:G * P].reshape(G, P, *v_upd.shape[1:])
+            posg = jnp.broadcast_to(pos_upd, (G,) + pos_upd.shape)
+            for p in range(P):
+                c = cache["groups"][p]
+                out["groups"].append({
+                    "kp": c["kp"].at[:, wslot].set(kg[:, p], mode="drop"),
+                    "vp": c["vp"].at[:, wslot].set(vg[:, p], mode="drop"),
+                    "ppos": c["ppos"].at[:, wslot].set(posg, mode="drop"),
+                })
+        for i in range(cfg.n_tail):
+            c = cache["tail"][i]
+            li = G * P + i
+            out["tail"].append({
+                "kp": c["kp"].at[wslot].set(k_upd[li], mode="drop"),
+                "vp": c["vp"].at[wslot].set(v_upd[li], mode="drop"),
+                "ppos": c["ppos"].at[wslot].set(pos_upd, mode="drop"),
+            })
+        return out
+    return fn
+
+
 # ---------------------------------------------------------------------------
 # cache packing: engine-side per-layer numpy KV <-> model stacked cache
 # ---------------------------------------------------------------------------
@@ -124,6 +189,36 @@ def pack_cache(cfg: ModelConfig, k_np, v_np, pos_np):
         li = G * P + i
         tail.append({"k": k[li][None], "v": v[li][None],
                      "pos": pos[None]})
+    return {"groups": groups, "tail": tail}
+
+
+def pack_paged_cache(cfg: ModelConfig, k_pool, v_pool, pos_pool):
+    """Pool block arenas (``KVPool.block_view()``: k/v [L, NB, bs, Hkv,
+    D], pos [NB, bs]) -> the pool-twin decode cache pytree with flat
+    leaves ``{"kp": [NBf, Hkv, D], "vp", "ppos": [NBf]}`` per layer
+    (grouped [G, ...] along the scan axis). One wholesale upload at
+    paged-decode start; ``paged_sync_fn`` keeps it coherent after."""
+    P, G = len(cfg.pattern), cfg.n_groups
+    k = jnp.asarray(np.asarray(k_pool))
+    v = jnp.asarray(np.asarray(v_pool))
+    L = k.shape[0]
+    kf = k.reshape(L, -1, *k.shape[3:])           # [L, NBf, Hkv, D]
+    vf = v.reshape(L, -1, *v.shape[3:])
+    pos = jnp.asarray(np.asarray(pos_pool).reshape(-1), jnp.int32)
+    groups = []
+    if G:
+        kg = kf[:G * P].reshape(G, P, *kf.shape[1:])
+        vg = vf[:G * P].reshape(G, P, *vf.shape[1:])
+        for p in range(P):
+            groups.append({
+                "kp": kg[:, p],                   # [G, NBf, Hkv, D]
+                "vp": vg[:, p],
+                "ppos": jnp.broadcast_to(pos, (G,) + pos.shape),
+            })
+    tail = []
+    for i in range(cfg.n_tail):
+        li = G * P + i
+        tail.append({"kp": kf[li], "vp": vf[li], "ppos": pos})
     return {"groups": groups, "tail": tail}
 
 

@@ -64,8 +64,12 @@ its storage scheme:
 
 * ``"fp32"`` (default for both tiers) — raw pass-through, the legacy
   bit-exact behavior;
-* ``"int8"`` — per-tensor scale, the quantize/dequantize-with-scale
-  idiom lifted from ``distributed/compression.py`` (4x fewer bytes);
+* ``"int8"`` — per-HEAD scales for KV-shaped leaves (ndim >= 3, head
+  axis ``-2``): one fp32 scale per head, so a head with small
+  activations is not crushed by an outlier head's range (4x fewer
+  bytes; legacy per-tensor-scale files still decode). Leaves without a
+  head axis keep the per-tensor scale, the quantize/dequantize idiom
+  lifted from ``distributed/compression.py``;
 * ``"fp8"`` — blockwise float8_e4m3fn, one fp32 scale per
   ``FP8_BLOCK`` elements (~4x fewer bytes, better dynamic range for
   outlier-heavy tensors; degrades to ``int8`` when ``ml_dtypes`` is
@@ -94,15 +98,35 @@ unchanged. Quality is gated by ``benchmarks/quality_vs_recompute.py``
 (quantized score delta vs fp32 <= eps at matched recompute ratio) and
 capacity by ``fig22_eviction_quant`` (strictly fewer deep tier misses
 at an equal byte budget).
+
+SSD entropy coding (``tier_compress``)
+--------------------------------------
+Quantized payloads still carry entropy the disk does not need to
+store: ``tier_compress={"ssd": "zstd"}`` compresses the serialized
+``.npz`` byte stream before it hits the SSD tier (composing with
+``tier_dtypes`` — quantize first, entropy-code the quantized bytes).
+Codecs: ``"zstd"`` (the ``zstandard`` package, import-gated — when it
+is absent the store degrades to ``"zlib"`` and counts the fallback in
+``stats["ssd_codec_fallbacks"]``, it never fails construction),
+``"zlib"`` (stdlib, always available), ``"none"`` (legacy raw
+``.npz``). Compressed entries live in ``<key>.npz.zst`` /
+``<key>.npz.dfl`` files; the ledger counts the COMPRESSED on-disk
+bytes (that is what the tier stores and what an SSD read moves), and
+``stats["ssd_compress_saved"]`` accumulates raw-minus-stored. Reads
+auto-detect the suffix, so legacy plain ``.npz`` files written before
+compression was enabled keep loading, and the restart scan registers
+both kinds.
 """
 from __future__ import annotations
 
+import io
 import itertools
 import json
 import os
 import queue
 import threading
 import time
+import zlib
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -138,6 +162,26 @@ except Exception:          # pragma: no cover - jax guarantees ml_dtypes
     _FP8_DTYPE = None
     _FP8_MAX = 0.0
 
+# ---- SSD entropy coding (module docstring "SSD entropy coding") ------------
+
+COMPRESS_CODECS = ("none", "zlib", "zstd")
+# codec -> (file suffix appended to ".npz", compress, decompress).
+# zlib level 1: chunk KV payloads (quantized or fp32 mantissa soup) get
+# most of their win from the match stage — higher levels cost CPU on
+# the demotion path for single-digit extra percent
+_CODECS: Dict[str, tuple] = {
+    "zlib": (".dfl", lambda b: zlib.compress(b, 1), zlib.decompress),
+}
+try:                       # import-gated: never installed on demand
+    import zstandard as _zstd
+    _CODECS["zstd"] = (".zst",
+                       lambda b: _zstd.ZstdCompressor().compress(b),
+                       lambda b: _zstd.ZstdDecompressor().decompress(b))
+except Exception:
+    pass
+# every known suffix, for read-side auto-detection and cleanup
+_COMPRESS_SUFFIXES = (".zst", ".dfl")
+
 
 @dataclass
 class QuantizedTree:
@@ -160,6 +204,17 @@ def _quantize_leaf(x: np.ndarray, scheme: str):
         return x, None
     xf = np.asarray(x, np.float32)
     if scheme == "int8":
+        if xf.ndim >= 3:
+            # KV-shaped leaf [..., H, D]: one scale per head (axis -2)
+            # so a quiet head's resolution is not set by the loudest
+            # head's outliers. The scale vector broadcasts back over
+            # the trailing head_dim axis on dequant.
+            red = tuple(i for i in range(xf.ndim) if i != xf.ndim - 2)
+            scale = (np.abs(xf).max(axis=red) / 127.0
+                     + 1e-12).astype(np.float32)
+            q = np.clip(np.rint(xf / scale[:, None]), -127, 127) \
+                .astype(np.int8)
+            return q, scale
         scale = np.float32(np.abs(xf).max() / 127.0 + 1e-12)
         q = np.clip(np.rint(xf / scale), -127, 127).astype(np.int8)
         return q, np.asarray([scale], np.float32)
@@ -180,7 +235,14 @@ def _dequantize_leaf(payload: np.ndarray, scale, scheme: str):
     if scale is None:
         return payload
     if scheme == "int8":
-        return payload.astype(np.float32) * np.float32(scale[0])
+        if scale.size > 1:
+            # per-head scale vector [H] over payload [..., H, D]
+            return payload.astype(np.float32) \
+                * scale.astype(np.float32)[:, None]
+        # legacy per-tensor-scale entries (older SSD files; stored as
+        # size-1 arrays, sometimes 0-d) decode through the scalar path
+        return payload.astype(np.float32) \
+            * np.float32(np.asarray(scale).reshape(-1)[0])
     flat = payload.astype(np.float32).reshape(-1)
     pad = (-flat.size) % FP8_BLOCK
     if pad:
@@ -232,11 +294,23 @@ def stored_nbytes(value) -> int:
 
 def quant_error_bound(x, scheme: str) -> float:
     """Worst-case per-element abs error of one quantize/dequantize
-    round trip of ``x`` (test helper)."""
+    round trip of ``x`` (test helper). For int8 this is the PER-TENSOR
+    bound — per-head scales (KV-shaped leaves) can only shrink the
+    scale, so it upper-bounds them too; ``int8_head_error_bounds``
+    gives the tight per-head figures."""
     m = float(np.abs(np.asarray(x, np.float32)).max())
     if scheme == "int8":
         return m / 127.0 * 0.51 + 1e-9
     return m * 0.08 + 1e-9      # e4m3: <= 2^-4 relative + scale margin
+
+
+def int8_head_error_bounds(x) -> np.ndarray:
+    """Per-head worst-case abs error [H] of the int8 per-head-scale
+    round trip of a KV-shaped leaf ``[..., H, D]`` (test helper): each
+    head's bound follows its own max, not the whole tensor's."""
+    xf = np.asarray(x, np.float32)
+    red = tuple(i for i in range(xf.ndim) if i != xf.ndim - 2)
+    return np.abs(xf).max(axis=red) / 127.0 * 0.51 + 1e-9
 
 
 def _leaves(tree):
@@ -312,7 +386,8 @@ class TieredStore:
                  start_worker: bool = True,
                  policy: Optional[EvictionPolicy] = None,
                  workers: int = 1,
-                 tier_dtypes: Optional[Dict[str, str]] = None):
+                 tier_dtypes: Optional[Dict[str, str]] = None,
+                 tier_compress: Optional[Dict[str, str]] = None):
         self.caps = {"hbm": hbm_bytes, "cpu": cpu_bytes}
         self.used = {"hbm": 0, "cpu": 0, "ssd": 0}
         self.hbm: Dict[str, Any] = {}
@@ -331,6 +406,21 @@ class TieredStore:
             if s == "fp8" and _FP8_DTYPE is None:
                 s = "int8"           # ml_dtypes absent: degrade, never fail
             self.tier_dtypes[t] = s
+        # SSD entropy coding (module docstring): resolve the configured
+        # codec once, degrading zstd -> zlib when the package is absent
+        # (counted, never a construction failure)
+        self._codec_fallbacks = 0
+        self.ssd_codec = "none"
+        for t, c in (tier_compress or {}).items():
+            if t != "ssd":
+                raise ValueError(f"tier_compress: unknown tier {t!r} "
+                                 "(only 'ssd' supports entropy coding)")
+            if c not in COMPRESS_CODECS:
+                raise ValueError(f"tier_compress: unknown codec {c!r}")
+            if c != "none" and c not in _CODECS:
+                self._codec_fallbacks += 1
+                c = "zlib"           # stdlib: always available
+            self.ssd_codec = c
         self.sizes: Dict[str, int] = {}
         self.lru: Dict[str, float] = {}
         # per-key write generation: ``get`` snapshots it at the hit and
@@ -359,7 +449,9 @@ class TieredStore:
         self.stats = {"hits": {"hbm": 0, "cpu": 0, "ssd": 0},
                       "demotions": 0, "promotions": 0,
                       "preload_errors": 0, "prefetch_cancelled": 0,
-                      "quant_bytes_saved": 0, "dequant_loads": 0}
+                      "quant_bytes_saved": 0, "dequant_loads": 0,
+                      "ssd_compress_saved": 0,
+                      "ssd_codec_fallbacks": self._codec_fallbacks}
         # ssd residency ledger: key -> bytes accounted in used["ssd"]
         self.ssd_keys: Dict[str, int] = {}
         self._structs: Dict[str, Any] = {}
@@ -405,9 +497,7 @@ class TieredStore:
             self.used["cpu"] -= nb_old
         if key in self.ssd_keys:
             self.used["ssd"] -= self.ssd_keys.pop(key)
-            p = self._ssd_path(key)
-            if os.path.exists(p):
-                os.remove(p)
+            self._remove_ssd_files(key)
 
     # ---- placement -------------------------------------------------------
     def _encode(self, tier: str, value):
@@ -520,7 +610,30 @@ class TieredStore:
 
     # ---- SSD persistence -------------------------------------------------
     def _ssd_path(self, key: str) -> str:
-        return os.path.join(self.ssd_dir, key + ".npz")
+        """Path the CONFIGURED codec writes (plain ``.npz`` for
+        ``none``, ``.npz.zst`` / ``.npz.dfl`` otherwise)."""
+        base = os.path.join(self.ssd_dir, key + ".npz")
+        if self.ssd_codec != "none":
+            base += _CODECS[self.ssd_codec][0]
+        return base
+
+    def _find_ssd_file(self, key: str) -> Optional[str]:
+        """Locate ``key``'s on-disk file whatever codec wrote it: the
+        configured suffix first, then every other known suffix, then
+        the legacy plain ``.npz`` — files written before compression
+        was (re)configured keep loading."""
+        base = os.path.join(self.ssd_dir, key + ".npz")
+        for p in [self._ssd_path(key)] \
+                + [base + s for s in _COMPRESS_SUFFIXES] + [base]:
+            if os.path.exists(p):
+                return p
+        return None
+
+    def _remove_ssd_files(self, key: str):
+        base = os.path.join(self.ssd_dir, key + ".npz")
+        for p in {base, *(base + s for s in _COMPRESS_SUFFIXES)}:
+            if os.path.exists(p):
+                os.remove(p)
 
     def _write_ssd(self, key: str, value):
         """Idempotent in the accounting: rewriting an existing key
@@ -551,8 +664,29 @@ class TieredStore:
             json.dumps(struct).encode(), np.uint8)
         flat["__nbytes__"] = np.int64(nb)
         flat["__scheme__"] = np.frombuffer(scheme.encode(), np.uint8)
-        np.savez(self._ssd_path(key), **flat)
+        if self.ssd_codec == "none":
+            np.savez(self._ssd_path(key), **flat)
+        else:
+            # entropy-code the serialized npz stream; the ledger then
+            # counts the COMPRESSED bytes — what the tier actually
+            # stores and what a read moves off the disk
+            buf = io.BytesIO()
+            np.savez(buf, **flat)
+            raw = buf.getvalue()
+            comp = _CODECS[self.ssd_codec][1](raw)
+            with open(self._ssd_path(key), "wb") as f:
+                f.write(comp)
+            nb = len(comp)
+            with self.lock:
+                self.stats["ssd_compress_saved"] += len(raw) - nb
         with self.lock:
+            # a rewrite under a different codec leaves no stale twin
+            # behind another suffix
+            keep = self._ssd_path(key)
+            base = os.path.join(self.ssd_dir, key + ".npz")
+            for p in {base, *(base + s for s in _COMPRESS_SUFFIXES)}:
+                if p != keep and os.path.exists(p):
+                    os.remove(p)
             self.sizes[key] = nb
             self.used["ssd"] += nb - self.ssd_keys.get(key, 0)
             self.ssd_keys[key] = nb
@@ -560,8 +694,20 @@ class TieredStore:
 
     def _read_ssd(self, key: str):
         """-> stored representation (raw pytree for fp32/legacy files,
-        ``QuantizedTree`` for quantized ones) or ``None`` (miss)."""
-        with np.load(self._ssd_path(key)) as z:
+        ``QuantizedTree`` for quantized ones) or ``None`` (miss). The
+        file is located by suffix auto-detection, so entries written
+        under any codec — or before compression existed — are served
+        regardless of the store's current configuration."""
+        path = self._find_ssd_file(key)
+        if path is None:
+            return None
+        src: Any = path
+        for suffix, _c, decompress in _CODECS.values():
+            if path.endswith(suffix):
+                with open(path, "rb") as f:
+                    src = io.BytesIO(decompress(f.read()))
+                break
+        with np.load(src) as z:
             files = set(z.files)
             struct = self._structs.get(key)
             if struct is None:
@@ -601,15 +747,29 @@ class TieredStore:
         before persistence existed) are unreadable in a fresh process
         and stay unregistered — a miss, not a poisoned entry."""
         for fname in sorted(os.listdir(self.ssd_dir)):
-            if not fname.endswith(".npz"):
-                continue
-            key = fname[:-4]
-            try:
-                with np.load(os.path.join(self.ssd_dir, fname)) as z:
-                    if "__nbytes__" not in z.files:
-                        continue
-                    nb = int(z["__nbytes__"])
-            except (OSError, ValueError):
+            path = os.path.join(self.ssd_dir, fname)
+            if fname.endswith(".npz"):
+                # legacy / uncompressed entry: ledger counts the
+                # embedded logical size
+                key = fname[:-4]
+                try:
+                    with np.load(path) as z:
+                        if "__nbytes__" not in z.files:
+                            continue
+                        nb = int(z["__nbytes__"])
+                except (OSError, ValueError):
+                    continue
+            elif any(fname.endswith(".npz" + s)
+                     for s in _COMPRESS_SUFFIXES):
+                # entropy-coded entry: the suffix marks the codec and
+                # the file IS the stored payload, so the on-disk size
+                # is the ledger size
+                key = fname[:fname.index(".npz")]
+                try:
+                    nb = os.path.getsize(path)
+                except OSError:
+                    continue
+            else:
                 continue
             self.sizes[key] = nb
             self.ssd_keys[key] = nb
@@ -659,7 +819,7 @@ class TieredStore:
         if src is None:
             return None, None
         if src == "ssd":
-            if not os.path.exists(self._ssd_path(key)):
+            if self._find_ssd_file(key) is None:
                 return None, None
             try:
                 enc = self._read_ssd(key)
@@ -698,9 +858,7 @@ class TieredStore:
                     # reconcile: the HBM copy supersedes the SSD one —
                     # without this the stale file stayed counted forever
                     self.used["ssd"] -= self.ssd_keys.pop(key)
-                    p = self._ssd_path(key)
-                    if os.path.exists(p):
-                        os.remove(p)
+                    self._remove_ssd_files(key)
                 self.hbm[key] = val
                 self.sizes[key] = nb
                 self.used["hbm"] += nb
@@ -717,9 +875,7 @@ class TieredStore:
             self.lru.pop(key, None)
             self.pins.pop(key, None)
             self._structs.pop(key, None)
-            p = self._ssd_path(key)        # unregistered legacy file
-            if os.path.exists(p):
-                os.remove(p)
+            self._remove_ssd_files(key)    # incl. unregistered legacy
 
     # ---- async preloading (§3.5) ------------------------------------------
     def _lane(self, tier: Optional[str]) -> "queue.Queue[Any]":

@@ -62,6 +62,116 @@ def _kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref, o_ref,
                       jnp.maximum(l_s[...], 1e-30))[None].astype(o_ref.dtype)
 
 
+def _paged_kernel(rows_ref, qpos_ref, q_ref, k_ref, v_ref, kpos_ref,
+                  o_ref, m_s, l_s, acc, *, scale: float, window: int):
+    """One grid cell per (request, kv-head, kv-block). The kv block is
+    selected by the scalar-prefetched block-index row (``rows_ref``):
+    the BlockSpec index maps read ``rows_ref[b, j]`` so K/V stream
+    straight out of the pool's block arena — no gathered copy exists.
+    Padding blocks (row entry -1) are clamped to block 0 by the index
+    map and masked away here; padding *slots* inside a live block carry
+    pool position -1 and mask the same way, so block-aligned layouts
+    with interior padding (shared runs) need no compaction."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc[...] = jnp.zeros_like(acc)
+
+    q = q_ref[...][0, 0].astype(jnp.float32)        # [G, D]
+    k = k_ref[...][0, :, 0, :].astype(jnp.float32)  # [bs, D]
+    v = v_ref[...][0, :, 0, :].astype(jnp.float32)
+    kpos = kpos_ref[...][0]                         # [bs]
+    qpos = qpos_ref[b]                              # scalar
+    live = rows_ref[b, j] >= 0                      # padding block?
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    mask = live & (kpos[None, :] <= qpos) & (kpos[None, :] >= 0)
+    if window:
+        mask &= (qpos - kpos[None, :]) < window
+    s = jnp.where(mask, s, NEG_INF)                 # [G, bs]
+
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    m_new = jnp.maximum(m_new, NEG_INF / 2)
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_s[...] = l_s[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc[...] = acc[...] * corr + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+
+    @pl.when(j == nj - 1)
+    def _finish():
+        o_ref[...] = (acc[...] /
+                      jnp.maximum(l_s[...], 1e-30)
+                      )[None, None].astype(o_ref.dtype)
+
+
+def paged_decode_attention_pallas(q, k_blocks, v_blocks, kpos_blocks,
+                                  block_rows, q_pos, *, window: int = 0,
+                                  interpret: bool = True):
+    """Block-table-native decode attention, in place over the pool.
+
+    q [B,H,D]; k_blocks/v_blocks [NB, bs, Hkv, D] — the KV pool's block
+    arena exactly as the pool stores it; kpos_blocks [NB, bs] per-slot
+    absolute positions (-1 = padding); block_rows [B, NBmax] each
+    request's block-id row (-1 padded); q_pos [B] query positions (-1 =
+    masked batch row -> zero output). The grid runs (B, Hkv, NBmax) and
+    the block-index row is scalar-prefetched so the K/V BlockSpec index
+    maps dereference it — attention reads the pool block storage
+    directly, no per-request gather or arena copy is ever formed."""
+    B, H, D = q.shape
+    NB, bs, Hkv = k_blocks.shape[:3]
+    G = H // Hkv
+    NBmax = block_rows.shape[1]
+    qg = q.reshape(B, Hkv, G, D)
+    rows = jnp.asarray(block_rows, jnp.int32)
+    grid = (B, Hkv, NBmax)
+
+    def _blk(r, b, h, j):
+        # r is the prefetched rows ref: padding entries read block 0,
+        # masked in-kernel via the same ref
+        return jnp.maximum(r[b, j], 0)
+
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, scale=1.0 / np.sqrt(D),
+                          window=window),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, G, D), lambda b, h, j, r, qp:
+                             (b, h, 0, 0)),
+                pl.BlockSpec((1, bs, 1, D), lambda b, h, j, r, qp:
+                             (_blk(r, b, h, j), 0, h, 0)),
+                pl.BlockSpec((1, bs, 1, D), lambda b, h, j, r, qp:
+                             (_blk(r, b, h, j), 0, h, 0)),
+                pl.BlockSpec((1, bs), lambda b, h, j, r, qp:
+                             (_blk(r, b, h, j), 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, j, r, qp:
+                                   (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, D), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(rows, jnp.asarray(q_pos, jnp.int32), qg, k_blocks, v_blocks,
+      jnp.asarray(kpos_blocks, jnp.int32))
+    return out.reshape(B, H, D)
+
+
 def decode_attention_pallas(q, k, v, q_pos, k_pos, *, window: int = 0,
                             block_k: int = 256, interpret: bool = True):
     """q [H,D], k/v [S,Hkv,D], q_pos scalar [], k_pos [S] -> o [H,D]."""

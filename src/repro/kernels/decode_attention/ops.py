@@ -5,7 +5,10 @@ import functools
 
 import jax
 
-from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.kernel import (
+    decode_attention_pallas,
+    paged_decode_attention_pallas,
+)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "block_k",
@@ -20,3 +23,18 @@ def decode_attention(q, k, v, q_pos, k_pos, *, window: int = 0,
     if q.ndim == 3:
         return jax.vmap(fn)(q, k, v, q_pos, k_pos)
     return fn(q, k, v, q_pos, k_pos)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_decode_attention(q, k_blocks, v_blocks, kpos_blocks, block_rows,
+                           q_pos, *, window: int = 0,
+                           interpret: bool | None = None):
+    """Block-table-native decode: q [B,H,D], k_blocks/v_blocks
+    [NB, bs, Hkv, D] (the pool arena, in place), kpos_blocks [NB, bs],
+    block_rows [B, NBmax] (-1 padded), q_pos [B] -> [B,H,D]. The kv
+    tile is the pool block itself — no per-request gather is formed."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return paged_decode_attention_pallas(
+        q, k_blocks, v_blocks, kpos_blocks, block_rows, q_pos,
+        window=window, interpret=interpret)

@@ -6,3 +6,30 @@ def decode_attention_ref(q, k, v, q_pos, k_pos, *, window: int = 0):
     """q [H,D], k/v [S,Hkv,D], q_pos [], k_pos [S] -> [H,D]."""
     return decode_attend(q[None], k[None], v[None], q_pos[None],
                          k_pos[None], window=window)[0]
+
+
+def paged_decode_attention_ref(q, k_blocks, v_blocks, kpos_blocks,
+                               block_rows, q_pos, *, window: int = 0):
+    """Numpy twin of the paged kernel: gather each request's blocks from
+    the pool arena by its block-index row, then run the dense oracle.
+
+    q [B,H,D]; k_blocks/v_blocks [NB, bs, Hkv, D]; kpos_blocks [NB, bs];
+    block_rows [B, NBmax] (-1 padded); q_pos [B] -> [B,H,D]."""
+    import numpy as np
+
+    B = q.shape[0]
+    bs = k_blocks.shape[1]
+    NBmax = block_rows.shape[1]
+    out = np.zeros_like(np.asarray(q))
+    for b in range(B):
+        rows = np.asarray(block_rows[b])
+        safe = np.where(rows >= 0, rows, 0)
+        kb = np.asarray(k_blocks)[safe].reshape(NBmax * bs, *k_blocks.shape[2:])
+        vb = np.asarray(v_blocks)[safe].reshape(NBmax * bs, *v_blocks.shape[2:])
+        pb = np.asarray(kpos_blocks)[safe].reshape(NBmax * bs)
+        pb = np.where(np.repeat(rows >= 0, bs), pb, -1)
+        o = decode_attend(np.asarray(q)[b][None], kb[None], vb[None],
+                          np.asarray(q_pos)[b][None], pb[None],
+                          window=window)[0]
+        out[b] = np.asarray(o)
+    return out

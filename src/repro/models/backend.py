@@ -51,6 +51,44 @@ Backends
                the installed CP mesh).
 ``auto``       dense for small/stat-collecting/packed shapes, flash
                beyond ~2M score elements.
+``paged``      block-table-native decode (see below).
+``paged_kernel``  the Pallas paged-decode kernel over the same
+               contract (numerics allclose, not bitwise — its online
+               softmax reduces in block order).
+
+Paged attend contract
+---------------------
+The ``paged`` backends read KV **in place from the KVPool's block
+storage** instead of a gathered copy. The decode cache leaf is the
+pool twin ``{"kp": [NBf, Hkv, D], "vp": [NBf, Hkv, D], "ppos":
+[NBf]}`` — ``NBf = num_blocks * block_size`` flat arena slots shared
+by every request — and the per-request view arrives through ``ctx``:
+
+* ``ctx.paged_rows [B, S]`` — compact pool-flat slot-index rows
+  (``KVPool.table_slot_index``): entry ``i`` is the arena slot holding
+  the request's token at logical position ``i``, -1 pads. This is the
+  ``(block_tables, context_lens)`` pair folded into one tensor: block
+  ids appear as ``slot // block_size`` runs and the context length is
+  the count of non-negative entries.
+* ``ctx.paged_block_rows [B, NBmax]`` / ``ctx.paged_block_size`` —
+  the raw block-id rows + block size for the Pallas kernel, whose
+  scalar-prefetched index maps stream pool blocks directly (no
+  device-side gather at all; per-slot ``ppos`` masking handles
+  interior padding).
+* ``k_all / v_all / kv_pos`` are the pool twin leaves themselves
+  (3-d / 1-d instead of the dense contract's 4-d / 2-d) with the new
+  token's KV already scattered at ``ctx.decode_slot``.
+
+``paged`` dereferences the slot rows with a device-side gather and
+delegates to the dense (or mesh-installed ``sharded``) oracle — the
+gathered operand reproduces ``pool.gather(compact=True)``'s layout
+element-for-element, so logits stay BIT-identical to the arena path
+while the host-side arena copy (``decode_gather_bytes``) disappears.
+``paged_kernel`` skips even that gather: the kernel walks the block
+rows in place; head-sharded pools route each shard's ``kv_shards``
+view through the same kernel under ``compat.shard_map``. Both yield
+inert zero rows for masked slots (``decode_slot == -1``), like every
+other backend.
 
 Interpret-mode tiling rule
 --------------------------
@@ -314,6 +352,77 @@ def _impl_sharded(ctx, window, packed, q, k_all, v_all, kv_pos):
     return res[0], None, None
 
 
+def _impl_paged(ctx, window, packed, q, k_all, v_all, kv_pos):
+    """Block-table-native decode, exact route: dereference the compact
+    slot-index rows with one device-side gather and hand the result to
+    the dense / sharded oracle. The gathered operand is
+    ``pool.gather(compact=True)`` element-for-element (zeros + pos -1
+    in padding), so logits are bit-identical to the arena path — while
+    no host-side arena copy exists to build, rebuild, or join."""
+    if ctx.paged_rows is None or k_all.ndim != 3:
+        # not a pool-twin cache (e.g. unit tests driving the backend
+        # with dense operands): the dense oracle is the fallback
+        return _impl_dense(ctx, window, packed, q, k_all, v_all, kv_pos)
+    rows = ctx.paged_rows                                   # [B, S]
+    valid = rows >= 0
+    safe = jnp.where(valid, rows, 0)
+    kg = jnp.where(valid[..., None, None], k_all[safe], 0)  # [B,S,Hkv,D]
+    vg = jnp.where(valid[..., None, None], v_all[safe], 0)
+    kvp = jnp.where(valid, kv_pos[safe], -1)                # [B, S]
+    if _SERVING_MESH is not None:
+        return _impl_sharded(ctx, window, packed, q, kg, vg, kvp)
+    return _impl_dense(ctx, window, packed, q, kg, vg, kvp)
+
+
+def _impl_paged_kernel(ctx, window, packed, q, k_all, v_all, kv_pos):
+    """Block-table-native decode, Pallas route: the kernel's
+    scalar-prefetched index maps walk each request's block-id row and
+    read K/V straight out of the pool twin — no gather of any kind.
+    Online softmax reduces in block order, so this route is allclose
+    (not bitwise) to the oracle, mirroring ``kernel`` vs ``dense``."""
+    if (ctx.paged_block_rows is None or not ctx.paged_block_size
+            or k_all.ndim != 3 or ctx.collect_stats):
+        return _impl_paged(ctx, window, packed, q, k_all, v_all, kv_pos)
+    from repro.kernels.decode_attention.ops import paged_decode_attention
+    bs = ctx.paged_block_size
+    NBf = k_all.shape[0]
+    kb = k_all.reshape(NBf // bs, bs, *k_all.shape[1:])
+    vb = v_all.reshape(NBf // bs, bs, *v_all.shape[1:])
+    pb = kv_pos.reshape(NBf // bs, bs)
+    qd = q[:, 0]                                            # [B, H, D]
+    qpos = ctx.positions[:, 0]
+    rows = ctx.paged_block_rows
+    mesh = _SERVING_MESH
+    if mesh is None:
+        out = paged_decode_attention(qd, kb, vb, pb, rows, qpos,
+                                     window=window)
+        return out[:, None], None, None
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+    ax = _SERVING_AXIS
+    n = mesh.shape[ax]
+    H, Hkv = qd.shape[1], kb.shape[2]
+    if H % n or Hkv % n:
+        raise ValueError(
+            f"paged_kernel needs num_heads ({H}) and num_kv_heads "
+            f"({Hkv}) divisible by the '{ax}' mesh axis ({n})")
+
+    def body(qs, ks, vs):
+        # each shard runs the kernel over ITS kv_shards view of the
+        # pool blocks; the output all-gather is pure data movement
+        o = paged_decode_attention(qs, ks, vs, pb, rows, qpos,
+                                   window=window)
+        return jax.lax.all_gather(o, ax, axis=1, tiled=True)
+
+    shard_kv = P(None, None, ax, None)
+    out = shard_map(body, mesh=mesh,
+                    in_specs=(P(None, ax, None), shard_kv, shard_kv),
+                    out_specs=P(), axis_names={ax},
+                    check_vma=False)(qd, kb, vb)
+    return out[:, None], None, None
+
+
 BACKENDS = {
     "auto": _impl_auto,
     "dense": _impl_dense,
@@ -322,6 +431,8 @@ BACKENDS = {
     "flash": _impl_flash,
     "flash_skip": _impl_flash_skip,
     "flash_cp": _impl_flash_cp,
+    "paged": _impl_paged,
+    "paged_kernel": _impl_paged_kernel,
 }
 
 

@@ -275,6 +275,13 @@ class Ctx:
     # cross-request quadratic attention waste.
     pack_qidx: Optional[jax.Array] = None    # [R, Amax] -> packed q rows
     pack_kidx: Optional[jax.Array] = None    # [R, Smax] -> packed kv slots
+    # --- paged decode (pool-twin cache leaves {"kp","vp","ppos"}) --------
+    # Per-request views over the shared flat pool arena; see the paged
+    # attend contract in models/backend.py. decode_slot then carries
+    # pool-FLAT slot ids (block * block_size + offset).
+    paged_rows: Optional[jax.Array] = None        # [B,S] slot-index rows
+    paged_block_rows: Optional[jax.Array] = None  # [B,NBmax] block rows
+    paged_block_size: int = 0                     # pool block size (static)
 
 
 def _self_attention(ctx: Ctx, kind: str, p, x, state):
@@ -324,6 +331,19 @@ def _self_attention(ctx: Ctx, kind: str, p, x, state):
             # not contraction(D)-sharded (cache storage layout)
             k_all = shd(k_all, "batch", None, "attn_kv", "attn_dim")
             v_all = shd(v_all, "batch", None, "attn_kv", "attn_dim")
+    elif ctx.mode == "decode" and "kp" in state:
+        # Paged decode: the cache leaf is the pool twin (flat arena
+        # slots shared by every request, no batch axis). decode_slot
+        # carries pool-FLAT slot ids; masked rows (-1) drop the write
+        # and their query position (-1) masks all attention. Distinct
+        # live requests own distinct slots by pool construction.
+        nslots = state["kp"].shape[0]
+        wslot = jnp.where(ctx.decode_slot >= 0, ctx.decode_slot, nslots)
+        k_all = state["kp"].at[wslot].set(k[:, 0], mode="drop")
+        v_all = state["vp"].at[wslot].set(v[:, 0], mode="drop")
+        kv_pos = state["ppos"].at[wslot].set(ctx.positions[:, 0],
+                                             mode="drop")
+        new_state = {"kp": k_all, "vp": v_all, "ppos": kv_pos}
     elif ctx.mode == "decode":
         # Masked batch rows (incremental decode batch: no live request in
         # the row) carry slot = -1 and position = -1: the KV write drops
@@ -588,6 +608,9 @@ def forward(cfg: ModelConfig, params: PyTree, *,
             slots: Optional[jax.Array] = None,
             seg_ids: Optional[jax.Array] = None,
             kv_seg: Optional[jax.Array] = None,
+            paged_rows: Optional[jax.Array] = None,
+            paged_block_rows: Optional[jax.Array] = None,
+            paged_block_size: int = 0,
             logits_slice: str = "all") -> ModelOutput:
     dtype = jnp.dtype(cfg.dtype)
     if embeds is None:
@@ -605,7 +628,9 @@ def forward(cfg: ModelConfig, params: PyTree, *,
     ctx = Ctx(cfg=cfg, mode=mode, positions=positions, media=media,
               chunk_ids=chunk_ids, collect_stats=collect_stats,
               attn_impl=attn_impl, decode_slot=decode_slot,
-              slots=slots, seg_ids=seg_ids, kv_seg=kv_seg)
+              slots=slots, seg_ids=seg_ids, kv_seg=kv_seg,
+              paged_rows=paged_rows, paged_block_rows=paged_block_rows,
+              paged_block_size=paged_block_size)
     h, new_cache, stats, kstats, aux_total = run_stack(
         cfg, params, h, ctx, cache=cache, collect_stats=collect_stats)
 
@@ -641,11 +666,13 @@ def partial_prefill(cfg, params, tokens, positions, cache, media=None,
 
 
 def decode_step(cfg, params, tokens, positions, cache, decode_slot=None,
-                attn_impl="auto"):
+                attn_impl="auto", paged_rows=None, paged_block_rows=None,
+                paged_block_size=0):
     """tokens [B], positions [B] -> logits [B,1,V] + updated cache."""
     if decode_slot is None:
         decode_slot = positions
     return forward(cfg, params, tokens=tokens[:, None],
                    positions=positions[:, None], mode="decode", cache=cache,
                    decode_slot=decode_slot, attn_impl=attn_impl,
-                   logits_slice="last")
+                   paged_rows=paged_rows, paged_block_rows=paged_block_rows,
+                   paged_block_size=paged_block_size, logits_slice="last")

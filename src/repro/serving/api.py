@@ -46,7 +46,9 @@ _UNSET = object()
 @dataclass
 class StoreSpec:
     """Chunk-store construction: tier capacities, variant caps, and the
-    per-tier storage codecs (``tier_dtypes``, e.g. ``{"cpu": "int8"}``).
+    per-tier storage codecs (``tier_dtypes``, e.g. ``{"cpu": "int8"}``;
+    ``tier_compress``, e.g. ``{"ssd": "zstd"}`` to entropy-code SSD
+    payloads — degrades to zlib when zstandard is unavailable).
     ``ssd_dir=None`` creates a throwaway temp dir."""
     hbm_bytes: int = 1 << 30
     cpu_bytes: int = 1 << 30
@@ -56,6 +58,7 @@ class StoreSpec:
     alpha: float = 1.0
     start_worker: bool = True
     tier_dtypes: Optional[Dict[str, str]] = None
+    tier_compress: Optional[Dict[str, str]] = None
 
 
 @dataclass
@@ -91,6 +94,12 @@ class EngineSpec:
     incremental_decode: bool = True
     share_chunk_kv: bool = True
     trace_decode: bool = False
+    # paged decode: block-table-native attention reads KV in place from
+    # a device twin of the pool (models/backend.py "Paged attend
+    # contract"); joins/leaves become row-map updates. ``attn_impl``
+    # may name "paged_kernel" to route the Pallas paged kernel instead
+    # of the gather-free reference backend
+    paged_decode: bool = False
     # chunk store (None -> no store, i.e. pure recompute serving)
     store: Optional[StoreSpec] = field(default_factory=StoreSpec)
 
@@ -127,6 +136,15 @@ class EngineSpec:
                     raise ValueError(
                         f"StoreSpec.tier_dtypes[{tier!r}]={dt!r} not in "
                         f"{TIER_DTYPES}")
+            if self.store.tier_compress:
+                from repro.core.tiers import COMPRESS_CODECS
+                for tier, codec in self.store.tier_compress.items():
+                    if tier != "ssd" or codec not in COMPRESS_CODECS:
+                        raise ValueError(
+                            f"StoreSpec.tier_compress[{tier!r}]="
+                            f"{codec!r}: only the 'ssd' tier supports "
+                            f"compression, with codecs "
+                            f"{COMPRESS_CODECS}")
             if self.store.hbm_bytes <= 0 or self.store.cpu_bytes <= 0:
                 raise ValueError("StoreSpec tier capacities must be "
                                  "positive")
@@ -152,6 +170,7 @@ class EngineSpec:
             force_recompute_fraction=get("recompute", None),
             layerwise_load=get("layerwise_load", False),
             attn_impl=get("attn_impl", None),
+            paged_decode=get("paged_decode", False),
             pool_blocks=get("pool_blocks", cls.pool_blocks),
             sched=SchedulerConfig(
                 max_batch_tokens=get("max_batch_tokens", 8192),
@@ -181,7 +200,8 @@ def build_store(sspec: Optional[StoreSpec]):
     return ChunkStore(
         TieredStore(sspec.hbm_bytes, sspec.cpu_bytes, ssd,
                     start_worker=sspec.start_worker,
-                    tier_dtypes=sspec.tier_dtypes),
+                    tier_dtypes=sspec.tier_dtypes,
+                    tier_compress=sspec.tier_compress),
         n_chunks=sspec.n_chunks, m_variants=sspec.m_variants,
         alpha=sspec.alpha)
 
@@ -239,4 +259,5 @@ def build_engine(spec: EngineSpec, *, cfg=None, params=None,
         incremental_decode=spec.incremental_decode,
         share_chunk_kv=spec.share_chunk_kv,
         trace_decode=spec.trace_decode,
-        attn_impl=spec.attn_impl, mesh=spec.mesh)
+        attn_impl=spec.attn_impl, paged_decode=spec.paged_decode,
+        mesh=spec.mesh)

@@ -225,6 +225,7 @@ class Engine:
                  share_chunk_kv: bool = True,
                  trace_decode: bool = False,
                  attn_impl: Optional[str] = None,
+                 paged_decode: bool = False,
                  mesh=None):
         self.cfg = cfg
         self.params = params
@@ -311,6 +312,26 @@ class Engine:
         self._cancel_pending: set = set()
         from repro.core.prefill import decode_fn
         self._decode_fn = decode_fn(cfg, self.attn_impl or "auto")
+        # paged decode (block-table-native attention): the decode pass
+        # reads K/V in place from a device twin of the pool's block
+        # arenas, indexed per request by compact slot rows — joins and
+        # leaves become row-map updates, rebuilds only re-bucket the
+        # index tensor, and the new token's KV is scattered into its
+        # pre-opened pool slot inside the jitted pass. The twin stays
+        # coherent by uploading the pool's dirty-block log before each
+        # step (counted: paged_block_syncs / paged_sync_bytes), while
+        # the arena path's per-request copies land in
+        # decode_gather_bytes / decode_join_copies — ~0 here.
+        self.paged_decode = bool(paged_decode)
+        self._pcache = None
+        self._paged_kernel = bool(paged_decode) and \
+            self.attn_impl in ("paged_kernel",)
+        if paged_decode:
+            from repro.core.prefill import paged_decode_fn, paged_sync_fn
+            impl = self.attn_impl \
+                if self.attn_impl in ("paged", "paged_kernel") else "paged"
+            self._paged_fn = paged_decode_fn(cfg, impl, block_size)
+            self._psync = paged_sync_fn(cfg)
 
     # ---- submission ---------------------------------------------------------
     def submit(self, req: Request):
@@ -853,6 +874,19 @@ class Engine:
         B = _bucket(len(self.decoding), self.decode_bucket_b)
         max_len = max(self._row_capacity(r) for r in self.decoding)
         S = _bucket(max_len, self.seq_bucket)
+        if self.paged_decode:
+            # paged rebuild = re-bucket the index tensor: the slot rows
+            # are re-exported from the block tables every step anyway
+            # (they are [B, S] int32, not KV), so a membership change
+            # that grows (B, S) costs a row-map reset and nothing else —
+            # no gather, no transfer (decode_gather_bytes unchanged)
+            self._dshape = (B, S)
+            self._rows = list(self.decoding) + \
+                [None] * (B - len(self.decoding))
+            self._masked_rows = set()
+            self._needs_rebuild = False
+            self.counters.decode_rebuilds += 1
+            return
         L = self.cfg.num_layers
         hkv, dh = self.cfg.num_kv_heads, self.cfg.head_dim_
         k = np.zeros((L, B, S, hkv, dh), np.float32)
@@ -860,6 +894,7 @@ class Engine:
         pos = np.full((B, S), -1, np.int32)
         for i, r in enumerate(self.decoding):
             kk, vv, pp = self.pool.gather(r.table, S, compact=True)
+            self.counters.decode_gather_bytes += kk.nbytes + vv.nbytes
             k[:, i], v[:, i], pos[i] = kk, vv, pp
         # to model cache format (batched pack)
         P, G = len(self.cfg.pattern), self.cfg.n_groups
@@ -891,7 +926,9 @@ class Engine:
         does not waste the earlier members' gathers and transfers."""
         if not reqs:
             return
-        if not self.incremental_decode or self._dcache is None or \
+        have_batch = self._dshape is not None if self.paged_decode \
+            else self._dcache is not None
+        if not self.incremental_decode or not have_batch or \
                 self._needs_rebuild:
             self._needs_rebuild = True
             return
@@ -909,10 +946,17 @@ class Engine:
         ``_decode_join_batch``)."""
         _B, S = self._dshape
         row = self._rows.index(None)
-        k, v, pos = self.pool.gather(req.table, S, compact=True)
-        self._dcache = _join_row_fn(self.cfg)(
-            self._dcache, jnp.int32(row), jnp.asarray(k), jnp.asarray(v),
-            jnp.asarray(pos))
+        if not self.paged_decode:
+            # arena join: the only path that copies KV to admit a
+            # request into the decode batch. Paged joins stop here —
+            # the request's slot rows are exported (int32 indices, not
+            # KV) at the next step
+            k, v, pos = self.pool.gather(req.table, S, compact=True)
+            self.counters.decode_gather_bytes += k.nbytes + v.nbytes
+            self.counters.decode_join_copies += 1
+            self._dcache = _join_row_fn(self.cfg)(
+                self._dcache, jnp.int32(row), jnp.asarray(k),
+                jnp.asarray(v), jnp.asarray(pos))
         self._rows[row] = req
         self.counters.decode_joins += 1
         if row in self._masked_rows:
@@ -928,6 +972,14 @@ class Engine:
         if not self.incremental_decode:
             self._needs_rebuild = True
             return
+        if self.paged_decode:
+            # paged leave: pure row-map update — the departed table's
+            # slots simply stop being referenced by any index row
+            if self._dshape is None or self._needs_rebuild:
+                return
+            self._masked_rows.add(row)
+            self.counters.decode_leaves += 1
+            return
         if self._dcache is None or self._needs_rebuild:
             return
         self._dcache = _leave_row_fn(self.cfg)(self._dcache,
@@ -935,7 +987,170 @@ class Engine:
         self._masked_rows.add(row)
         self.counters.decode_leaves += 1
 
+    def _sync_dirty_blocks(self):
+        """Upload the pool's dirty-block log into the device twin: one
+        jitted scatter of the touched blocks' flat slots (the id list
+        is bucketed so churny step counts do not retrace). Host writes
+        that dirty blocks — prefill write-back, CoW clones, recompute
+        fixup rows, freshly-opened append blocks — are exactly the
+        block-granular transfers a paged deployment pays, so they are
+        counted honestly (``paged_block_syncs`` / ``paged_sync_bytes``)
+        instead of hidden inside a wholesale re-pack."""
+        ids = self.pool.dirty_blocks()
+        if not ids:
+            return
+        kp, vp, pp = self.pool.block_view()
+        bs = self.pool.block_size
+        m = _bucket(len(ids), 8)
+        bid = np.full(m, -1, np.int64)
+        bid[:len(ids)] = ids
+        slots = bid[:, None] * bs + np.arange(bs)[None, :]
+        slots = np.where(bid[:, None] >= 0, slots, -1).reshape(-1)
+        idx = np.maximum(bid, 0)
+        k = kp[:, idx].reshape(kp.shape[0], m * bs, *kp.shape[3:])
+        v = vp[:, idx].reshape(vp.shape[0], m * bs, *vp.shape[3:])
+        pos = np.where(slots >= 0, pp[idx].reshape(m * bs), -1)
+        self._pcache = self._psync(
+            self._pcache, jnp.asarray(slots, jnp.int32), jnp.asarray(k),
+            jnp.asarray(v), jnp.asarray(pos, jnp.int32))
+        self.counters.paged_block_syncs += len(ids)
+        self.counters.paged_sync_bytes += int(
+            kp[:, ids].nbytes + vp[:, ids].nbytes)
+        self.pool.clear_dirty(ids)
+
+    def _extract_pool_slot_kv(self, slot: int):
+        """Read one flat pool slot's per-layer KV back from the device
+        twin (the jitted pass scattered the new token there). This is
+        the host mirror's source, so host pool bytes and twin bytes
+        agree bit-for-bit by construction — which is what lets
+        ``append_token`` below clear the block's dirty mark instead of
+        re-uploading it next step."""
+        cfg = self.cfg
+        P, G = len(cfg.pattern), cfg.n_groups
+        hkv, dh = cfg.num_kv_heads, cfg.head_dim_
+        k = np.zeros((cfg.num_layers, hkv, dh), np.float32)
+        v = np.zeros((cfg.num_layers, hkv, dh), np.float32)
+        for p in range(P):
+            kk = np.asarray(self._pcache["groups"][p]["kp"][:, slot])
+            vv = np.asarray(self._pcache["groups"][p]["vp"][:, slot])
+            for g in range(G):
+                k[g * P + p] = kk[g]
+                v[g * P + p] = vv[g]
+        for i in range(cfg.n_tail):
+            k[G * P + i] = np.asarray(self._pcache["tail"][i]["kp"][slot])
+            v[G * P + i] = np.asarray(self._pcache["tail"][i]["vp"][slot])
+        return k, v
+
+    def _run_decode_step_paged(self):
+        """One decode iteration, block-table-native: attention reads
+        K/V in place from the pool twin through per-request compact
+        slot-index rows (``KVPool.table_slot_index``) — no per-request
+        gather is formed, joins/leaves were row-map updates, and the
+        rebuild only re-bucketed (B, S).
+
+        Per-step ordering: (1) pre-open every live row's append slot
+        (``ensure_append_slot`` — the one step that can fail under pool
+        pressure, so the failure escalation the arena path applies
+        *after* the pass happens here *before* any compute is spent);
+        (2) bring the device twin up to date (initial wholesale pack,
+        then dirty-block scatters); (3) run the jitted pass, which
+        splices each row's pre-opened slot into its index row and
+        scatters the new token's KV there; (4) mirror that KV into the
+        host pool (``append_token`` cannot fail — the slot is open) and
+        drop the block from the dirty log, since host and device now
+        hold identical bytes."""
+        if self._dshape is None or self._needs_rebuild:
+            self._rebuild_decode_batch()
+        B, S = self._dshape
+        pslots = np.full(B, -1, np.int32)
+        for i, r in enumerate(list(self._rows)):
+            if r is None:
+                continue
+            s = self.pool.ensure_append_slot(r.table,
+                                             reservation=r.reservation)
+            if s is None:
+                # zero-copy: CoW fixups may have drained the delta
+                # reservation — escalate to a full reservation, same
+                # as the arena path's post-step append failure
+                r.reserve_full = True
+                self.decoding.remove(r)
+                self._decode_leave(i)
+                self._requeue(r)
+                continue
+            pslots[i] = s
+        if not self.decoding:
+            return
+        if self._pcache is None:
+            from repro.core.prefill import pack_paged_cache
+            self._pcache = pack_paged_cache(self.cfg,
+                                            *self.pool.block_view())
+            self.pool.clear_dirty(self.pool.dirty_blocks())
+        else:
+            self._sync_dirty_blocks()
+        toks = np.zeros(B, np.int32)
+        poss = np.full(B, -1, np.int32)
+        rows = np.full((B, S), -1, np.int32)
+        for i, r in enumerate(self._rows):
+            if r is None:
+                continue
+            toks[i] = r.output_tokens[-1]
+            poss[i] = r.total_len       # logical position (RoPE/causal)
+            rows[i] = self.pool.table_slot_index(r.table, S)
+        brows = None
+        if self._paged_kernel:
+            # the Pallas kernel iterates physical blocks, so it needs
+            # the block-id rows too (bucketed to bound retraces); all
+            # held blocks count — the pre-opened append block's unused
+            # slots carry pos == -1 and mask out in-kernel
+            nbm = _bucket(max(len(r.table.blocks) for r in self._rows
+                              if r is not None), 8)
+            brows = np.full((B, nbm), -1, np.int32)
+            for i, r in enumerate(self._rows):
+                if r is not None:
+                    brows[i] = self.pool.table_block_row(r.table, nbm)
+        t0 = time.perf_counter()
+        logits, self._pcache = self._paged_fn(
+            self.params, jnp.asarray(toks), jnp.asarray(poss),
+            self._pcache, jnp.asarray(pslots), jnp.asarray(rows),
+            None if brows is None else jnp.asarray(brows))
+        logits = np.asarray(logits[:, 0])
+        self.clock += (time.perf_counter() - t0) * self.time_scale
+        self.stats.decode_steps += 1
+        self._count_attn_flops(B, S)
+        if self.trace_decode:
+            self.decode_trace.append(
+                {r.rid: logits[i].copy()
+                 for i, r in enumerate(self._rows) if r is not None})
+        for i, r in enumerate(list(self._rows)):
+            if r is None:
+                continue
+            nxt = int(np.argmax(logits[i, :self.cfg.vocab_size]))
+            ktok, vtok = self._extract_pool_slot_kv(int(pslots[i]))
+            self.pool.append_token(r.table, ktok, vtok, r.total_len,
+                                   reservation=r.reservation)
+            self.pool.clear_dirty([int(pslots[i])
+                                   // self.pool.block_size])
+            r.output_tokens.append(nxt)
+            self._emit_token(r, nxt)
+            r.total_len += 1
+            if len(r.output_tokens) >= r.max_new_tokens:
+                r.state = State.DONE
+                r.t_done = self.clock
+                self.stats.completed += 1
+                self.decoding.remove(r)
+                self._decode_leave(i)
+                if self.trace_decode:
+                    pad = _bucket(max(r.table.length, 1), self.seq_bucket)
+                    self.final_kv[r.rid] = self.pool.gather(r.table, pad)
+                self.pool.free_table(r.table)
+                self._release_runs(r)
+                self.pool.commit(r.reservation)
+                r.reservation = None
+                self.scheduler.on_terminal(r)
+
     def _run_decode_step(self):
+        if self.paged_decode:
+            return self._run_decode_step_paged()
         if self._dcache is None or self._needs_rebuild:
             self._rebuild_decode_batch()
         B, S = self._dshape

@@ -93,6 +93,44 @@ logical arena unchanged. The invariants:
   device* (``block_nbytes / kv_shards``), never the block bookkeeping;
 * ``kv_heads % kv_shards == 0`` (contiguous head blocks keep the GQA
   grouping shard-local; enforced at construction).
+
+Paged decode (``block_view`` / ``table_slot_index`` / dirty log)
+----------------------------------------------------------------
+The paged decode path reads K/V **in place** from the block arenas —
+no per-request gather, no dense row-arena copy. The pool exports:
+
+* ``block_view()`` — the raw ``(k, v, pos)`` arenas, zero-copy. Every
+  pool write (prefill, recompute fixups, CoW clones, decode appends)
+  is visible through this view the moment it lands; consumers must not
+  cache a stale copy across pool mutations.
+* ``table_slot_index(table, pad_to)`` — a request's *compact* pool-flat
+  slot-index row: entry ``i`` is the flat arena slot
+  (``block_id * block_size + offset``) holding the token at logical
+  position ``i``; -1 pads. Indexing the flattened arenas with this row
+  reproduces ``gather(..., compact=True)``'s exact operand layout, so
+  paged attention stays bit-identical to the arena path.
+* ``table_block_row(table, pad_to)`` — the block-id row (-1 padded)
+  the paged Pallas kernel's scalar-prefetched index maps consume.
+* ``ensure_append_slot(table, reservation)`` — pre-opens the next
+  decode-append slot (allocating / CoW-cloning its block *before* the
+  jitted step) so the attention pass can scatter the new token's KV
+  straight into the pool view at a statically-known flat slot.
+* ``dirty_blocks()`` / ``clear_dirty(ids)`` — a write log for keeping
+  a device-side twin of the arenas coherent: every mutating op records
+  the block ids it touched; a consumer uploads exactly those blocks
+  and clears them.
+
+**Aliasing / CoW invariant** (what makes in-place reads safe): a block
+visible to more than one holder is NEVER mutated in place. Every write
+path routes through ``_cow_block``, which clones the block into the
+writer's table and *swaps the table's index entry* —
+``table.blocks[bi] = new_block`` — leaving the shared block's bytes
+untouched. Readers holding the old block id (other tables, canonical
+runs, an exported block-index row) therefore keep seeing the exact
+bytes they referenced; writers see their private clone only after
+re-exporting their index row. Mutating a shared block in place would
+corrupt every other reader's in-place view — the property suite drives
+random op interleavings against this invariant.
 """
 from __future__ import annotations
 
@@ -153,6 +191,9 @@ class KVPool:
         # the hot alloc/share/release paths never scan the whole pool
         self._live = 0
         self._shared = 0
+        # write log for device-twin coherence (paged decode): block ids
+        # whose host bytes changed since the last clear_dirty
+        self._dirty: set = set()
         self.counters = counters if counters is not None \
             else ServingCounters()
 
@@ -348,6 +389,7 @@ class KVPool:
         S = k_layers.shape[1]
         bs = self.block_size
         assert len(blocks) == self.blocks_needed(S)
+        self._dirty.update(blocks)
         for i, b in enumerate(blocks):
             s0, s1 = i * bs, min(S, (i + 1) * bs)
             self.k[:, b, :s1 - s0] = k_layers[:, s0:s1]
@@ -394,6 +436,19 @@ class KVPool:
         table.length = base * self.block_size + S
         return base * self.block_size
 
+    def _zero_block(self, b: int):
+        """Scrub a freshly-allocated decode-tail block: a reused block
+        keeps the previous tenant's KV bytes in its not-yet-appended
+        slots, which ``gather`` (non-compact) would expose as padding
+        whose contents depend on allocation history. Zeroed, the dead
+        slots are deterministic — the arena and paged decode paths
+        produce byte-identical final pool KV even though they allocate
+        and CoW at slightly different times. (``write_run`` zeroes its
+        own tail padding; CoW clones copy already-clean bytes.)"""
+        self.k[:, b] = 0.0
+        self.v[:, b] = 0.0
+        self.pos[b] = -1
+
     def _cow_block(self, table: BlockTable, bi: int,
                    reservation: Optional[Reservation] = None
                    ) -> Optional[int]:
@@ -409,7 +464,12 @@ class KVPool:
         self.v[:, nb[0]] = self.v[:, b]
         self.pos[nb[0]] = self.pos[b]
         self.release([b])
+        # the CoW invariant: swap the table's index entry to the clone,
+        # never touch the shared block's bytes — readers of ``b`` (other
+        # tables, canonical runs, exported slot-index rows) keep their
+        # exact in-place view
         table.blocks[bi] = nb[0]
+        self._dirty.add(nb[0])
         self.counters.cow_clones += 1
         return nb[0]
 
@@ -432,6 +492,7 @@ class KVPool:
             self.k[:, b, off] = k_rows[:, j]
             self.v[:, b, off] = v_rows[:, j]
             self.pos[b, off] = pos_rows[j]
+            self._dirty.add(b)
         return True
 
     def append_token(self, table: BlockTable, k_tok: np.ndarray,
@@ -445,14 +506,43 @@ class KVPool:
             if got is None:
                 return False
             table.blocks.extend(got)
+            self._zero_block(got[0])
         b = self._cow_block(table, bi, reservation)
         if b is None:
             return False
         self.k[:, b, off] = k_tok
         self.v[:, b, off] = v_tok
         self.pos[b, off] = pos
+        self._dirty.add(b)
         table.length = idx + 1
         return True
+
+    def ensure_append_slot(self, table: BlockTable,
+                           reservation: Optional[Reservation] = None
+                           ) -> Optional[int]:
+        """Pre-open the slot the next ``append_token`` will land in:
+        allocate the tail block if the table is full and CoW-clone it if
+        shared, WITHOUT advancing ``table.length``. Returns the pool-flat
+        slot id (``block_id * block_size + offset``) or None when the
+        pool cannot supply a block. The paged decode step calls this
+        before tracing so the jitted attention pass can scatter the new
+        token's KV directly into the pool view; the later
+        ``append_token`` for the same slot finds the block present and
+        unshared and only fills the host mirror."""
+        bi, off = divmod(table.length, self.block_size)
+        if bi >= len(table.blocks):
+            got = self.alloc(1, reservation)
+            if got is None:
+                return None
+            table.blocks.extend(got)
+            self._zero_block(got[0])
+            # fresh block: a device twin may hold a stale previous
+            # tenant — force sync
+            self._dirty.add(got[0])
+        b = self._cow_block(table, bi, reservation)
+        if b is None:
+            return None
+        return b * self.block_size + off
 
     def gather(self, table: BlockTable, pad_to: int,
                compact: bool = False):
@@ -499,6 +589,63 @@ class KVPool:
             v = np.pad(v, padw)
             pos = np.pad(pos, (0, pad_to - S), constant_values=-1)
         return k[:, :pad_to], v[:, :pad_to], pos[:pad_to]
+
+    # ---- paged decode exports ---------------------------------------------
+    def block_view(self):
+        """Zero-copy view of the block arenas: ``(k, v, pos)`` with
+        shapes ``[L, num_blocks, block, Hkv, D]`` / ``[num_blocks,
+        block]``. No bytes are copied — every pool write is visible
+        through the view immediately, and the CoW swap invariant (see
+        module docstring) is what keeps concurrently-exported
+        slot-index rows safe against it."""
+        return self.k, self.v, self.pos
+
+    def table_slot_index(self, table: BlockTable, pad_to: int
+                         ) -> np.ndarray:
+        """Compact pool-flat slot-index row for one table: ``out[i]`` is
+        the flat arena slot (``block * block_size + offset``) holding
+        the token at logical position ``i``; ``-1`` pads to ``pad_to``.
+        Indexing the flattened arenas with this row reproduces
+        ``gather(table, pad_to, compact=True)`` element-for-element, so
+        a paged attention pass that dereferences it sees the exact
+        operand layout of the arena path — the bit-identity seam."""
+        out = np.full(pad_to, -1, np.int32)
+        if table.length == 0 or not table.blocks:
+            return out
+        bs = self.block_size
+        n = self.blocks_needed(table.length)
+        ids = np.asarray(table.blocks[:n], np.int64)
+        flat = (ids[:, None] * bs + np.arange(bs)[None, :]).reshape(-1)
+        pos = self.pos[ids].reshape(n * bs).copy()
+        pos[table.length:] = -1
+        idx = np.where(pos >= 0)[0]
+        order = idx[np.argsort(pos[idx], kind="stable")]
+        m = min(order.size, pad_to)
+        out[:m] = flat[order[:m]]
+        return out
+
+    def table_block_row(self, table: BlockTable, pad_to: int
+                        ) -> np.ndarray:
+        """Block-id row (-1 padded) for the paged Pallas kernel's
+        scalar-prefetched index maps. Unlike ``table_slot_index`` this
+        keeps the table's physical block order — the kernel masks
+        per-slot by pool position instead of compacting. All held
+        blocks are included (a pre-opened append block past
+        ``table.length`` carries ``pos == -1`` slots the kernel masks
+        anyway)."""
+        out = np.full(pad_to, -1, np.int32)
+        n = min(len(table.blocks), pad_to)
+        if n:
+            out[:n] = table.blocks[:n]
+        return out
+
+    def dirty_blocks(self) -> List[int]:
+        """Block ids whose host bytes changed since the last
+        ``clear_dirty`` — the device-twin upload set."""
+        return sorted(self._dirty)
+
+    def clear_dirty(self, blocks) -> None:
+        self._dirty.difference_update(blocks)
 
     def free_table(self, table: BlockTable):
         self.release(table.blocks)

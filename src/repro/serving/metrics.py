@@ -75,9 +75,26 @@ class ServingCounters:
     #     (total / kv_shards; strictly below total on a real mesh)
     # --- incremental decode batch ---
     decode_rebuilds: int = 0             # full (B, S) gather rebuilds
+    #     (paged mode: (B, S) re-buckets of the index tensor — no KV
+    #     is gathered, see decode_gather_bytes)
     decode_joins: int = 0                # requests written into a free row
     decode_leaves: int = 0               # rows masked (pos = -1) on exit
     decode_rows_recycled: int = 0        # masked rows reused by a join
+    # --- paged decode (block-table-native attention) ---
+    decode_gather_bytes: int = 0         # KV bytes copied out of the pool
+    #     to build/maintain the arena decode batch (rebuild gathers +
+    #     join gathers). The paged path reads KV in place through slot
+    #     index rows, so this stays ~0 there — the Fig. 22 paged lane
+    #     gates on it
+    decode_join_copies: int = 0          # joins that copied KV into a
+    #     batch row (arena in-place joins); paged joins are row-map
+    #     updates and count 0 here
+    paged_block_syncs: int = 0           # dirty pool blocks uploaded into
+    #     the device twin (host writes: prefill write-back, CoW clones,
+    #     recompute fixups) before a paged step
+    paged_sync_bytes: int = 0            # KV bytes those uploads moved —
+    #     the honest block-granular transfer cost the paged layout pays
+    #     instead of per-step whole-request gathers
 
     def reset(self):
         for f in dataclasses.fields(self):

@@ -24,7 +24,8 @@ failures (``note_head_stall``); once the head has stalled for
 found nothing to free — the engine preempts the victims the scheduler
 selects (``select_victim``: *newest* decode requests first by default,
 so the oldest in-flight work always keeps making progress; or
-fewest-blocks-held behind ``SchedulerConfig.victim_policy``), retrying
+fewest-blocks-held / closest-to-done behind
+``SchedulerConfig.victim_policy``), retrying
 admission after each one until the head fits, and only then requeues
 the victims at the queue front (``preempt_requeue``) so they keep
 FCFS priority over everything still waiting — held back until the
@@ -61,9 +62,11 @@ class SchedulerConfig:
     preempt_after_iters: int = 0
     preempt_limit: int = 2
     # victim policy: "newest" (default — oldest in-flight work keeps
-    # progressing) or "fewest-blocks" (smallest pool footprint first —
+    # progressing), "fewest-blocks" (smallest pool footprint first —
     # table blocks plus open reservation — minimizing discarded work
-    # per preemption; ties break newest-first)
+    # per preemption), or "closest-to-done" (fewest remaining output
+    # tokens first — the victim that would have freed its blocks
+    # soonest anyway loses the least runway); ties break newest-first
     victim_policy: str = "newest"
     # queue-driven look-ahead prefetch: each engine iteration, tier
     # promotions are (re)issued for the first N queued requests —
@@ -156,7 +159,11 @@ class Scheduler:
         in-flight work keeps progressing, which is what guarantees
         liveness. ``fewest-blocks``: the request holding the fewest
         pool blocks (table blocks plus any open reservation's), so
-        each preemption discards the least completed work; ties break
+        each preemption discards the least completed work.
+        ``closest-to-done``: the request with the fewest remaining
+        output tokens — it would have freed its blocks soonest anyway,
+        so preempting it costs the least forward runway (and its
+        re-decode after requeue is the shortest). All ties break
         newest-first. Either way, requests already preempted
         ``preempt_limit`` times are skipped (a pool that fits one
         request would otherwise ping-pong two requests forever)."""
@@ -168,7 +175,15 @@ class Scheduler:
         if self.cfg.victim_policy == "fewest-blocks":
             # min() is stable, and eligible is newest-first
             return min(eligible, key=self._blocks_held)
+        if self.cfg.victim_policy == "closest-to-done":
+            return min(eligible, key=self._tokens_remaining)
         return eligible[0]
+
+    @staticmethod
+    def _tokens_remaining(req: Request) -> int:
+        """Output tokens a decode request still owes (its remaining
+        pool tenure, in steps)."""
+        return req.max_new_tokens - len(req.output_tokens)
 
     @staticmethod
     def _blocks_held(req: Request) -> int:

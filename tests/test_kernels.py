@@ -214,6 +214,40 @@ def test_decode_attention_vs_ref(rng, B, S, H, Hkv, D, window):
                                rtol=3e-5, atol=3e-5)
 
 
+@pytest.mark.parametrize("B,NB,bs,H,Hkv,D,window", [
+    (2, 8, 4, 4, 2, 32, 0), (3, 12, 8, 8, 2, 32, 0), (1, 6, 4, 4, 4, 64, 8),
+])
+def test_paged_decode_attention_vs_ref(rng, B, NB, bs, H, Hkv, D, window):
+    """The block-table-native kernel reads KV straight from the pool
+    arena; it must match the numpy twin (gather-then-dense) on ragged
+    block rows with -1 padding and dead (pos == -1) slots."""
+    from repro.kernels.decode_attention.ops import paged_decode_attention
+    from repro.kernels.decode_attention.ref import (
+        paged_decode_attention_ref,
+    )
+    q = _mk(rng, B, H, D)
+    k_blocks = _mk(rng, NB, bs, Hkv, D)
+    v_blocks = _mk(rng, NB, bs, Hkv, D)
+    kpos = rng.integers(0, 64, (NB, bs)).astype(np.int32)
+    kpos[rng.random((NB, bs)) < 0.2] = -1    # dead pool slots
+    # ragged per-request block rows, -1 padded, possibly overlapping
+    # (shared chunks reference the same physical blocks)
+    NBmax = 4
+    rows = np.full((B, NBmax), -1, np.int32)
+    for b in range(B):
+        n = int(rng.integers(1, NBmax + 1))
+        rows[b, :n] = rng.choice(NB, size=n, replace=False)
+    qpos = jnp.asarray(rng.integers(1, 64, B), jnp.int32)
+    o = paged_decode_attention(q, k_blocks, v_blocks, jnp.asarray(kpos),
+                               jnp.asarray(rows), qpos, window=window,
+                               interpret=True)
+    r = paged_decode_attention_ref(np.asarray(q), np.asarray(k_blocks),
+                                   np.asarray(v_blocks), kpos, rows,
+                                   np.asarray(qpos), window=window)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                               rtol=3e-5, atol=3e-5)
+
+
 # ---------------- ssd --------------------------------------------------------
 @pytest.mark.parametrize("nC,L,H,P,N", [
     (1, 8, 2, 16, 8), (3, 16, 4, 32, 16), (2, 32, 2, 64, 32),

@@ -226,6 +226,156 @@ def test_random_interleavings_preserve_invariants(ops):
     assert pool.live_blocks == 0 and pool.reserved_blocks == 0
 
 
+def _deref(pool, row):
+    """Dereference a pool-flat slot-index row through ``block_view`` —
+    the exact read the paged attention path performs on device."""
+    kf, vf, pf = pool.block_view()
+    kflat = kf.reshape(kf.shape[0], -1, *kf.shape[3:])
+    vflat = vf.reshape(vf.shape[0], -1, *vf.shape[3:])
+    pflat = pf.reshape(-1)
+    safe = np.maximum(row, 0)
+    valid = row >= 0
+    k = np.where(valid[None, :, None, None], kflat[:, safe], 0.0)
+    v = np.where(valid[None, :, None, None], vflat[:, safe], 0.0)
+    pos = np.where(valid, pflat[safe], -1).astype(np.int32)
+    return k, v, pos
+
+
+PAGED_OPS = ["write", "append", "cow", "share_ref", "pin", "free_table",
+             "unpin", "clear_dirty"]
+
+
+@given(st.lists(st.tuples(st.sampled_from(PAGED_OPS), st.integers(0, 5)),
+                max_size=50))
+def test_paged_ops_block_view_and_cow_swap(ops):
+    """Paged-mode pool contract under random op sequences:
+
+    * ``block_view`` is zero-copy — the returned arrays ARE the arenas,
+      so every host write is immediately visible through a view taken
+      at any earlier time;
+    * ``table_slot_index`` dereferenced through the view reproduces
+      ``gather(compact=True)`` bit-for-bit (the bit-identity seam);
+    * the CoW swap invariant: a write over a shared block swaps the
+      WRITER's index entry to a clone — a slot-index row exported by
+      another reader before the write still dereferences to the exact
+      pre-write bytes;
+    * ``ensure_append_slot`` pre-opens exactly the slot the next
+      ``append_token`` fills, without advancing ``table.length``, and
+      marks every mutated block dirty for the device twin.
+    """
+    pool = _pool()
+    kv0, vv0, pv0 = pool.block_view()      # early view: must stay live
+    tables = []         # (table, exp_k, exp_v, exp_pos)
+    runs = []
+    counter = 0
+    for op, n in ops:
+        if op == "write":
+            S = n % 7 + 1
+            toks = [_tok(counter + i) for i in range(S)]
+            counter += S
+            k = np.stack(toks, axis=1)
+            table = BlockTable()
+            if pool.write_prefill(table, k, k + 0.5,
+                                  np.arange(S, dtype=np.int32)):
+                tables.append((table, None, toks,
+                               [t + 0.5 for t in toks],
+                               list(range(S))))
+        elif op == "append" and tables:
+            table, _r, exp_k, exp_v, exp_pos = tables[n % len(tables)]
+            length_before = table.length
+            slot = pool.ensure_append_slot(table)
+            assert table.length == length_before, \
+                "ensure_append_slot must not advance length"
+            if slot is not None:
+                b, off = divmod(slot, pool.block_size)
+                assert table.blocks[length_before // pool.block_size] == b
+                assert off == length_before % pool.block_size
+                assert pool.refs[b] == 1, "pre-opened block must be private"
+                tok = _tok(counter)
+                counter += 1
+                pos = exp_pos[-1] + 1 if exp_pos else 0
+                assert pool.append_token(table, tok, tok + 0.5, pos), \
+                    "append after ensure_append_slot cannot fail"
+                # the token landed in the pre-opened slot, visible
+                # through the EARLY view (zero-copy aliasing)
+                np.testing.assert_array_equal(
+                    kv0[:, b, off], tok)
+                np.testing.assert_array_equal(
+                    vv0[:, b, off], tok + 0.5)
+                assert pv0[b, off] == pos
+                exp_k.append(tok)
+                exp_v.append(tok + 0.5)
+                exp_pos.append(pos)
+        elif op == "cow" and tables:
+            table, _r, exp_k, exp_v, exp_pos = tables[n % len(tables)]
+            if not table.length:
+                continue
+            # another reader exports its rows BEFORE the write; the
+            # CoW swap invariant says those rows still dereference to
+            # the same bytes afterwards
+            snapshots = []
+            for other, _r2, ok, ov, opos in tables:
+                if other is table:
+                    continue
+                pad = max(len(ok), 1)
+                row = pool.table_slot_index(other, pad)
+                snapshots.append((row, _deref(pool, row)))
+            slot = n % table.length
+            tok = _tok(counter)
+            counter += 1
+            pos = max(exp_pos) + 1 if exp_pos else 0
+            if pool.write_rows(table, np.asarray([slot]),
+                               tok[:, None], tok[:, None] + 0.5,
+                               np.asarray([pos], np.int32)):
+                exp_k[slot] = tok
+                exp_v[slot] = tok + 0.5
+                exp_pos[slot] = pos
+                for row, (sk, sv, spos) in snapshots:
+                    nk, nv, npos_ = _deref(pool, row)
+                    np.testing.assert_array_equal(nk, sk)
+                    np.testing.assert_array_equal(nv, sv)
+                    np.testing.assert_array_equal(npos_, spos)
+        elif op == "share_ref" and runs:
+            run = runs[n % len(runs)]
+            table = BlockTable()
+            pool.append_shared(table, run["blocks"])
+            tables.append((table, None, list(run["exp_k"]),
+                           list(run["exp_v"]), list(run["exp_pos"])))
+        elif op == "pin":
+            run, used = _pin_run(pool, counter, n % 7 + 1)
+            counter += used
+            if run is not None:
+                runs.append(run)
+        elif op == "free_table" and tables:
+            table, _r, _k, _v, _pos = tables.pop(n % len(tables))
+            pool.free_table(table)
+        elif op == "unpin" and runs:
+            run = runs.pop(n % len(runs))
+            pool.release(run["blocks"])
+        elif op == "clear_dirty":
+            pool.clear_dirty(pool.dirty_blocks())
+            assert pool.dirty_blocks() == []
+        # the view is the arena: identity, not a copy
+        kv, vv, pv = pool.block_view()
+        assert kv is kv0 and vv is vv0 and pv is pv0
+        # slot-index deref == gather(compact=True), element for element
+        for table, _r, exp_k, _exp_v, _exp_pos in tables:
+            pad = max(len(exp_k), 1)
+            row = pool.table_slot_index(table, pad)
+            dk, dv, dpos = _deref(pool, row)
+            gk, gv, gpos = pool.gather(table, pad, compact=True)
+            np.testing.assert_array_equal(dk, gk)
+            np.testing.assert_array_equal(dv, gv)
+            np.testing.assert_array_equal(dpos, gpos)
+        _check_invariants(pool, [], tables, runs)
+
+    for table, _r, _k, _v, _pos in tables:
+        pool.free_table(table)
+    for run in runs:
+        pool.release(run["blocks"])
+    assert pool.free_blocks == pool.num_blocks
+
+
 @given(st.lists(st.integers(0, 4), min_size=0, max_size=8))
 def test_cow_append_preserves_shared_content(ns):
     """Appending into a block shared with another table must CoW: the

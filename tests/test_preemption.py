@@ -261,6 +261,35 @@ def test_scheduler_victim_selection_fewest_blocks_policy():
     assert sched.select_victim([]) is None
 
 
+def test_scheduler_victim_selection_closest_to_done_policy():
+    sched = Scheduler(SchedulerConfig(preempt_after_iters=1,
+                                      preempt_limit=2,
+                                      victim_policy="closest-to-done"))
+    a, b, c = _req(1, max_new=10), _req(2, max_new=10), _req(3, max_new=10)
+    a.output_tokens = [0] * 3              # 7 remaining
+    b.output_tokens = [0] * 8              # 2 remaining — closest to done
+    c.output_tokens = [0] * 5              # 5 remaining
+    decoding = [a, b, c]                   # admission order: c newest
+    assert sched.select_victim(decoding) is b
+    # remaining work counts, not produced tokens: a long request that
+    # has emitted many tokens but has many left is NOT closest to done
+    d = _req(4, max_new=50)
+    d.output_tokens = [0] * 40             # 10 remaining
+    decoding = [a, b, c, d]
+    assert sched.select_victim(decoding) is b
+    # ties break newest-first (liveness parity with the other policies)
+    c.output_tokens = [0] * 8              # also 2 remaining, newer than b
+    assert sched.select_victim(decoding) is c
+    # preempt_limit still guards eligibility
+    sched.preemptions[c.rid] = 2
+    assert sched.select_victim(decoding) is b
+    sched.preemptions[b.rid] = 2
+    assert sched.select_victim(decoding) is a
+    sched.preemptions[a.rid] = sched.preemptions[d.rid] = 2
+    assert sched.select_victim(decoding) is None
+    assert sched.select_victim([]) is None
+
+
 def test_preempt_requeue_is_front_and_not_a_retry():
     sched = Scheduler(SchedulerConfig(retry_limit=1))
     victim, waiting = _req(1), _req(2)

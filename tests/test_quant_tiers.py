@@ -17,8 +17,9 @@ import numpy as np
 import pytest
 
 from repro.core.eviction import LRUPolicy
-from repro.core.tiers import (FP8_BLOCK, QUANT_MIN_ELEMS, LoadInfo,
-                              QuantizedTree, TieredStore, dequantize_tree,
+from repro.core.tiers import (_CODECS, FP8_BLOCK, QUANT_MIN_ELEMS,
+                              LoadInfo, QuantizedTree, TieredStore,
+                              dequantize_tree, int8_head_error_bounds,
                               merge_load_infos, quant_error_bound,
                               quantize_tree, stored_nbytes, tree_nbytes)
 
@@ -101,6 +102,136 @@ def test_stored_nbytes_tracks_representation():
     assert stored_nbytes(q) == q.nbytes \
         == sum(p.nbytes for p in q.leaves) \
         + sum(s.nbytes for s in q.scales if s is not None)
+
+
+def test_int8_per_head_scales_beat_per_tensor():
+    """Per-head scale granularity: with one outlier head, every other
+    head keeps its own (much smaller) scale, so its reconstruction
+    error is bounded by ITS max — not the tensor-wide outlier. The
+    tensor-wide bound would be ~20x looser here."""
+    rng = np.random.default_rng(8)
+    T, H, D = 64, 4, 16
+    x = rng.standard_normal((2, T, H, D)).astype(np.float32)
+    x[..., 0, :] *= 20.0                           # outlier head 0
+    q = quantize_tree({"kv": x}, "int8")
+    # one fp32 scale per head on the >=3-d KV leaf
+    assert q.scales[0].shape == (H,)
+    out = dequantize_tree(q)["kv"]
+    err = np.abs(out - x)
+    head_err = err.max(axis=tuple(i for i in range(x.ndim)
+                                  if i != x.ndim - 2))
+    bounds = int8_head_error_bounds(x)
+    assert (head_err <= bounds).all()
+    # the quiet heads beat the per-tensor bound by a wide margin —
+    # the whole point of per-head granularity
+    per_tensor = quant_error_bound(x, "int8")
+    assert head_err[1:].max() < per_tensor / 4
+    assert bounds[1:].max() < per_tensor / 4
+    # the per-tensor bound still upper-bounds everything (back-compat
+    # for call sites that only know the old bound)
+    assert (head_err <= per_tensor).all()
+
+
+def test_int8_legacy_scalar_scale_files_still_decode(tmp_path):
+    """An SSD entry written by the old per-tensor codec carries scalar
+    s{i} members; the decoder must take the legacy path bit-for-bit."""
+    rng = np.random.default_rng(9)
+    x = rng.standard_normal((2, 24, 2, 4)).astype(np.float32)
+    scale = np.float32(np.abs(x).max() / 127.0 + 1e-12)
+    payload = np.clip(np.rint(x / scale), -127, 127).astype(np.int8)
+    legacy = {"a0": payload, "s0": np.asarray([scale], np.float32),
+              "__struct__": np.frombuffer(
+                  json.dumps({"kv": None}).encode(), np.uint8),
+              "__nbytes__": np.int64(payload.nbytes + scale.nbytes),
+              "__scheme__": np.frombuffer(b"int8", np.uint8)}
+    np.savez(os.path.join(str(tmp_path), "old.npz"), **legacy)
+    ts = TieredStore(1 << 20, 1 << 20, str(tmp_path), start_worker=False)
+    out, _ = ts.get("old", promote=False)
+    np.testing.assert_array_equal(out["kv"],
+                                  payload.astype(np.float32) * scale)
+
+
+# ---- SSD entropy coding (tier_compress) ------------------------------------
+
+def test_tier_compress_validation(tmp_path):
+    with pytest.raises(ValueError):
+        TieredStore(1, 1, str(tmp_path / "a"), start_worker=False,
+                    tier_compress={"cpu": "zlib"})   # only ssd compresses
+    with pytest.raises(ValueError):
+        TieredStore(1, 1, str(tmp_path / "b"), start_worker=False,
+                    tier_compress={"ssd": "lz4"})    # unknown codec
+
+
+def test_ssd_compress_round_trip_and_compressed_ledger(tmp_path):
+    """``tier_compress={"ssd": "zstd"}``: values round-trip bit-exactly
+    and the ledger counts the COMPRESSED on-disk bytes. When zstandard
+    is absent the store degrades to zlib and says so in its stats."""
+    tree = {"k": np.zeros((2, 64, 2, 4), np.float32),   # compresses well
+            "v": np.tile(np.arange(4, dtype=np.float32), (2, 64, 2, 1))}
+    raw = tree_nbytes(tree)
+    ts = TieredStore(1 << 20, 1 << 20, str(tmp_path), start_worker=False,
+                     tier_compress={"ssd": "zstd"})
+    if "zstd" not in _CODECS:
+        assert ts.ssd_codec == "zlib"                  # clean degrade
+        assert ts.stats["ssd_codec_fallbacks"] == 1
+    else:
+        assert ts.ssd_codec == "zstd"
+    ts.put("a", tree, prefer="ssd")
+    suffix = _CODECS[ts.ssd_codec][0]
+    path = os.path.join(str(tmp_path), "a.npz" + suffix)
+    assert os.path.exists(path)
+    assert ts.sizes["a"] == os.path.getsize(path) < raw
+    assert ts.used["ssd"] == ts.sizes["a"]
+    assert ts.stats["ssd_compress_saved"] > 0
+    out, info = ts.get("a", promote=False)
+    np.testing.assert_array_equal(out["k"], tree["k"])
+    np.testing.assert_array_equal(out["v"], tree["v"])
+    assert info.nbytes == ts.sizes["a"]                # stored bytes moved
+    # composes with quantized tiers: int8 payload under the codec
+    ts2 = TieredStore(1 << 20, 1 << 20, str(tmp_path / "q"),
+                      start_worker=False,
+                      tier_dtypes={"ssd": "int8"},
+                      tier_compress={"ssd": "zlib"})
+    big = {"kv": np.random.default_rng(0).standard_normal(
+        (2, 64, 2, 4)).astype(np.float32)}
+    ts2.put("b", big, prefer="ssd")
+    got, _ = ts2.get("b", promote=False)
+    err = float(np.abs(got["kv"] - big["kv"]).max())
+    assert err <= quant_error_bound(big["kv"], "int8")
+
+
+def test_ssd_compressed_files_survive_restart_and_legacy_load(tmp_path):
+    """Restart scan registers compressed entries (on-disk size); plain
+    legacy ``.npz`` written by an uncompressed store still loads under
+    a compressing store, and a rewrite replaces it with the compressed
+    form (no stale twin). ``delete`` removes every variant."""
+    tree = _kv(10)
+    plain = TieredStore(1 << 20, 1 << 20, str(tmp_path),
+                        start_worker=False)
+    plain.put("leg", tree, prefer="ssd")
+    ts = TieredStore(1 << 20, 1 << 20, str(tmp_path), start_worker=False,
+                     tier_compress={"ssd": "zlib"})
+    ts.put("c", tree, prefer="ssd")
+
+    ts2 = TieredStore(1 << 20, 1 << 20, str(tmp_path), start_worker=False,
+                      tier_compress={"ssd": "zlib"})
+    assert ts2.where("c") == "ssd" and ts2.where("leg") == "ssd"
+    assert ts2.sizes["c"] == os.path.getsize(
+        os.path.join(str(tmp_path), "c.npz.dfl"))
+    for key in ("c", "leg"):
+        out, _ = ts2.get(key, promote=False)
+        np.testing.assert_array_equal(out["k"], tree["k"])
+        np.testing.assert_array_equal(out["v"], tree["v"])
+    _conserved(ts2)
+
+    ts2.put("leg", tree, prefer="ssd")                 # rewrite compressed
+    names = sorted(f for f in os.listdir(str(tmp_path))
+                   if f.startswith("leg"))
+    assert names == ["leg.npz.dfl"]
+    ts2.delete("c")
+    assert not [f for f in os.listdir(str(tmp_path))
+                if f.startswith("c.")]
+    _conserved(ts2)
 
 
 # ---- tiered store: ledger + round trips ------------------------------------
